@@ -1,0 +1,43 @@
+"""TPU adaptation benchmark (DESIGN.md §3): how reordering changes the
+Block-ELL/BCSR format quality — block fill ratio, padded-FLOP overhead, and
+distinct x-tiles per row panel. These are the quantities that become MXU
+utilization and HBM traffic in the Pallas kernels (structural, no timing)."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.reorder import api as reorder_api
+from repro.core.sparse import bell, metrics, partition
+from repro.matrices import suite
+
+from . import common
+from .common import RESULTS_DIR, write_csv
+
+BM, BN = 8, 128
+
+
+def run(quick: bool = False):
+    mats = suite.bench_names()[:6] if quick else suite.bench_names()[:16]
+    rows, out = [], {}
+    agg = {s: [] for s in common.SCHEMES}
+    for name in mats:
+        mat = suite.get(name)
+        for scheme in common.SCHEMES:
+            perm = reorder_api.reorder(mat, scheme)
+            rmat = mat.permute(perm) if scheme != "baseline" else mat
+            fill = metrics.block_fill_ratio(rmat, BM, BN)
+            nblocks = metrics.num_nonempty_blocks(rmat, BM, BN)
+            # padded-FLOP overhead of the BCSR kernel vs nnz flops
+            overhead = nblocks * BM * BN / max(rmat.nnz, 1)
+            panels = partition.static_partition(rmat, 8)
+            xtiles = metrics.distinct_col_blocks(rmat, panels, BN).mean()
+            rows.append([name, scheme, round(fill, 5), nblocks,
+                         round(overhead, 2), round(float(xtiles), 1)])
+            agg[scheme].append(overhead)
+    for s, v in agg.items():
+        out[f"{s}_geomean_flop_overhead"] = round(
+            float(np.exp(np.mean(np.log(np.maximum(v, 1e-9))))), 2)
+    write_csv(f"{RESULTS_DIR}/bell_formats.csv",
+              ["matrix", "scheme", "fill_ratio", "nblocks",
+               "flop_overhead", "mean_xtiles_per_panel"], rows)
+    return out

@@ -1,0 +1,167 @@
+"""Shared measurement campaign for the paper-reproduction benchmarks.
+
+One campaign = the full measurement grid over (machine profile, matrix,
+scheme): sequential IOS/YAX, instrumented-CG, and modelled-parallel
+static/nnz-balanced timings + structural metrics. Figures (fig*.py) are
+pure views over the campaign JSON, so the grid is measured once and cached
+under benchmarks/results/.
+
+Machine profiles (DESIGN.md §7 — configs standing in for the paper's four
+hosts; consistency claims are about *existence* of inconsistency):
+    M1 csr-f32-p8   — primary
+    M2 csr-f64-p8   — 2x bandwidth pressure (bigger values+x)
+    M3 csr-f32-p4   — fewer cores
+    M4 csr-f32-p16  — more cores
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+import os
+import time
+from typing import Dict, Iterable
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.measure import cg, ios, parallel_model
+from repro.core.reorder import api as reorder_api
+from repro.core.sparse import metrics, partition
+from repro.core.spmv.ops import build_operator
+from repro.matrices import suite
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "results")
+
+MACHINE_PROFILES = {
+    "M1_csr_f32_p8": dict(engine="csr", dtype="float32", p=8),
+    "M2_csr_f64_p8": dict(engine="csr", dtype="float64", p=8),
+    "M3_csr_f32_p4": dict(engine="csr", dtype="float32", p=4),
+    "M4_csr_f32_p16": dict(engine="csr", dtype="float32", p=16),
+}
+PRIMARY = "M1_csr_f32_p8"
+# paper schemes + the random-permutation control (Fig. 1's shuffle)
+SCHEMES = ["baseline"] + reorder_api.PAPER_SCHEMES + ["random"]
+
+QUICK_MATRICES = [
+    "banded_m16384_bw8", "banded_shuf_m16384_bw8", "stencil2d_shuf_128",
+    "rmat_s14_e8", "sbm_m16384_k16", "smallworld_m16384_k6",
+    "uniform_m16384_d8", "kron_b11_p4",
+]
+# fig8 consistency subset (all four profiles measured on these)
+CONSISTENCY_MATRICES = QUICK_MATRICES + [
+    "banded_shuf_m32768_bw63", "stencil3d_shuf_24", "sbm_m32768_k32",
+    "rmat_s15_e8", "uniform_m32768_d12", "stencil2d_181",
+]
+
+
+def _key(profile: str, matrix: str, scheme: str) -> str:
+    return f"{profile}|{matrix}|{scheme}"
+
+
+def _cache_path(tag: str) -> str:
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    return os.path.join(RESULTS_DIR, f"campaign_{tag}.json")
+
+
+def measure_cell(mat, scheme: str, profile: dict, iters: int = 12,
+                 with_cg: bool = True) -> dict:
+    """All measurements for one (matrix, scheme, machine profile) cell."""
+    dtype = jnp.float32 if profile["dtype"] == "float32" else jnp.float64
+    perm = reorder_api.reorder(mat, scheme)
+    rmat_ = mat.permute(perm) if scheme != "baseline" else mat
+    nnz = rmat_.nnz
+    op = build_operator(rmat_, profile["engine"], dtype=dtype)
+    rng = np.random.default_rng(0)
+    x0 = jnp.asarray(rng.standard_normal(rmat_.n), dtype)
+
+    seq_ios = float(np.median(ios.run_ios(op, x0, iters=iters)))
+    seq_yax = float(np.median(ios.run_yax(op, x0, iters=iters)))
+    rec = {
+        "nnz": nnz,
+        "seq_ios_ms": seq_ios,
+        "seq_yax_ms": seq_yax,
+        "seq_ios_gflops": float(ios.gflops(nnz, np.array([seq_ios]))[0]),
+        "seq_yax_gflops": float(ios.gflops(nnz, np.array([seq_yax]))[0]),
+    }
+    if with_cg:
+        cg_ms = float(np.median(cg.cg_measured(op, x0, iters=iters)))
+        rec["cg_ms"] = cg_ms
+        rec["cg_gflops"] = float(ios.gflops(nnz, np.array([cg_ms]))[0])
+    p = profile["p"]
+    for sched in ("static", "nnz_balanced"):
+        ms = parallel_model.modelled_parallel_ms(
+            rmat_, p, profile["engine"], schedule=sched, iters=max(6, iters // 2))
+        rec[f"par_{sched}_ms"] = ms
+        rec[f"par_{sched}_gflops"] = float(ios.gflops(nnz, np.array([ms]))[0])
+    # structural metrics (analytic, exact)
+    panels_s = partition.static_partition(rmat_, p)
+    panels_b = partition.nnz_balanced_partition(rmat_, p)
+    rec["li_static"] = metrics.load_imbalance(rmat_, panels_s)
+    rec["li_nnz_balanced"] = metrics.load_imbalance(rmat_, panels_b)
+    rec["bandwidth"] = metrics.bandwidth(rmat_)
+    rec["avg_row_bandwidth"] = metrics.avg_row_bandwidth(rmat_)
+    rec["cut_volume"] = metrics.cut_volume(rmat_, panels_s)
+    rec["block_fill_8x128"] = metrics.block_fill_ratio(rmat_, 8, 128)
+    return rec
+
+
+def run_campaign(matrices: Iterable[str] | None = None,
+                 schemes: Iterable[str] = tuple(SCHEMES),
+                 profiles: Iterable[str] = (PRIMARY,),
+                 iters: int = 12, tag: str = "default",
+                 verbose: bool = True) -> Dict[str, dict]:
+    """Measure (and cache) the grid. Returns records dict."""
+    matrices = list(matrices if matrices is not None else suite.bench_names())
+    path = _cache_path(tag)
+    records: Dict[str, dict] = {}
+    if os.path.exists(path):
+        with open(path) as f:
+            records = json.load(f)
+    dirty = False
+    for prof_name in profiles:
+        prof = MACHINE_PROFILES[prof_name]
+        for mname in matrices:
+            mat = None
+            for scheme in schemes:
+                k = _key(prof_name, mname, scheme)
+                if k in records:
+                    continue
+                if mat is None:
+                    mat = suite.get(mname)
+                t0 = time.time()
+                rec = measure_cell(mat, scheme, prof, iters=iters,
+                                   with_cg=(prof_name == PRIMARY))
+                rec["profile"] = prof_name
+                rec["matrix"] = mname
+                rec["scheme"] = scheme
+                records[k] = rec
+                dirty = True
+                if verbose:
+                    print(f"[campaign] {k}: ios={rec['seq_ios_gflops']:.2f} "
+                          f"gflops ({time.time() - t0:.1f}s)", flush=True)
+            if dirty:
+                with open(path, "w") as f:
+                    json.dump(records, f)
+                dirty = False
+    return records
+
+
+def grid(records: Dict[str, dict], profile: str, matrices: list[str],
+         schemes: list[str], field: str) -> np.ndarray:
+    """[scheme, matrix] array of `field`."""
+    out = np.full((len(schemes), len(matrices)), np.nan)
+    for i, s in enumerate(schemes):
+        for j, m in enumerate(matrices):
+            rec = records.get(_key(profile, m, s))
+            if rec is not None and field in rec:
+                out[i, j] = rec[field]
+    return out
+
+
+def write_csv(path: str, header: list[str], rows: list[list]) -> None:
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    with open(path, "w") as f:
+        f.write(",".join(header) + "\n")
+        for r in rows:
+            f.write(",".join(str(v) for v in r) + "\n")

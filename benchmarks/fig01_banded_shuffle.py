@@ -1,0 +1,35 @@
+"""Paper Fig. 1: banded (1M x 1M, half-bw 15) vs randomly shuffled twin.
+
+The paper reports 108 vs 32 GFLOPs on a 64-core machine; here the same
+structural contrast is measured sequentially on the XLA-CPU backend (one
+physical core, DESIGN.md §7) — the claim under reproduction is the RATIO.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.measure import ios
+from repro.core.spmv.ops import build_operator
+from repro.matrices import suite
+
+from .common import RESULTS_DIR, write_csv
+
+
+def run(quick: bool = False):
+    iters = 6 if quick else 12
+    rows = []
+    for name in ("fig1_banded", "fig1_shuffled"):
+        mat = suite.get(name)
+        op = build_operator(mat, "csr")
+        x = jnp.asarray(np.random.default_rng(0).standard_normal(mat.n),
+                        jnp.float32)
+        ms = float(np.median(ios.run_ios(op, x, iters=iters)))
+        gf = float(ios.gflops(mat.nnz, np.array([ms]))[0])
+        rows.append([name, mat.m, mat.nnz, round(ms, 3), round(gf, 4)])
+    ratio = rows[0][4] / rows[1][4]
+    rows.append(["ratio_banded_over_shuffled", "", "", "", round(ratio, 3)])
+    write_csv(f"{RESULTS_DIR}/fig01_banded_shuffle.csv",
+              ["matrix", "m", "nnz", "ios_ms", "gflops"], rows)
+    return {"banded_gflops": rows[0][4], "shuffled_gflops": rows[1][4],
+            "ratio": ratio}

@@ -1,0 +1,38 @@
+"""Paper Fig. 3: CDF of measured-GFLOPs ratio (X / Real-CG) for X in
+{YAX, IOS}. Claim: YAX systematically overpredicts the CG-embedded SpMV
+performance; IOS tracks it."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.measure import profiles
+from repro.matrices import suite
+
+from . import common
+from .common import RESULTS_DIR, grid, write_csv
+
+
+def run(quick: bool = False):
+    mats = suite.locality_names()
+    records = common.run_campaign(matrices=mats, schemes=common.SCHEMES,
+                                  profiles=(common.PRIMARY,), tag="locality")
+    schemes = common.SCHEMES
+    ios_g = grid(records, common.PRIMARY, mats, schemes, "seq_ios_gflops")
+    yax_g = grid(records, common.PRIMARY, mats, schemes, "seq_yax_gflops")
+    cg_g = grid(records, common.PRIMARY, mats, schemes, "cg_gflops")
+    mask = np.isfinite(ios_g) & np.isfinite(cg_g) & np.isfinite(yax_g)
+    r_ios = (ios_g / cg_g)[mask].ravel()
+    r_yax = (yax_g / cg_g)[mask].ravel()
+    rows = []
+    for name, r in [("IOS", r_ios), ("YAX", r_yax)]:
+        v, c = profiles.cdf(r)
+        for vi, ci in zip(v, c):
+            rows.append([name, round(float(vi), 4), round(float(ci), 4)])
+    write_csv(f"{RESULTS_DIR}/fig03_ios_yax_cdf.csv",
+              ["method", "ratio_to_cg", "cdf"], rows)
+    return {
+        "yax_median_ratio": float(np.median(r_yax)),
+        "ios_median_ratio": float(np.median(r_ios)),
+        "yax_overpredicts": float(np.mean(r_yax > 1.05)),
+        "ios_overpredicts": float(np.mean(r_ios > 1.05)),
+    }

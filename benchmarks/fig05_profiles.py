@@ -1,0 +1,36 @@
+"""Paper Fig. 5: Dolan-More performance profiles of the reordering schemes,
+sequential (measured) and parallel (modelled) — IOS methodology."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.measure import profiles
+from repro.matrices import suite
+
+from . import common
+from .common import RESULTS_DIR, grid, write_csv
+
+TAUS = np.array([1.0, 1.05, 1.1, 1.25, 1.5, 2.0, 3.0])
+
+
+def run(quick: bool = False):
+    mats = suite.locality_names()
+    records = common.run_campaign(matrices=mats, schemes=common.SCHEMES,
+                                  profiles=(common.PRIMARY,), tag="locality")
+    schemes = common.SCHEMES
+    out = {}
+    rows = []
+    for mode, field in [("sequential", "seq_ios_gflops"),
+                        ("parallel_modelled", "par_static_gflops")]:
+        perf = grid(records, common.PRIMARY, mats, schemes, field)
+        ok = np.isfinite(perf).all(axis=0)
+        prof = profiles.performance_profile(perf[:, ok], TAUS)
+        for i, s in enumerate(schemes):
+            for t, v in zip(TAUS, prof[i]):
+                rows.append([mode, s, float(t), round(float(v), 4)])
+        # winner at tau=1 (fraction of matrices where scheme is the best)
+        out[f"{mode}_tau1"] = {s: round(float(prof[i, 0]), 3)
+                               for i, s in enumerate(schemes)}
+    write_csv(f"{RESULTS_DIR}/fig05_profiles.csv",
+              ["mode", "scheme", "tau", "fraction"], rows)
+    return out

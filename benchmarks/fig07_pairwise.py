@@ -1,0 +1,34 @@
+"""Paper Fig. 7: pairwise win-rate matrix across schemes (IOS GFLOPs).
+Claim: RCM beats every other scheme on most matrices."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.measure import profiles
+from repro.matrices import suite
+
+from . import common
+from .common import RESULTS_DIR, grid, write_csv
+
+
+def run(quick: bool = False):
+    mats = suite.locality_names()
+    records = common.run_campaign(matrices=mats, schemes=common.SCHEMES,
+                                  profiles=(common.PRIMARY,), tag="locality")
+    schemes = common.SCHEMES
+    out, rows = {}, []
+    for mode, field in [("sequential", "seq_ios_gflops"),
+                        ("parallel_modelled", "par_static_gflops")]:
+        perf = grid(records, common.PRIMARY, mats, schemes, field)
+        win = profiles.pairwise_win_rates(perf)
+        for i, si in enumerate(schemes):
+            for j, sj in enumerate(schemes):
+                rows.append([mode, si, sj, round(float(win[i, j]), 3)])
+        r = schemes.index("rcm")
+        out[f"{mode}_rcm_beats_all"] = bool(
+            all(win[r, j] >= 0.5 for j in range(len(schemes)) if j != r))
+        out[f"{mode}_rcm_vs_metis"] = round(
+            float(win[r, schemes.index("metis")]), 3)
+    write_csv(f"{RESULTS_DIR}/fig07_pairwise.csv",
+              ["mode", "row_scheme", "col_scheme", "win_rate"], rows)
+    return out

@@ -1,0 +1,52 @@
+"""Paper Figs. 9 & 10: nnz load imbalance of the static schedule under each
+reordering, absolute (Fig. 9, 64 panels) and relative to baseline (Fig. 10).
+These are exact analytic quantities (no timing)."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.reorder import api as reorder_api
+from repro.core.sparse import metrics, partition
+from repro.matrices import suite
+
+from . import common
+from .common import RESULTS_DIR, write_csv
+
+P64 = 64
+
+
+def run(quick: bool = False):
+    # locality tier + a representative bench-tier slice (full 33-matrix
+    # sweep is reorder-bound; LI is analytic so the subset is unbiased)
+    mats = (suite.bench_names()[:8] if quick
+            else suite.bench_names()[:12] + suite.locality_names())
+    schemes = common.SCHEMES
+    rows = []
+    li_all = {s: [] for s in schemes}
+    for name in mats:
+        mat = suite.get(name)
+        for scheme in schemes:
+            perm = reorder_api.reorder(mat, scheme)
+            rmat = mat.permute(perm) if scheme != "baseline" else mat
+            li = metrics.load_imbalance(
+                rmat, partition.static_partition(rmat, P64))
+            rows.append([name, scheme, round(li, 4)])
+            li_all[scheme].append(li)
+    write_csv(f"{RESULTS_DIR}/fig09_load_imbalance.csv",
+              ["matrix", "scheme", "li_static_64"], rows)
+
+    base = np.array(li_all["baseline"])
+    out = {}
+    rel_rows = []
+    for s in schemes:
+        if s == "baseline":
+            continue
+        rel = np.array(li_all[s]) / base     # <1 = improved balance
+        out[f"{s}_improved_frac"] = round(float((rel < 0.999).mean()), 3)
+        out[f"{s}_geomean_rel_li"] = round(
+            float(np.exp(np.mean(np.log(rel)))), 3)
+        for name, r in zip(mats, rel):
+            rel_rows.append([name, s, round(float(r), 4)])
+    write_csv(f"{RESULTS_DIR}/fig10_relative_li.csv",
+              ["matrix", "scheme", "li_over_baseline"], rel_rows)
+    return out

@@ -1,0 +1,89 @@
+"""Roofline table (spec deliverable g) from the dry-run records.
+
+Per (arch x shape x mesh):
+  compute term    = HLO_FLOPs / peak_FLOP/s            (per-chip values)
+  memory term     = HLO_bytes / HBM_bw
+  collective term = collective_bytes / ICI link bw
+  dominant bottleneck, MODEL_FLOPS = 6*N(_active)*D, useful ratio.
+
+HLO_FLOPs/bytes come from the scan-aware walker (launch/hlo_cost) — XLA's
+cost_analysis counts while bodies once. Values are per device, so no /chips.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+import numpy as np
+
+from repro.configs.base import SHAPES
+from repro.launch.mesh import HardwareSpec
+
+from .common import RESULTS_DIR, write_csv
+
+DRYRUN_DIR = os.path.join(RESULTS_DIR, "dryrun")
+
+
+def model_flops_per_device(rec) -> float:
+    """6 * N(_active) * tokens / chips (train includes backward: the 6x;
+    decode/prefill use 2*N*D forward-only)."""
+    shape = SHAPES[rec["shape"]]
+    chips = 512 if rec["mesh"] == "2x16x16" else 256
+    n = rec.get("active_params") or rec.get("params")
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        total = 6.0 * n * tokens
+        # our train step microbatches but still one optimizer update
+    elif shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        total = 2.0 * n * tokens
+    else:  # decode: one token per sequence
+        total = 2.0 * n * shape.global_batch
+    return total / chips
+
+
+def load_records():
+    recs = []
+    for path in sorted(glob.glob(os.path.join(DRYRUN_DIR, "*.json"))):
+        with open(path) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def run(quick: bool = False):
+    hw = HardwareSpec
+    rows = []
+    summary = {"cells_ok": 0, "cells_err": 0}
+    for rec in load_records():
+        if rec.get("status") != "ok":
+            summary["cells_err"] += 1
+            rows.append([rec["arch"], rec["shape"], rec["mesh"], "ERROR",
+                         "", "", "", "", "", "", rec.get("error", "")[:80]])
+            continue
+        summary["cells_ok"] += 1
+        flops = rec.get("walk_flops", 0.0)
+        bytes_ = rec.get("walk_bytes", 0.0)
+        coll = rec.get("collectives", {})
+        wire = coll.get("wire", coll.get("total", 0))
+        t_compute = flops / hw["peak_flops_bf16"]
+        t_memory = bytes_ / hw["hbm_bw"]
+        t_coll = wire / hw["ici_bw"]
+        terms = {"compute": t_compute, "memory": t_memory,
+                 "collective": t_coll}
+        dominant = max(terms, key=terms.get)
+        step_time = max(terms.values())
+        mf = model_flops_per_device(rec)
+        useful = mf / max(flops, 1.0)
+        # roofline fraction: useful model flops per second vs peak
+        mfu_bound = mf / max(step_time, 1e-12) / hw["peak_flops_bf16"]
+        rows.append([
+            rec["arch"], rec["shape"], rec["mesh"], "ok",
+            f"{t_compute:.4e}", f"{t_memory:.4e}", f"{t_coll:.4e}",
+            dominant, f"{useful:.3f}", f"{mfu_bound:.3f}", "",
+        ])
+    write_csv(os.path.join(RESULTS_DIR, "roofline.csv"),
+              ["arch", "shape", "mesh", "status", "compute_s", "memory_s",
+               "collective_s", "dominant", "model_over_hlo_flops",
+               "roofline_fraction", "note"], rows)
+    return summary

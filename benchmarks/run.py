@@ -1,0 +1,61 @@
+"""Benchmark orchestrator — one module per paper table/figure.
+
+  PYTHONPATH=src python -m benchmarks.run [--quick] [--only figXX,...]
+
+Prints one `name,us_per_call,derived` CSV line per benchmark (us_per_call =
+module wall time; `derived` = the module's headline findings)."""
+from __future__ import annotations
+
+import argparse
+import importlib
+import json
+import time
+import traceback
+
+MODULES = [
+    "fig01_banded_shuffle",
+    "fig03_ios_yax",
+    "fig04_scheduling",
+    "fig05_profiles",
+    "fig06_speedup_stacks",
+    "fig07_pairwise",
+    "fig08_consistency",
+    "fig09_10_load_imbalance",
+    "fig11_nnz_balanced",
+    "table1_rcm_vs_metis",
+    "bell_formats",
+    "moe_dispatch",
+    "roofline",
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--only", default="")
+    args = ap.parse_args()
+    only = set(args.only.split(",")) if args.only else None
+
+    print("name,us_per_call,derived")
+    failures = 0
+    for name in MODULES:
+        if only and name not in only:
+            continue
+        t0 = time.time()
+        try:
+            mod = importlib.import_module(f"benchmarks.{name}")
+            derived = mod.run(quick=args.quick)
+            us = (time.time() - t0) * 1e6
+            print(f"{name},{us:.0f},\"{json.dumps(derived, default=str)}\"",
+                  flush=True)
+        except Exception as e:
+            failures += 1
+            us = (time.time() - t0) * 1e6
+            print(f"{name},{us:.0f},\"ERROR: {type(e).__name__}: {e}\"",
+                  flush=True)
+            traceback.print_exc()
+    raise SystemExit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

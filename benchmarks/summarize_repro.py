@@ -1,0 +1,69 @@
+"""Summarize the paper-claim verdicts from the measured campaigns
+(feeds EXPERIMENTS.md §Repro). Run after `python -m benchmarks.run`."""
+from __future__ import annotations
+
+import json
+import os
+
+import numpy as np
+
+from repro.matrices import suite
+
+from . import common
+from .common import RESULTS_DIR, grid
+
+
+def run(quick=False):
+    out = {}
+    path = os.path.join(RESULTS_DIR, "campaign_locality.json")
+    with open(path) as f:
+        rec = json.load(f)
+    mats = sorted({r["matrix"] for r in rec.values()})
+    S = common.SCHEMES
+    perf = grid(rec, common.PRIMARY, mats, S, "seq_ios_gflops")
+    yax = grid(rec, common.PRIMARY, mats, S, "seq_yax_gflops")
+    cg = grid(rec, common.PRIMARY, mats, S, "cg_gflops")
+    par = grid(rec, common.PRIMARY, mats, S, "par_static_gflops")
+    ok = np.isfinite(perf).all(axis=0)
+    base = perf[S.index("baseline")]
+
+    # claim 5: sequential slowdown fraction per scheme
+    for s in S:
+        if s == "baseline":
+            continue
+        sp = perf[S.index(s)][ok] / base[ok]
+        out[f"seq_slowdown_frac_{s}"] = round(float((sp < 1.0).mean()), 3)
+        out[f"seq_median_speedup_{s}"] = round(float(np.median(sp)), 3)
+
+    # claim 4: pairwise rcm vs others (sequential)
+    r = S.index("rcm")
+    for s in S:
+        if s in ("rcm",):
+            continue
+        w = float((perf[r][ok] > perf[S.index(s)][ok]).mean())
+        out[f"seq_rcm_beats_{s}"] = round(w, 3)
+
+    # claim 2: methodology ratios
+    m_ok = np.isfinite(yax).all(0) & np.isfinite(cg).all(0) & ok
+    out["yax_over_cg_median"] = round(float(np.median((yax / cg)[:, m_ok])), 3)
+    out["ios_over_cg_median"] = round(float(np.median((perf / cg)[:, m_ok])), 3)
+
+    # claim 9 / table 1
+    for nm, g in [("IOS", perf), ("CG", cg), ("YAX", yax)]:
+        gok = np.isfinite(g).all(0)
+        w = int((g[r][gok] > g[S.index("metis")][gok]).sum())
+        l = int((g[r][gok] < g[S.index("metis")][gok]).sum())
+        out[f"t1_{nm}"] = f"rcm {w}w/{l}l"
+
+    # parallel (modelled): rcm vs metis magnitude story
+    p_ok = np.isfinite(par).all(axis=0)
+    pbase = par[S.index("baseline")]
+    for s in ("rcm", "metis"):
+        sp = par[S.index(s)][p_ok] / pbase[p_ok]
+        out[f"par_wins_{s}"] = round(float((sp > 1.0).mean()), 3)
+        out[f"par_maxspeedup_{s}"] = round(float(sp.max()), 3)
+    return out
+
+
+if __name__ == "__main__":
+    print(json.dumps(run(), indent=1))

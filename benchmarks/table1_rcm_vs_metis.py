@@ -1,0 +1,33 @@
+"""Paper Table 1: RCM-vs-METIS win/loss counts under IOS, CG, and YAX.
+Claim: IOS and CG agree (RCM wins); YAX flips the conclusion."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.matrices import suite
+
+from . import common
+from .common import RESULTS_DIR, grid, write_csv
+
+
+def run(quick: bool = False):
+    mats = suite.locality_names()
+    records = common.run_campaign(matrices=mats, schemes=common.SCHEMES,
+                                  profiles=(common.PRIMARY,), tag="locality")
+    rows, out = [], {}
+    for method, field in [("IOS", "seq_ios_gflops"), ("CG", "cg_gflops"),
+                          ("YAX", "seq_yax_gflops")]:
+        perf = grid(records, common.PRIMARY, mats, common.SCHEMES, field)
+        rcm = perf[common.SCHEMES.index("rcm")]
+        met = perf[common.SCHEMES.index("metis")]
+        ok = np.isfinite(rcm) & np.isfinite(met)
+        w = int((rcm[ok] > met[ok]).sum())
+        l = int((rcm[ok] < met[ok]).sum())
+        rows.append([method, w, l])
+        out[f"{method}_rcm_w"] = w
+        out[f"{method}_rcm_l"] = l
+    write_csv(f"{RESULTS_DIR}/table1_rcm_vs_metis.csv",
+              ["method", "rcm_wins", "rcm_losses"], rows)
+    out["ios_cg_agree"] = (out["IOS_rcm_w"] > out["IOS_rcm_l"]) == \
+        (out["CG_rcm_w"] > out["CG_rcm_l"])
+    return out

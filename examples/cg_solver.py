@@ -1,0 +1,44 @@
+"""Conjugate-Gradient solve — the paper's "real application" — with and
+without reordering, plus the Pallas Block-ELL engine (interpret mode).
+
+    PYTHONPATH=src python examples/cg_solver.py
+"""
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.measure import cg
+from repro.core.reorder import api as reorder
+from repro.core.spmv.ops import build_operator
+from repro.matrices import generators as G
+
+mat = G.shuffle(G.stencil_2d(120, seed=0), seed=1)  # 14.4k-node Laplacian
+rng = np.random.default_rng(0)
+x_true = rng.standard_normal(mat.n)
+b = jnp.asarray(mat.spmv(x_true), jnp.float32)
+
+for scheme in ["baseline", "rcm"]:
+    perm = reorder.reorder(mat, scheme)
+    rmat = mat.permute(perm) if scheme != "baseline" else mat
+    b_perm = jnp.asarray(np.asarray(b)[perm]) if scheme != "baseline" else b
+    op = build_operator(rmat, "csr")
+    t0 = time.time()
+    res = cg.cg_solve(op, b_perm, max_iter=300, tol=1e-5)
+    dt = time.time() - t0
+    # undo the permutation on the solution and check the ORIGINAL system
+    x = np.asarray(res.x)
+    if scheme != "baseline":
+        un = np.empty_like(x)
+        un[perm] = x
+        x = un
+    err = np.abs(mat.spmv(x) - np.asarray(b)).max()
+    print(f"{scheme:9s} iters={int(res.iters):4d} residual={float(res.residual):.2e} "
+          f"check={err:.2e} wall={dt:.2f}s")
+
+# the Pallas Block-ELL engine agrees with CSR (interpret mode, 1 SpMV)
+op_bell = build_operator(mat, "bell", block_shape=(8, 16), use_kernel="interpret")
+y_bell = np.asarray(op_bell(b))
+y_csr = np.asarray(build_operator(mat, "csr")(b))
+err = np.abs(y_bell - y_csr).max() / (np.abs(y_csr).max() + 1e-9)
+print(f"bell kernel (interpret) vs csr: max rel err {err:.2e}")

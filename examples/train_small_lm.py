@@ -1,0 +1,29 @@
+"""Train a ~100M-param LM for a few hundred steps on CPU, with a mid-run
+simulated crash + auto-resume (fault-tolerance demo).
+
+    PYTHONPATH=src python examples/train_small_lm.py [--steps 200]
+"""
+import argparse
+import shutil
+
+from repro.launch.train import small_lm_config, train
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--steps", type=int, default=200)
+ap.add_argument("--crash-demo", action="store_true",
+                help="crash at 40%% and auto-resume")
+args = ap.parse_args()
+
+ckpt_dir = "/tmp/repro_example_ckpt"
+shutil.rmtree(ckpt_dir, ignore_errors=True)
+cfg = small_lm_config()
+print(f"model: {cfg.param_count()/1e6:.0f}M params")
+
+if args.crash_demo:
+    out = train(cfg, args.steps, ckpt_dir, ckpt_every=20,
+                crash_at=int(args.steps * 0.4))
+    print("crashed:", {k: v for k, v in out.items() if k != 'losses'})
+out = train(cfg, args.steps, ckpt_dir, ckpt_every=20)
+print(f"loss: {out['first_loss']:.3f} -> {out['final_loss']:.3f} "
+      f"over {args.steps} steps")
+assert out["final_loss"] < out["first_loss"], "loss must decrease"

@@ -1,0 +1,43 @@
+"""Architecture registry: --arch <id> -> ModelConfig.
+
+The paper's own workload (distributed SpMV/CG) is registered as `spmv`
+and handled by launch/dryrun.py separately from the LM path.
+"""
+from . import (command_r_plus_104b, gemma2_27b, hubert_xlarge,
+               llama32_vision_11b, minicpm_2b, phi35_moe_42b_a66b,
+               qwen2_7b, qwen3_moe_30b_a3b, rwkv6_7b, zamba2_7b)
+from .base import SHAPES, ModelConfig, ShapeConfig, smoke_config
+
+ARCHS = {
+    "zamba2-7b": zamba2_7b.CONFIG,
+    "qwen2-7b": qwen2_7b.CONFIG,
+    "command-r-plus-104b": command_r_plus_104b.CONFIG,
+    "gemma2-27b": gemma2_27b.CONFIG,
+    "minicpm-2b": minicpm_2b.CONFIG,
+    "rwkv6-7b": rwkv6_7b.CONFIG,
+    "hubert-xlarge": hubert_xlarge.CONFIG,
+    "qwen3-moe-30b-a3b": qwen3_moe_30b_a3b.CONFIG,
+    "phi3.5-moe-42b-a6.6b": phi35_moe_42b_a66b.CONFIG,
+    "llama-3.2-vision-11b": llama32_vision_11b.CONFIG,
+}
+
+
+def get(name: str) -> ModelConfig:
+    if name not in ARCHS:
+        raise KeyError(f"unknown arch {name!r}; known: {sorted(ARCHS)}")
+    return ARCHS[name]
+
+
+def runnable_cells():
+    """The 40 assigned (arch x shape) cells minus documented skips
+    (DESIGN.md §5): returns list of (arch, shape, runnable, reason)."""
+    out = []
+    for arch, cfg in ARCHS.items():
+        for sname, shape in SHAPES.items():
+            runnable, reason = True, ""
+            if cfg.encoder_only and shape.kind == "decode":
+                runnable, reason = False, "encoder-only: no decode step"
+            elif sname == "long_500k" and not cfg.sub_quadratic:
+                runnable, reason = False, "full attention: long_500k needs sub-quadratic"
+            out.append((arch, sname, runnable, reason))
+    return out

@@ -1,0 +1,69 @@
+"""Measurement methodology (paper §3.1): YAX vs IOS harnesses.
+
+YAX (paper Listing 1): time `y = A @ x` repeatedly with the SAME x — the
+common-but-misleading protocol (unnaturally warm caches for x).
+
+IOS (paper Listing 2): swap input and output between iterations
+(`x, y = y, x`) so the input vector moves like it does inside a real
+application (CG writes its direction vector every iteration).
+
+Both return per-iteration wall-clock milliseconds; timing is host-side
+around a jit-compiled matvec with block_until_ready (the JAX analogue of
+the paper's omp_get_wtime bracketing). Symmetric square matrices (the
+corpus guarantee) make the swap well-typed.
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _time_once(fn: Callable, *args) -> tuple[float, jax.Array]:
+    t0 = time.perf_counter()
+    out = fn(*args)
+    out.block_until_ready()
+    return (time.perf_counter() - t0) * 1e3, out
+
+
+def run_yax(op: Callable, x0: jax.Array, iters: int = 20, warmup: int = 3) -> np.ndarray:
+    """Paper Listing 1. Returns ms[iters]."""
+    x = x0
+    for _ in range(warmup):
+        y = op(x)
+        y.block_until_ready()
+    times = np.empty(iters)
+    for i in range(iters):
+        times[i], y = _time_once(op, x)
+        # x unchanged — the YAX flaw under study
+    return times
+
+
+def run_ios(op: Callable, x0: jax.Array, iters: int = 20, warmup: int = 3) -> np.ndarray:
+    """Paper Listing 2. Returns ms[iters]."""
+    x = x0
+    for _ in range(warmup):
+        x = op(x)
+        x.block_until_ready()
+    times = np.empty(iters)
+    for i in range(iters):
+        times[i], y = _time_once(op, x)
+        x = y  # output becomes input
+    return times
+
+
+def gflops(nnz: int, ms: np.ndarray) -> np.ndarray:
+    """2 flops per nonzero (mul + add), paper's convention."""
+    return 2.0 * nnz / (ms * 1e-3) / 1e9
+
+
+def summarize(ms: np.ndarray) -> dict:
+    return {
+        "median_ms": float(np.median(ms)),
+        "mean_ms": float(np.mean(ms)),
+        "min_ms": float(np.min(ms)),
+        "p95_ms": float(np.percentile(ms, 95)),
+    }

@@ -1,0 +1,116 @@
+"""Unified reordering API + disk cache.
+
+reorder(mat, scheme, seed) -> permutation (perm[i] = old row at position i)
+apply_scheme(mat, scheme)  -> reordered CSRMatrix
+
+Schemes (paper §2.1): baseline (identity), random (the Fig. 1 shuffle),
+rcm, metis, louvain, patoh. Plus the beyond-paper `rcm_blocked`
+(block-fill-aware tie-break — DESIGN.md §10).
+
+Reordering is plan-time preprocessing (the paper never times it); results
+are content-addressed cached on disk so the benchmark suite is re-runnable.
+"""
+from __future__ import annotations
+
+import hashlib
+import os
+from typing import Callable, Dict
+
+import numpy as np
+
+from ..sparse.csr import CSRMatrix
+from .louvain import louvain_order
+from .metis import metis_order, metis_partition
+from .patoh import patoh_order, patoh_partition
+from .rcm import rcm_order
+
+_CACHE_DIR = os.environ.get("REPRO_REORDER_CACHE", "/tmp/repro_reorder")
+
+
+def _identity(mat: CSRMatrix, seed: int = 0) -> np.ndarray:
+    return np.arange(mat.m, dtype=np.int64)
+
+
+def _random(mat: CSRMatrix, seed: int = 0) -> np.ndarray:
+    return np.random.default_rng(seed).permutation(mat.m).astype(np.int64)
+
+
+def _rcm_blocked(mat: CSRMatrix, seed: int = 0, block: int = 8) -> np.ndarray:
+    """Beyond-paper: RCM followed by a within-window pass that greedily packs
+    rows with similar column-block signatures into the same block-row,
+    raising MXU tile density (see benchmarks/roofline + EXPERIMENTS.md §Perf)."""
+    base = rcm_order(mat, seed)
+    rmat = mat.permute(base)
+    m = rmat.m
+    win = block * 8
+    perm_local = np.arange(m, dtype=np.int64)
+    rp = rmat.rowptr.astype(np.int64)
+    cols = rmat.cols.astype(np.int64)
+    for w0 in range(0, m, win):
+        w1 = min(w0 + win, m)
+        rows = np.arange(w0, w1)
+        # signature = min col-block touched (cheap proxy for tile overlap)
+        sig = np.full(rows.size, np.iinfo(np.int64).max)
+        for i, r in enumerate(rows):
+            if rp[r + 1] > rp[r]:
+                sig[i] = cols[rp[r]] // 128
+        order = np.argsort(sig, kind="stable")
+        perm_local[w0:w1] = rows[order]
+    return base[perm_local]
+
+
+def _metis_nnzbal(mat: CSRMatrix, seed: int = 0) -> np.ndarray:
+    """METIS with degree-weighted (nnz) balance — the variant that improves
+    static LI on skewed graphs (see EXPERIMENTS §Repro claim 7)."""
+    return metis_order(mat, seed, degree_weighted=True)
+
+
+SCHEMES: Dict[str, Callable] = {
+    "baseline": _identity,
+    "metis_nnzbal": _metis_nnzbal,
+    "random": _random,
+    "rcm": rcm_order,
+    "metis": metis_order,
+    "louvain": louvain_order,
+    "patoh": patoh_order,
+    "rcm_blocked": _rcm_blocked,
+}
+
+PAPER_SCHEMES = ["rcm", "metis", "louvain", "patoh"]
+
+
+def _content_key(mat: CSRMatrix, scheme: str, seed: int) -> str:
+    h = hashlib.sha1()
+    h.update(np.ascontiguousarray(mat.rowptr).tobytes())
+    h.update(np.ascontiguousarray(mat.cols).tobytes())
+    h.update(f"{scheme}:{seed}".encode())
+    return h.hexdigest()[:20]
+
+
+def reorder(mat: CSRMatrix, scheme: str, seed: int = 0, cache: bool = True) -> np.ndarray:
+    if scheme not in SCHEMES:
+        raise KeyError(f"unknown scheme {scheme!r}; known: {sorted(SCHEMES)}")
+    if not cache:
+        return SCHEMES[scheme](mat, seed)
+    os.makedirs(_CACHE_DIR, exist_ok=True)
+    path = os.path.join(_CACHE_DIR, _content_key(mat, scheme, seed) + ".npy")
+    if os.path.exists(path):
+        return np.load(path)
+    perm = SCHEMES[scheme](mat, seed)
+    np.save(path, perm)
+    return perm
+
+
+def apply_scheme(mat: CSRMatrix, scheme: str, seed: int = 0, cache: bool = True) -> CSRMatrix:
+    perm = reorder(mat, scheme, seed, cache)
+    return mat.permute(perm)
+
+
+PARTITIONERS = {
+    "metis": metis_partition,
+    "patoh": patoh_partition,
+}
+
+
+def partition_labels(mat: CSRMatrix, scheme: str, k: int, seed: int = 0) -> np.ndarray:
+    return PARTITIONERS[scheme](mat, k, seed)

@@ -1,0 +1,168 @@
+"""Structural diagnostics from the paper (§2, §6) — all plan-time numpy.
+
+These are the quantities the paper uses to *explain* SpMV performance:
+  * nnz load imbalance (paper Eq. in §6.1)      -> load_imbalance()
+  * matrix bandwidth / profile (RCM's target)   -> bandwidth(), profile()
+  * cache-line / block locality proxies         -> distinct_col_blocks(),
+                                                   block_fill_ratio()
+  * partition communication volume (cut)        -> cut_volume()
+
+block_fill_ratio() is the TPU adaptation: on an MXU-based device the analogue
+of "x[col] hits L1" is "the nnz lands in an already-materialized dense tile".
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from .csr import CSRMatrix
+
+
+# --------------------------------------------------------------------------
+# Load imbalance (paper §6.1)
+# --------------------------------------------------------------------------
+def panel_loads(mat: CSRMatrix, panel_starts: np.ndarray) -> np.ndarray:
+    """nnz assigned to each row panel. panel_starts: int[P+1] row offsets."""
+    rp = mat.rowptr.astype(np.int64)
+    return rp[panel_starts[1:]] - rp[panel_starts[:-1]]
+
+
+def load_imbalance(mat: CSRMatrix, panel_starts: np.ndarray) -> float:
+    """LI = max_load / fair_load, fair_load = total_nnz / P (paper §6.1)."""
+    loads = panel_loads(mat, panel_starts)
+    p = len(panel_starts) - 1
+    fair = mat.nnz / max(p, 1)
+    if fair == 0:
+        return 1.0
+    return float(loads.max() / fair)
+
+
+def static_block_panels(m: int, p: int) -> np.ndarray:
+    """Default OpenMP static schedule: one maximal contiguous chunk per
+    processor (paper §3.2). Returns int[P+1] row offsets."""
+    base, rem = divmod(m, p)
+    sizes = np.full(p, base, dtype=np.int64)
+    sizes[:rem] += 1
+    return np.concatenate([[0], np.cumsum(sizes)])
+
+
+# --------------------------------------------------------------------------
+# Bandwidth / profile (RCM's objective)
+# --------------------------------------------------------------------------
+def bandwidth(mat: CSRMatrix) -> int:
+    """max_i max_{j: a_ij != 0} |i - j|."""
+    if mat.nnz == 0:
+        return 0
+    r = np.repeat(np.arange(mat.m), mat.row_nnz())
+    return int(np.abs(r - mat.cols.astype(np.int64)).max())
+
+
+def profile(mat: CSRMatrix) -> int:
+    """sum_i (i - min_col(i)) over the lower triangle — the 'envelope'."""
+    total = 0
+    rp = mat.rowptr.astype(np.int64)
+    nnz_rows = np.flatnonzero(np.diff(rp) > 0)
+    for i in nnz_rows:
+        cmin = mat.cols[rp[i] : rp[i + 1]].min()
+        if cmin < i:
+            total += int(i - cmin)
+    return total
+
+
+def avg_row_bandwidth(mat: CSRMatrix) -> float:
+    """Mean |i - j| over nonzeros — a smoother locality proxy than max."""
+    if mat.nnz == 0:
+        return 0.0
+    r = np.repeat(np.arange(mat.m), mat.row_nnz())
+    return float(np.abs(r - mat.cols.astype(np.int64)).mean())
+
+
+# --------------------------------------------------------------------------
+# TPU tile locality (hardware adaptation, DESIGN.md §3)
+# --------------------------------------------------------------------------
+def distinct_col_blocks(mat: CSRMatrix, panel_starts: np.ndarray, block_n: int) -> np.ndarray:
+    """Per panel: number of distinct column blocks of width block_n touched.
+
+    TPU analogue of 'distinct cache lines of x touched per core': each
+    distinct block is one HBM->VMEM transfer of an x tile in the Pallas
+    kernel. Lower = better data movement (what RCM improves).
+    """
+    rp = mat.rowptr.astype(np.int64)
+    out = np.zeros(len(panel_starts) - 1, dtype=np.int64)
+    blocks = mat.cols.astype(np.int64) // block_n
+    for p in range(len(panel_starts) - 1):
+        s, e = rp[panel_starts[p]], rp[panel_starts[p + 1]]
+        out[p] = np.unique(blocks[s:e]).size
+    return out
+
+
+def block_fill_ratio(mat: CSRMatrix, block_m: int, block_n: int) -> float:
+    """nnz / (num_nonempty_blocks * block_m * block_n).
+
+    Fraction of useful work when the matrix is tiled into dense
+    block_m x block_n 'MXU bricks'. 1.0 = perfectly dense blocks.
+    """
+    if mat.nnz == 0:
+        return 1.0
+    r = np.repeat(np.arange(mat.m), mat.row_nnz()).astype(np.int64)
+    c = mat.cols.astype(np.int64)
+    keys = (r // block_m) * ((mat.n + block_n - 1) // block_n) + (c // block_n)
+    nblocks = np.unique(keys).size
+    return float(mat.nnz / (nblocks * block_m * block_n))
+
+
+def num_nonempty_blocks(mat: CSRMatrix, block_m: int, block_n: int) -> int:
+    if mat.nnz == 0:
+        return 0
+    r = np.repeat(np.arange(mat.m), mat.row_nnz()).astype(np.int64)
+    c = mat.cols.astype(np.int64)
+    keys = (r // block_m) * ((mat.n + block_n - 1) // block_n) + (c // block_n)
+    return int(np.unique(keys).size)
+
+
+# --------------------------------------------------------------------------
+# Partition quality (distributed setting; PaToH/METIS objective)
+# --------------------------------------------------------------------------
+def cut_volume(mat: CSRMatrix, panel_starts: np.ndarray) -> int:
+    """Communication volume of a 1-D row partition with x partitioned
+    conformally: nnz whose column lives in a different panel than the row.
+
+    This is what hypergraph partitioning minimizes and what turns into
+    collective bytes in the distributed SpMV.
+    """
+    m = mat.m
+    owner = np.zeros(m, dtype=np.int64)
+    for p in range(len(panel_starts) - 1):
+        owner[panel_starts[p] : panel_starts[p + 1]] = p
+    r = np.repeat(np.arange(m), mat.row_nnz()).astype(np.int64)
+    c = mat.cols.astype(np.int64)
+    return int(np.count_nonzero(owner[r] != owner[c]))
+
+
+def halo_width(mat: CSRMatrix, panel_starts: np.ndarray) -> int:
+    """Max distance a panel must reach outside its own x range.
+
+    For a bandwidth-reduced (RCM) matrix this equals the bandwidth, and it
+    bounds the halo-exchange size of the distributed SpMV.
+    """
+    rp = mat.rowptr.astype(np.int64)
+    worst = 0
+    for p in range(len(panel_starts) - 1):
+        r0, r1 = panel_starts[p], panel_starts[p + 1]
+        s, e = rp[r0], rp[r1]
+        if e > s:
+            seg = mat.cols[s:e].astype(np.int64)
+            worst = max(worst, int(max(r0 - seg.min(), seg.max() - (r1 - 1), 0)))
+    return worst
+
+
+def summary(mat: CSRMatrix, p: int = 8, block: int = 128) -> dict:
+    panels = static_block_panels(mat.m, p)
+    return {
+        "m": mat.m,
+        "nnz": mat.nnz,
+        "bandwidth": bandwidth(mat),
+        "avg_row_bandwidth": avg_row_bandwidth(mat),
+        "load_imbalance": load_imbalance(mat, panels),
+        "block_fill_ratio": block_fill_ratio(mat, 8, block),
+        "cut_volume": cut_volume(mat, panels),
+    }

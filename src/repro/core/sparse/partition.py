@@ -1,0 +1,81 @@
+"""Row-panel partitioning — the paper's two scheduling strategies.
+
+* static_partition      — default OpenMP static schedule: equal ROW counts
+                          (paper §3.2, the winner of the scheduling study).
+* nnz_balanced_partition— equal NNZ counts (paper Listing 5): the custom
+                          load-balanced schedule used in §6.2 to isolate
+                          load-balance effects from data-movement effects.
+* chunked_cyclic_panels — static,chunk round-robin (for the Fig. 4 sweep).
+
+On TPU these produce the per-device row panels for the shard_map SpMV and
+the per-grid-step panels inside the Pallas kernel.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from .csr import CSRMatrix
+from .metrics import static_block_panels
+
+
+def static_partition(mat: CSRMatrix, p: int) -> np.ndarray:
+    """int[P+1] — contiguous equal-row panels (default static schedule)."""
+    return static_block_panels(mat.m, p)
+
+
+def nnz_balanced_partition(mat: CSRMatrix, p: int) -> np.ndarray:
+    """int[P+1] — contiguous panels with ~equal nnz (paper Listing 5).
+
+    Greedy prefix splitter: panel k ends at the first row where the running
+    nnz count reaches (k+1)/P of total. Rows are never split (same
+    granularity as the paper's rowPanel_start).
+    """
+    rp = mat.rowptr.astype(np.int64)
+    total = mat.nnz
+    targets = (np.arange(1, p, dtype=np.float64) * total / p)
+    # rp is nondecreasing; searchsorted finds the split rows.
+    cuts = np.searchsorted(rp[1:], targets, side="left") + 1
+    cuts = np.clip(cuts, 1, mat.m)
+    starts = np.concatenate([[0], cuts, [mat.m]]).astype(np.int64)
+    # enforce monotonicity when several targets land in one giant row
+    starts = np.maximum.accumulate(starts)
+    return starts
+
+
+def chunked_cyclic_panels(m: int, p: int, chunk: int) -> list[np.ndarray]:
+    """static,chunk scheduling: thread t gets rows {t*chunk..(t+1)*chunk-1,
+    (t+P)*chunk.., ...}. Returns, per thread, the array of its row ids.
+    (Non-contiguous — used only by the Fig. 4 scheduling benchmark.)"""
+    out = []
+    nchunks = (m + chunk - 1) // chunk
+    for t in range(p):
+        ids = []
+        for ck in range(t, nchunks, p):
+            ids.append(np.arange(ck * chunk, min((ck + 1) * chunk, m)))
+        out.append(np.concatenate(ids) if ids else np.empty(0, dtype=np.int64))
+    return out
+
+
+def partition_to_owner(panel_starts: np.ndarray, m: int) -> np.ndarray:
+    """int[m] — panel id owning each row."""
+    owner = np.zeros(m, dtype=np.int32)
+    for pnl in range(len(panel_starts) - 1):
+        owner[panel_starts[pnl] : panel_starts[pnl + 1]] = pnl
+    return owner
+
+
+def pad_panels_to_uniform(mat: CSRMatrix, panel_starts: np.ndarray):
+    """Pad each panel's rows to the max panel height (device-side SPMD needs
+    uniform shapes). Returns (row_index[P, H], valid[P, H]) where
+    row_index[p, i] is the matrix row handled by slot i of panel p (padding
+    slots repeat row 0 and are masked by valid)."""
+    p = len(panel_starts) - 1
+    heights = np.diff(panel_starts)
+    h = int(heights.max()) if p else 0
+    idx = np.zeros((p, h), dtype=np.int32)
+    valid = np.zeros((p, h), dtype=bool)
+    for k in range(p):
+        n = heights[k]
+        idx[k, :n] = np.arange(panel_starts[k], panel_starts[k + 1])
+        valid[k, :n] = True
+    return idx, valid

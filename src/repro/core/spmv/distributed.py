@@ -1,0 +1,248 @@
+"""Multi-device SpMV via shard_map — the distributed runtime for the
+paper's workload (and the `--arch spmv` dry-run entry).
+
+Two layouts (DESIGN.md §4):
+
+* 1-D row panels (paper-faithful baseline): rows nnz-balanced over every
+  device (paper Listing 5 applied at the device level); x starts
+  row-sharded and is ALL-GATHERED each iteration (the CG dataflow: the
+  updated direction vector is sharded, the next SpMV needs all of it).
+  Collective bytes per SpMV: n * dtype * (P-1)/P per device.
+
+* 2-D panels (beyond-paper optimization, EXPERIMENTS.md §Perf): rows over
+  the `data` axis, columns over the `model` axis. Each device holds an
+  (m/D x n/M) brick and only its x segment; partial y is reduce-scattered
+  over `model`. Collective bytes per SpMV: m/D * dtype — independent of
+  total device count on the row axis.
+
+Both operate on Block-ELL bricks (uniform shapes across devices; panels are
+nnz-balanced *before* padding so the padding is the residual imbalance).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.experimental.shard_map import shard_map
+
+from ..sparse.bell import to_block_ell
+from ..sparse.csr import CSRMatrix
+from ..sparse.partition import nnz_balanced_partition, static_partition
+from . import ref
+
+
+# ---------------------------------------------------------------------------
+# Host-side plan: chop a CSR matrix into per-device Block-ELL bricks
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class Plan1D:
+    """Global arrays for the 1-D layout (leading axis = row panels)."""
+
+    blocks: np.ndarray       # [P, nbr_l, K, bm, bn]
+    block_cols: np.ndarray   # [P, nbr_l, K]
+    row_offset: np.ndarray   # [P] first row of each panel
+    panel_rows: int          # uniform (padded) rows per panel
+    shape: Tuple[int, int]
+    block_shape: Tuple[int, int]
+
+
+def plan_1d(mat: CSRMatrix, num_devices: int, bm: int = 8, bn: int = 128,
+            balanced: bool = True) -> Plan1D:
+    starts = (nnz_balanced_partition(mat, num_devices) if balanced
+              else static_partition(mat, num_devices))
+    heights = np.diff(starts)
+    h = int(heights.max())
+    h_pad = ((h + bm - 1) // bm) * bm
+    nbr_l = h_pad // bm
+    panels = []
+    for p in range(num_devices):
+        r0, r1 = int(starts[p]), int(starts[p + 1])
+        rp = mat.rowptr.astype(np.int64)
+        s, e = rp[r0], rp[r1]
+        sub = CSRMatrix(
+            rowptr=(rp[r0:r1 + 1] - s).astype(np.int32),
+            cols=mat.cols[s:e], vals=mat.vals[s:e],
+            shape=(r1 - r0, mat.n))
+        panels.append(to_block_ell(sub, bm, bn))
+    k = max(pl_.k for pl_ in panels)
+    blocks = np.zeros((num_devices, nbr_l, k, bm, bn), dtype=mat.vals.dtype)
+    cols = np.zeros((num_devices, nbr_l, k), dtype=np.int32)
+    for p, pnl in enumerate(panels):
+        blocks[p, :pnl.num_block_rows, :pnl.k] = pnl.blocks
+        cols[p, :pnl.num_block_rows, :pnl.k] = pnl.block_cols
+    return Plan1D(blocks=blocks, block_cols=cols,
+                  row_offset=starts[:-1].astype(np.int64), panel_rows=h_pad,
+                  shape=mat.shape, block_shape=(bm, bn))
+
+
+# ---------------------------------------------------------------------------
+# Device-side step functions (shard_map bodies close over nothing; all
+# operands are explicit so the same functions lower in the dry-run).
+# ---------------------------------------------------------------------------
+def spmv_1d(mesh: Mesh, axis_names: Tuple[str, ...]):
+    """Returns jit'd f(blocks, block_cols, x_panels) -> y_panels.
+
+    blocks [P, nbr_l, K, bm, bn] sharded on axis 0 over `axis_names`;
+    x_panels [P, panel_n] row-sharded segments of x (padded); output
+    y_panels [P, panel_m] row-sharded. The all-gather of x is explicit.
+    """
+    ax = axis_names
+
+    def local(blocks, block_cols, x_panels):
+        # blocks [1, nbr_l, K, bm, bn]; x_panels [1, seg]
+        xs = jax.lax.all_gather(x_panels[0], ax, tiled=True)   # [n_pad]
+        bm, bn = blocks.shape[-2], blocks.shape[-1]
+        x2d = xs.reshape(-1, bn, 1)
+        y = ref.spmv_bell(blocks[0], block_cols[0], x2d)        # [nbr_l, bm, 1]
+        return y.reshape(1, -1)
+
+    f = shard_map(local, mesh=mesh,
+                  in_specs=(P(ax), P(ax), P(ax)),
+                  out_specs=P(ax))
+    return jax.jit(f)
+
+
+def spmv_2d(mesh: Mesh, row_axis: str = "data", col_axis: str = "model"):
+    """Returns jit'd f(blocks, block_cols, x_segs) -> y_panels.
+
+    blocks [D, M, nbr_l, K, bm, bn] sharded (row_axis, col_axis);
+    x_segs [M, seg_n] sharded on col_axis (replicated over row_axis);
+    y [D, panel_m] sharded on row_axis (replicated over col_axis).
+    Comm: one psum (all-reduce) of the local y panel over col_axis.
+    """
+
+    def local(blocks, block_cols, x_segs):
+        bm, bn = blocks.shape[-2], blocks.shape[-1]
+        x2d = x_segs[0].reshape(-1, bn, 1)
+        y = ref.spmv_bell(blocks[0, 0], block_cols[0, 0], x2d)  # [nbr_l, bm, 1]
+        y = jax.lax.psum(y, col_axis)
+        return y.reshape(1, -1)
+
+    f = shard_map(local, mesh=mesh,
+                  in_specs=(P(row_axis, col_axis), P(row_axis, col_axis),
+                            P(col_axis)),
+                  out_specs=P(row_axis))
+    return jax.jit(f)
+
+
+def plan_2d(mat: CSRMatrix, d: int, m_axis: int, bm: int = 8, bn: int = 128,
+            balanced: bool = True):
+    """Chop into d x m_axis bricks: nnz-balanced row panels, equal column
+    segments (columns must align with x segmentation). Returns global arrays
+    (blocks [D, M, nbr_l, K, bm, bn], block_cols, seg_n, panel_m)."""
+    starts = (nnz_balanced_partition(mat, d) if balanced
+              else static_partition(mat, d))
+    seg_n = ((mat.n + m_axis - 1) // m_axis + bn - 1) // bn * bn
+    heights = np.diff(starts)
+    h_pad = ((int(heights.max()) + bm - 1) // bm) * bm
+    nbr_l = h_pad // bm
+    rp = mat.rowptr.astype(np.int64)
+    bricks = []
+    kmax = 1
+    for p in range(d):
+        r0, r1 = int(starts[p]), int(starts[p + 1])
+        s, e = rp[r0], rp[r1]
+        cols = mat.cols[s:e].astype(np.int64)
+        rows = np.repeat(np.arange(r1 - r0), np.diff(rp[r0:r1 + 1]))
+        row_bricks = []
+        for q in range(m_axis):
+            c0, c1 = q * seg_n, (q + 1) * seg_n
+            keep = (cols >= c0) & (cols < c1)
+            sub = CSRMatrix.from_coo(rows[keep], cols[keep] - c0,
+                                     mat.vals[s:e][keep], (r1 - r0, seg_n))
+            bell = to_block_ell(sub, bm, bn)
+            kmax = max(kmax, bell.k)
+            row_bricks.append(bell)
+        bricks.append(row_bricks)
+    blocks = np.zeros((d, m_axis, nbr_l, kmax, bm, bn), dtype=mat.vals.dtype)
+    bcols = np.zeros((d, m_axis, nbr_l, kmax), dtype=np.int32)
+    for p in range(d):
+        for q in range(m_axis):
+            b = bricks[p][q]
+            blocks[p, q, :b.num_block_rows, :b.k] = b.blocks
+            bcols[p, q, :b.num_block_rows, :b.k] = b.block_cols
+    return blocks, bcols, seg_n, h_pad, starts
+
+
+# ---------------------------------------------------------------------------
+# Halo-exchange layout (the REORDERING-ENABLED communication primitive)
+# ---------------------------------------------------------------------------
+def plan_halo_1d(mat: CSRMatrix, num_devices: int, bm: int = 8, bn: int = 128):
+    """1-D row panels where each panel's x window is its own slice plus a
+    HALO of `halo` elements each side — legal only when the matrix
+    bandwidth fits the halo, i.e. AFTER a bandwidth-reducing reordering
+    (RCM). This is the paper's data-movement story as a distributed
+    primitive: reordering changes the collective from all-gather
+    (n*(P-1)/P bytes) to two nearest-neighbour permutes (2*halo bytes).
+
+    Returns (blocks [P, nbr_l, K, bm, bn], block_cols [P, nbr_l, K],
+    halo, panel_n) with block_cols RELATIVE to the panel's haloed window
+    [r0 - halo, r1 + halo).
+    """
+    from ..sparse.metrics import bandwidth as _bandwidth
+
+    assert mat.m % num_devices == 0, "equal panels required"
+    panel_n = mat.m // num_devices
+    bw = _bandwidth(mat)
+    halo = ((bw + bn - 1) // bn) * bn
+    if halo >= panel_n:
+        raise ValueError(
+            f"bandwidth {bw} too wide for halo exchange at P={num_devices} "
+            f"(panel {panel_n}); reorder first (RCM) or use plan_1d")
+    rp = mat.rowptr.astype(np.int64)
+    panels = []
+    kmax = 1
+    win_n = panel_n + 2 * halo
+    for p in range(num_devices):
+        r0, r1 = p * panel_n, (p + 1) * panel_n
+        s, e = rp[r0], rp[r1]
+        cols = mat.cols[s:e].astype(np.int64) - (r0 - halo)  # window-relative
+        assert cols.min() >= 0 and cols.max() < win_n, "bandwidth violated"
+        rows = np.repeat(np.arange(r1 - r0), np.diff(rp[r0:r1 + 1]))
+        sub = CSRMatrix.from_coo(rows, cols, mat.vals[s:e],
+                                 (panel_n, win_n))
+        bell = to_block_ell(sub, bm, bn)
+        kmax = max(kmax, bell.k)
+        panels.append(bell)
+    nbr_l = (panel_n + bm - 1) // bm
+    blocks = np.zeros((num_devices, nbr_l, kmax, bm, bn), dtype=mat.vals.dtype)
+    bcols = np.zeros((num_devices, nbr_l, kmax), dtype=np.int32)
+    for p, pnl in enumerate(panels):
+        blocks[p, :pnl.num_block_rows, :pnl.k] = pnl.blocks
+        bcols[p, :pnl.num_block_rows, :pnl.k] = pnl.block_cols
+    return blocks, bcols, halo, panel_n
+
+
+def spmv_halo_1d(mesh: Mesh, axis_names: Tuple[str, ...], halo: int):
+    """Returns jit'd f(blocks, block_cols, x_panels) -> y_panels where the
+    x window is assembled with two collective_permutes (ring neighbours)
+    instead of an all-gather."""
+    ax = axis_names if len(axis_names) > 1 else axis_names[0]
+
+    def local(blocks, block_cols, x_panels):
+        x = x_panels[0]                          # [panel_n]
+        n_dev = 1
+        for a in (axis_names if isinstance(ax, tuple) else (ax,)):
+            n_dev *= jax.lax.axis_size(a)
+        axname = axis_names if len(axis_names) > 1 else axis_names[0]
+        # my right edge -> right neighbour's left halo; and vice versa
+        right_edge = x[-halo:]
+        left_edge = x[:halo]
+        fwd = [(i, (i + 1) % n_dev) for i in range(n_dev)]
+        bwd = [((i + 1) % n_dev, i) for i in range(n_dev)]
+        left_halo = jax.lax.ppermute(right_edge, axname, fwd)
+        right_halo = jax.lax.ppermute(left_edge, axname, bwd)
+        xw = jnp.concatenate([left_halo, x, right_halo])
+        bm, bn = blocks.shape[-2], blocks.shape[-1]
+        y = ref.spmv_bell(blocks[0], block_cols[0], xw.reshape(-1, bn, 1))
+        return y.reshape(1, -1)
+
+    f = shard_map(local, mesh=mesh,
+                  in_specs=(P(ax), P(ax), P(ax)),
+                  out_specs=P(ax))
+    return jax.jit(f)

@@ -1,0 +1,115 @@
+"""Unified jit'd SpMV engine dispatch.
+
+Engines:
+  csr    — gather + segment-sum (paper Listing 4 semantics; the CPU
+           measurement engine for the reproduction study)
+  ell    — padded row-major ELLPACK
+  bell   — Block-ELL Pallas kernel (TPU) / jnp oracle (CPU)
+  bcsr   — BCSR Pallas kernel (TPU) / jnp oracle (CPU)
+  dense  — dense matmul (tiny matrices / sanity only)
+
+`DeviceCSR.matvec` is what the measurement harness times; it is a single
+jit-compiled XLA computation per (matrix, engine).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Literal
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..sparse.bell import to_bcsr, to_block_ell
+from ..sparse.csr import CSRMatrix
+from . import ref
+
+Engine = Literal["csr", "ell", "bell", "bcsr", "dense"]
+
+
+@functools.partial(jax.jit, static_argnames=("m",))
+def _csr_matvec(row_ids, cols, vals, x, m):
+    return ref.spmv_csr(row_ids, cols, vals, x, m)
+
+
+@jax.jit
+def _ell_matvec(ell_cols, ell_vals, x):
+    return ref.spmv_ell(ell_cols, ell_vals, x)
+
+
+class DeviceCSR:
+    """Device-resident CSR (COO-expanded) operator.
+
+    nnz_bucket > 0 pads nnz up to the next multiple (val=0, row=0, col=0 —
+    result-neutral) so panels of similar size share one XLA compilation.
+    """
+
+    def __init__(self, mat: CSRMatrix, dtype=jnp.float32, nnz_bucket: int = 0):
+        self.m, self.n = mat.shape
+        self.nnz = mat.nnz
+        row_ids = np.repeat(np.arange(mat.m, dtype=np.int32), mat.row_nnz())
+        cols = mat.cols.astype(np.int32)
+        vals = mat.vals
+        if nnz_bucket:
+            pad = (-mat.nnz) % nnz_bucket
+            if pad:
+                # pad with (row=m-1, col=0, val=0): keeps row_ids sorted
+                # (segment_sum indices_are_sorted) and adds exactly 0.
+                row_ids = np.concatenate(
+                    [row_ids, np.full(pad, self.m - 1, np.int32)])
+                cols = np.concatenate([cols, np.zeros(pad, np.int32)])
+                vals = np.concatenate([vals, np.zeros(pad, vals.dtype)])
+        self.row_ids = jnp.asarray(row_ids)
+        self.cols = jnp.asarray(cols)
+        self.vals = jnp.asarray(vals, dtype=dtype)
+
+    def __call__(self, x: jax.Array) -> jax.Array:
+        return _csr_matvec(self.row_ids, self.cols, self.vals, x, self.m)
+
+
+class DeviceELL:
+    def __init__(self, mat: CSRMatrix, dtype=jnp.float32):
+        self.m, self.n = mat.shape
+        counts = mat.row_nnz()
+        k = max(int(counts.max()), 1)
+        cols = np.zeros((mat.m, k), dtype=np.int32)
+        vals = np.zeros((mat.m, k), dtype=np.float64)
+        rp = mat.rowptr.astype(np.int64)
+        for i in range(mat.m):
+            c = counts[i]
+            cols[i, :c] = mat.cols[rp[i]:rp[i + 1]]
+            vals[i, :c] = mat.vals[rp[i]:rp[i + 1]]
+        self.ell_cols = jnp.asarray(cols)
+        self.ell_vals = jnp.asarray(vals, dtype=dtype)
+
+    def __call__(self, x: jax.Array) -> jax.Array:
+        return _ell_matvec(self.ell_cols, self.ell_vals, x)
+
+
+class DeviceDense:
+    def __init__(self, mat: CSRMatrix, dtype=jnp.float32):
+        self.a = jnp.asarray(mat.to_dense(), dtype=dtype)
+
+    def __call__(self, x: jax.Array) -> jax.Array:
+        return self.a @ x
+
+
+def build_operator(mat: CSRMatrix, engine: Engine = "csr", dtype=jnp.float32,
+                   block_shape=(8, 128), use_kernel: str = "auto",
+                   nnz_bucket: int = 0):
+    """Factory: host CSRMatrix -> callable device operator y = A @ x."""
+    if engine == "csr":
+        return DeviceCSR(mat, dtype, nnz_bucket=nnz_bucket)
+    if engine == "ell":
+        return DeviceELL(mat, dtype)
+    if engine == "dense":
+        return DeviceDense(mat, dtype)
+    if engine == "bell":
+        from ...kernels.bell_spmv.ops import BellOperator
+
+        return BellOperator(to_block_ell(mat, *block_shape), dtype, use_kernel)
+    if engine == "bcsr":
+        from ...kernels.bcsr_spmv.ops import BcsrOperator
+
+        return BcsrOperator(to_bcsr(mat, *block_shape), dtype, use_kernel)
+    raise KeyError(engine)

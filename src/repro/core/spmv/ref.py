@@ -1,0 +1,53 @@
+"""Pure-jnp SpMV oracles — the correctness references for every engine.
+
+These are deliberately straight-line jnp (no pallas, no shard_map); each
+optimized engine (ops.py, kernels/, distributed.py) is tested allclose
+against these, which in turn are tested against the numpy CSRMatrix.spmv.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def spmv_dense(a_dense: jax.Array, x: jax.Array) -> jax.Array:
+    return a_dense @ x
+
+
+def spmv_csr(row_ids: jax.Array, cols: jax.Array, vals: jax.Array,
+             x: jax.Array, m: int) -> jax.Array:
+    """CSR-as-COO gather + segment-sum (paper Listing 4 semantics).
+
+    row_ids: int32[nnz] (row of each stored element, nondecreasing)
+    """
+    prod = vals * x[cols]
+    return jax.ops.segment_sum(prod, row_ids, num_segments=m,
+                               indices_are_sorted=True)
+
+
+def spmv_ell(ell_cols: jax.Array, ell_vals: jax.Array, x: jax.Array) -> jax.Array:
+    """ELLPACK: ell_cols/vals [m, K], padding has val 0 (col arbitrary)."""
+    return jnp.sum(ell_vals * x[ell_cols], axis=1)
+
+
+def spmv_bell(blocks: jax.Array, block_cols: jax.Array, x2d: jax.Array) -> jax.Array:
+    """Block-ELL: blocks [nbr, K, bm, bn]; block_cols [nbr, K];
+    x2d [ncb, bn, nv] (x padded & reshaped). Returns y [nbr, bm, nv].
+
+    Padding blocks are all-zero so their contribution vanishes regardless of
+    block_cols padding value.
+    """
+    gathered = x2d[block_cols]                       # [nbr, K, bn, nv]
+    return jnp.einsum("rkij,rkjv->riv", blocks, gathered,
+                      preferred_element_type=jnp.float32).astype(x2d.dtype)
+
+
+def spmv_bcsr(blocks: jax.Array, block_rows: jax.Array, block_cols: jax.Array,
+              x2d: jax.Array, num_block_rows: int) -> jax.Array:
+    """BCSR: blocks [T, bm, bn], block_rows/cols [T]. Returns [nbr, bm, nv]."""
+    gathered = x2d[block_cols]                       # [T, bn, nv]
+    partial = jnp.einsum("tij,tjv->tiv", blocks, gathered,
+                         preferred_element_type=jnp.float32)
+    y = jax.ops.segment_sum(partial, block_rows, num_segments=num_block_rows,
+                            indices_are_sorted=True)
+    return y.astype(x2d.dtype)

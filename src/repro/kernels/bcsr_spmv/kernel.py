@@ -1,0 +1,68 @@
+"""Pallas TPU kernel: BCSR SpMV/SpMM (flattened-grid variant).
+
+Block-ELL pays K_max grid steps for *every* block row — ruinous for
+power-law matrices whose block-count distribution is skewed (the paper's
+load-imbalance story at tile granularity). This kernel walks the true block
+list instead: grid = (total_blocks,), with scalar-prefetched block_rows /
+block_cols driving the BlockSpec index_maps. The output tile for a block
+row stays in VMEM across its (consecutive, row-sorted) blocks and is
+flushed when the row id changes — the same revisit-consecutive reduction
+contract Pallas flash-attention uses.
+
+Requirement: every block row has >= 1 block (builder pads empty rows with an
+explicit zero block) so each output tile is written at least once.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _bcsr_kernel(block_rows_ref, block_cols_ref, blocks_ref, x_ref, y_ref, *,
+                 acc_dtype):
+    g = pl.program_id(0)
+    row = block_rows_ref[g]
+    prev = block_rows_ref[jnp.maximum(g - 1, 0)]
+    is_first = jnp.logical_or(g == 0, row != prev)
+
+    @pl.when(is_first)
+    def _init():
+        y_ref[...] = jnp.zeros_like(y_ref)
+
+    a = blocks_ref[0]          # [bm, bn]
+    xv = x_ref[0]              # [bn, nv]
+    y_ref[0] += jnp.dot(a, xv, preferred_element_type=acc_dtype).astype(y_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("num_block_rows", "interpret"))
+def bcsr_spmm(blocks: jax.Array, block_rows: jax.Array, block_cols: jax.Array,
+              x2d: jax.Array, num_block_rows: int,
+              interpret: bool = False) -> jax.Array:
+    """y[nbr, bm, nv] = BCSR @ x2d[ncb, bn, nv].
+
+    blocks: [T, bm, bn]; block_rows: int32[T] nondecreasing, covering every
+    row id in [0, nbr); block_cols: int32[T].
+    """
+    t, bm, bn = blocks.shape
+    ncb, bn2, nv = x2d.shape
+    assert bn2 == bn
+    acc_dtype = jnp.float32
+
+    return pl.pallas_call(
+        functools.partial(_bcsr_kernel, acc_dtype=acc_dtype),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=(t,),
+            in_specs=[
+                pl.BlockSpec((1, bm, bn), lambda g, br, bc: (g, 0, 0)),
+                pl.BlockSpec((1, bn, nv), lambda g, br, bc: (bc[g], 0, 0)),
+            ],
+            out_specs=pl.BlockSpec((1, bm, nv), lambda g, br, bc: (br[g], 0, 0)),
+        ),
+        out_shape=jax.ShapeDtypeStruct((num_block_rows, bm, nv), x2d.dtype),
+        interpret=interpret,
+    )(block_rows, block_cols, blocks, x2d)

@@ -1,0 +1,11 @@
+"""Pure-jnp oracle for the BCSR kernel (same signature as kernel.py)."""
+from __future__ import annotations
+
+import jax
+
+from ...core.spmv.ref import spmv_bcsr
+
+
+def bcsr_spmm_ref(blocks: jax.Array, block_rows: jax.Array, block_cols: jax.Array,
+                  x2d: jax.Array, num_block_rows: int) -> jax.Array:
+    return spmv_bcsr(blocks, block_rows, block_cols, x2d, num_block_rows)

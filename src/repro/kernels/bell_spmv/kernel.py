@@ -1,0 +1,64 @@
+"""Pallas TPU kernel: Block-ELL SpMV/SpMM.
+
+TPU-native SpMV (DESIGN.md §3): the matrix is stored as dense (bm x bn) MXU
+bricks at the nonempty block positions; the x tile each brick needs is
+gathered HBM->VMEM by the *pipeline itself* via a scalar-prefetched
+block-column index feeding the BlockSpec index_map — the TPU idiom replacing
+the CPU's per-element x[col] gather.
+
+Grid = (num_block_rows, K): the second axis walks the (padded) blocks of one
+block row, accumulating into the y tile that stays resident in VMEM (output
+revisiting is consecutive => Pallas keeps it on-chip until the row is done).
+Reordering quality shows up here exactly as in the paper: fewer/denser
+blocks => fewer grid steps and fewer distinct x tiles fetched.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _bell_kernel(block_cols_ref, blocks_ref, x_ref, y_ref, *, acc_dtype):
+    k = pl.program_id(1)
+
+    @pl.when(k == 0)
+    def _init():
+        y_ref[...] = jnp.zeros_like(y_ref)
+
+    a = blocks_ref[0, 0]      # [bm, bn]
+    xv = x_ref[0]             # [bn, nv]
+    y_ref[0] += jnp.dot(a, xv, preferred_element_type=acc_dtype).astype(y_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def bell_spmm(blocks: jax.Array, block_cols: jax.Array, x2d: jax.Array,
+              interpret: bool = False) -> jax.Array:
+    """y[nbr, bm, nv] = BlockELL(blocks, block_cols) @ x2d[ncb, bn, nv].
+
+    blocks: [nbr, K, bm, bn] (zero padding blocks)
+    block_cols: [nbr, K] int32 (padding -> any valid block, typically 0)
+    """
+    nbr, kk, bm, bn = blocks.shape
+    ncb, bn2, nv = x2d.shape
+    assert bn2 == bn, (bn2, bn)
+    acc_dtype = jnp.float32
+
+    grid = (nbr, kk)
+    return pl.pallas_call(
+        functools.partial(_bell_kernel, acc_dtype=acc_dtype),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((1, 1, bm, bn), lambda i, k, bc: (i, k, 0, 0)),
+                pl.BlockSpec((1, bn, nv), lambda i, k, bc: (bc[i, k], 0, 0)),
+            ],
+            out_specs=pl.BlockSpec((1, bm, nv), lambda i, k, bc: (i, 0, 0)),
+        ),
+        out_shape=jax.ShapeDtypeStruct((nbr, bm, nv), x2d.dtype),
+        interpret=interpret,
+    )(block_cols, blocks, x2d)

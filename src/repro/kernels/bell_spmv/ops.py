@@ -1,0 +1,55 @@
+"""Jit'd public wrapper for Block-ELL SpMV: host-format in, vector out.
+
+Handles padding/reshaping between the logical (m, n) world and the kernel's
+tiled [nbr, K, bm, bn] world, and falls back to the jnp reference on
+non-TPU backends unless interpret mode is forced (tests force it).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ...core.sparse.bell import BlockELL
+from .kernel import bell_spmm
+from .ref import bell_spmm_ref
+
+
+class BellOperator:
+    """Device-resident Block-ELL operator: y = A @ x."""
+
+    def __init__(self, host: BlockELL, dtype=jnp.float32, use_kernel: str = "auto"):
+        self.block_shape = host.block_shape
+        self.shape = host.shape
+        bm, bn = host.block_shape
+        self.ncb = (host.shape[1] + bn - 1) // bn
+        self.blocks = jnp.asarray(host.blocks, dtype=dtype)
+        self.block_cols = jnp.asarray(host.block_cols, dtype=jnp.int32)
+        if use_kernel == "auto":
+            use_kernel = "pallas" if jax.default_backend() == "tpu" else "ref"
+        self.use_kernel = use_kernel
+
+    def __call__(self, x: jax.Array) -> jax.Array:
+        """x: [n] or [n, nv] -> y: [m] or [m, nv]."""
+        squeeze = x.ndim == 1
+        if squeeze:
+            x = x[:, None]
+        n, nv = x.shape
+        bm, bn = self.block_shape
+        pad_n = self.ncb * bn - n
+        x2d = jnp.pad(x, ((0, pad_n), (0, 0))).reshape(self.ncb, bn, nv)
+        if self.use_kernel == "pallas":
+            y = bell_spmm(self.blocks, self.block_cols, x2d)
+        elif self.use_kernel == "interpret":
+            y = bell_spmm(self.blocks, self.block_cols, x2d, interpret=True)
+        else:
+            y = bell_spmm_ref(self.blocks, self.block_cols, x2d)
+        y = y.reshape(-1, nv)[: self.shape[0]]
+        return y[:, 0] if squeeze else y
+
+    def flops(self) -> int:
+        """MXU flops per SpMV (2 * padded block volume)."""
+        nbr, k, bm, bn = self.blocks.shape
+        return 2 * nbr * k * bm * bn

@@ -1,0 +1,10 @@
+"""Pure-jnp oracle for the Block-ELL kernel (same signature as kernel.py)."""
+from __future__ import annotations
+
+import jax
+
+from ...core.spmv.ref import spmv_bell
+
+
+def bell_spmm_ref(blocks: jax.Array, block_cols: jax.Array, x2d: jax.Array) -> jax.Array:
+    return spmv_bell(blocks, block_cols, x2d)

@@ -1,0 +1,87 @@
+"""Pallas TPU kernel: one Mamba2/SSD chunk step (fused).
+
+Motivation (EXPERIMENTS §Roofline): the zamba2 prefill/train cells are the
+most memory-bound in the table because the pure-JAX SSD chunk materializes
+the [T, T, H] decay tensor and the [T, T] score matrix in HBM for every
+chunk. This kernel fuses the whole chunk — cumsum, decay, scores, intra/
+inter terms, and the state update — in VMEM; HBM traffic drops to the
+chunk's inputs + outputs + state (~T*(2P+2N) floats per (batch, head)
+instead of ~T^2).
+
+Grid: (batch, heads) — each program owns one (b, h) slice: T<=256, P, N
+all fit VMEM ([T,T] f32 at T=128 is 64 KiB).
+
+Forward-only (no custom_vjp): used on the inference paths (prefill/decode);
+training keeps the jnp path whose AD is exercised by the smoke tests.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _ssd_chunk_kernel(la_ref, xw_ref, b_ref, c_ref, s_ref, y_ref, sout_ref):
+    la = la_ref[0, :, 0].astype(jnp.float32)           # [T]
+    xw = xw_ref[0, :, 0].astype(jnp.float32)           # [T, P]
+    bm = b_ref[0].astype(jnp.float32)                  # [T, N]
+    cm = c_ref[0].astype(jnp.float32)                  # [T, N]
+    state = s_ref[0, 0].astype(jnp.float32)            # [N, P]
+
+    t = la.shape[0]
+    cum = jnp.cumsum(la)                               # [T]
+    # decay(t,i) = exp(cum_t - cum_i) for i<=t; mask exponent pre-exp
+    expo = cum[:, None] - cum[None, :]
+    tri = jnp.tril(jnp.ones((t, t), jnp.bool_))
+    dec = jnp.exp(jnp.where(tri, expo, -1e30))
+    cb = jnp.dot(cm, bm.T, preferred_element_type=jnp.float32)   # [T, T]
+    y = jnp.dot(cb * dec, xw, preferred_element_type=jnp.float32)
+    # inter-chunk: y_t += exp(cum_t) * (c_t . state)
+    y += jnp.exp(cum)[:, None] * jnp.dot(cm, state,
+                                         preferred_element_type=jnp.float32)
+    # state update
+    dec_end = jnp.exp(cum[-1] - cum)                   # [T]
+    sout = state * jnp.exp(cum[-1]) + jnp.dot(
+        (bm * dec_end[:, None]).T, xw, preferred_element_type=jnp.float32)
+
+    y_ref[0, :, 0] = y.astype(y_ref.dtype)
+    sout_ref[0, 0] = sout.astype(sout_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def ssd_chunk(la, xw, b_mat, c_mat, state, interpret: bool = False):
+    """One SSD chunk for all (batch, head) pairs.
+
+    la:    [B, T, H]    log decay (negative)
+    xw:    [B, T, H, P] discretized input (x * dt)
+    b_mat: [B, T, N]
+    c_mat: [B, T, N]
+    state: [B, H, N, P] incoming state
+    Returns (y [B, T, H, P], state_out [B, H, N, P]).
+    """
+    bsz, t, h = la.shape
+    p = xw.shape[-1]
+    n = b_mat.shape[-1]
+    grid = (bsz, h)
+    return pl.pallas_call(
+        _ssd_chunk_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, t, 1), lambda b, hh: (b, 0, hh)),
+            pl.BlockSpec((1, t, 1, p), lambda b, hh: (b, 0, hh, 0)),
+            pl.BlockSpec((1, t, n), lambda b, hh: (b, 0, 0)),
+            pl.BlockSpec((1, t, n), lambda b, hh: (b, 0, 0)),
+            pl.BlockSpec((1, 1, n, p), lambda b, hh: (b, hh, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, t, 1, p), lambda b, hh: (b, 0, hh, 0)),
+            pl.BlockSpec((1, 1, n, p), lambda b, hh: (b, hh, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bsz, t, h, p), xw.dtype),
+            jax.ShapeDtypeStruct((bsz, h, n, p), state.dtype),
+        ],
+        interpret=interpret,
+    )(la, xw, b_mat, c_mat, state)

@@ -1,0 +1,38 @@
+"""Jit'd wrapper: full-sequence SSD using the fused chunk kernel
+(lax.scan over chunks, kernel per step). Forward-only — serving/prefill."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import ssd_chunk
+from .ref import ssd_chunk_ref
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "use_kernel"))
+def ssd_scan(la, xw, b_mat, c_mat, state0, chunk: int = 128,
+             use_kernel: str = "ref"):
+    """la [B,S,H]; xw [B,S,H,P]; b/c [B,S,N]; state0 [B,H,N,P].
+    Returns (y [B,S,H,P], final state). S must divide by `chunk`."""
+    bsz, s, h = la.shape
+    nc = s // chunk
+
+    def rc(t_):
+        return jnp.moveaxis(t_.reshape(bsz, nc, chunk, *t_.shape[2:]), 1, 0)
+
+    fn = {
+        "pallas": lambda *a: ssd_chunk(*a),
+        "interpret": lambda *a: ssd_chunk(*a, interpret=True),
+        "ref": ssd_chunk_ref,
+    }[use_kernel]
+
+    def body(state, inp):
+        la_i, xw_i, b_i, c_i = inp
+        y, new_state = fn(la_i, xw_i, b_i, c_i, state)
+        return new_state, y
+
+    final, ys = jax.lax.scan(body, state0,
+                             (rc(la), rc(xw), rc(b_mat), rc(c_mat)))
+    return jnp.moveaxis(ys, 0, 1).reshape(bsz, s, h, xw.shape[-1]), final

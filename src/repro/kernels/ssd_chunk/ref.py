@@ -1,0 +1,26 @@
+"""Pure-jnp oracle for the SSD chunk kernel (mirrors the scan body of
+models/layers/mamba2._ssd_chunked for ONE chunk)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def ssd_chunk_ref(la, xw, b_mat, c_mat, state):
+    """Same contract as kernel.ssd_chunk."""
+    la = la.astype(jnp.float32)
+    cum = jnp.cumsum(la, axis=1)                        # [B,T,H]
+    t = la.shape[1]
+    tri = jnp.tril(jnp.ones((t, t), bool))
+    expo = cum[:, :, None, :] - cum[:, None, :, :]      # [B,T,T,H]
+    expo = jnp.where(tri[None, :, :, None], expo, -1e30)
+    dec = jnp.exp(expo)
+    cb = jnp.einsum("btn,bin->bti", c_mat, b_mat)
+    xwf = xw.astype(jnp.float32)
+    y = jnp.einsum("bti,btih,bihp->bthp", cb, dec, xwf)
+    y += jnp.einsum("btn,bth,bhnp->bthp", c_mat,
+                    jnp.exp(cum), state.astype(jnp.float32))
+    dec_end = jnp.exp(cum[:, -1:, :] - cum)             # [B,T,H]
+    sout = state.astype(jnp.float32) * \
+        jnp.exp(cum[:, -1, :])[..., None, None] + \
+        jnp.einsum("btn,bth,bthp->bhnp", b_mat, dec_end, xwf)
+    return y.astype(xw.dtype), sout.astype(state.dtype)

@@ -1,0 +1,231 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede any jax import: device count locks at first init.
+#
+# Multi-pod dry-run (spec deliverable e): lower + compile every
+# (architecture x input shape) on the production meshes and record
+# memory/cost/collective analysis for the roofline.
+#
+#   PYTHONPATH=src python -m repro.launch.dryrun --arch qwen2-7b --shape train_4k
+#   PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod] [--no-compile]
+#
+# Results land in benchmarks/results/dryrun/<cell>.json.
+
+import argparse
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..configs import registry
+from ..configs.base import SHAPES
+from ..distributed import sharding as SH
+from ..models import model as MDL
+from ..serving.decode import make_serve_step
+from ..training import optimizer as OPT
+from ..training import train_loop as TL
+from . import hlo as HLO
+from . import hlo_cost as HLO_COST
+from . import specs as SPECS
+from .mesh import dp_axes_of, make_production_mesh
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                           "benchmarks", "results", "dryrun")
+
+
+def _param_shardings(cfg, mesh, dtype=jnp.bfloat16, weight_stationary=False):
+    """weight_stationary (§Perf serving iteration): drop the FSDP ('data')
+    axis from param specs — weights live TP-sharded (model axis) only, so
+    decode pays ZERO per-token weight gathers. Affordable because serving
+    keeps bf16 weights and no optimizer state (104B: 13 GiB/dev)."""
+    pshape = jax.eval_shape(
+        lambda k: MDL.init_params(cfg, k, dtype), jax.random.PRNGKey(0))
+    specs = SH.param_specs(pshape)
+    if weight_stationary:
+        from jax.sharding import PartitionSpec as P
+
+        specs = jax.tree_util.tree_map(
+            lambda sp: P(*[None if a == "data" else a for a in sp]),
+            specs, is_leaf=lambda x: isinstance(x, P))
+    specs = SH.validate_specs(pshape, specs, mesh)
+    return pshape, SH.named_shardings(specs, mesh)
+
+
+def lower_cell(arch: str, shape_name: str, multi_pod: bool,
+               microbatches: int | None = None, kv_chunk: int = 1024,
+               weight_stationary: bool = False, kv_shard: str = "seq"):
+    """Builds and lowers the cell's step function. Returns (lowered, meta)."""
+    cfg = registry.get(arch)
+    shape = SHAPES[shape_name]
+    if microbatches is None:
+        # per-device micro batch of 1 for >50B models, 2 otherwise — but the
+        # per-microbatch batch must still cover the dp axes (pod x data)
+        microbatches = 16 if cfg.param_count() > 5e10 else 8
+        dp_size = (2 * 16) if multi_pod else 16
+        microbatches = max(1, min(microbatches,
+                                  shape.global_batch // dp_size))
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    dp_axes = dp_axes_of(mesh)
+
+    with mesh:
+        if shape.kind == "train":
+            opt_cfg = OPT.OptConfig()
+            step, state_sh_fn, _ = TL.make_train_step(
+                cfg, opt_cfg, mesh, dp_axes, microbatches=microbatches)
+            state_shape = TL.init_state_shape(cfg)
+            state_sh = state_sh_fn(state_shape["params"])
+            batch = SPECS.batch_specs(cfg, shape, mesh, dp_axes)
+            fn = jax.jit(step, in_shardings=(state_sh, None),
+                         out_shardings=(state_sh, None),
+                         donate_argnums=(0,))
+            lowered = fn.lower(state_shape, batch)
+        elif shape.kind == "prefill":
+            pshape, psh = _param_shardings(cfg, mesh,
+                                           weight_stationary=weight_stationary)
+
+            def prefill(params, batch):
+                logits, _, _ = MDL.forward(params, batch, cfg, mesh=mesh,
+                                           dp_axes=dp_axes, train=False,
+                                           kv_chunk=kv_chunk)
+                return jnp.argmax(logits[:, -1], axis=-1)
+
+            batch = SPECS.batch_specs(cfg, shape, mesh, dp_axes)
+            fn = jax.jit(prefill, in_shardings=(psh, None))
+            lowered = fn.lower(pshape, batch)
+        else:  # decode
+            pshape, psh = _param_shardings(cfg, mesh,
+                                           weight_stationary=weight_stationary)
+            serve = make_serve_step(cfg, mesh=mesh, dp_axes=dp_axes)
+            cache_shape = SPECS.cache_shape(cfg, shape)
+            cache_sp = SPECS.cache_specs(cache_shape, cfg, shape, mesh, dp_axes,
+                                         kv_shard=kv_shard)
+            cache_sh = SH.named_shardings(cache_sp, mesh)
+            batch = SPECS.batch_specs(cfg, shape, mesh, dp_axes)
+            fn = jax.jit(serve, in_shardings=(psh, None, cache_sh),
+                         out_shardings=(None, cache_sh),
+                         donate_argnums=(2,))
+            lowered = fn.lower(pshape, batch, cache_shape)
+    meta = {"arch": arch, "shape": shape_name,
+            "mesh": "2x16x16" if multi_pod else "16x16",
+            "kind": shape.kind,
+            "params": cfg.param_count(),
+            "active_params": cfg.active_param_count()}
+    return lowered, meta
+
+
+def analyze(lowered, compile_: bool = True):
+    rec = {}
+    t0 = time.time()
+    if compile_:
+        compiled = lowered.compile()
+        rec["compile_s"] = time.time() - t0
+        try:
+            ca = compiled.cost_analysis()
+            ca = ca[0] if isinstance(ca, (list, tuple)) else ca
+            rec["flops"] = float(ca.get("flops", -1))
+            rec["bytes_accessed"] = float(ca.get("bytes accessed", -1))
+        except Exception as e:  # pragma: no cover
+            rec["cost_error"] = str(e)
+        try:
+            ma = compiled.memory_analysis()
+            for attr in ("temp_size_in_bytes", "argument_size_in_bytes",
+                         "output_size_in_bytes", "alias_size_in_bytes",
+                         "generated_code_size_in_bytes"):
+                v = getattr(ma, attr, None)
+                if v is not None:
+                    rec[attr] = int(v)
+        except Exception as e:  # pragma: no cover
+            rec["memory_error"] = str(e)
+        text = compiled.as_text()
+    else:
+        text = lowered.as_text()
+    # scan-aware walker (trip-count corrected): authoritative for roofline
+    walk = HLO_COST.analyze_text(text)
+    rec["walk_flops"] = walk["flops"]
+    rec["walk_bytes"] = walk["bytes"]
+    rec["collectives"] = {k: int(v) for k, v in walk["collectives"].items()}
+    rec["op_hist"] = HLO.op_histogram(text)
+    return rec
+
+
+def run_cell(arch, shape_name, multi_pod, compile_=True, out_dir=RESULTS_DIR,
+             **opt):
+    name = f"{arch}__{shape_name}__{'2x16x16' if multi_pod else '16x16'}"
+    os.makedirs(out_dir, exist_ok=True)
+    out_path = os.path.join(out_dir, name + ".json")
+    t0 = time.time()
+    try:
+        lowered, meta = lower_cell(arch, shape_name, multi_pod, **opt)
+        meta.update({k: v for k, v in opt.items() if v})
+        meta["lower_s"] = time.time() - t0
+        rec = {**meta, **analyze(lowered, compile_)}
+        rec["status"] = "ok"
+    except Exception as e:
+        rec = {"arch": arch, "shape": shape_name,
+               "mesh": "2x16x16" if multi_pod else "16x16",
+               "status": "error", "error": f"{type(e).__name__}: {e}",
+               "traceback": traceback.format_exc()[-4000:]}
+    with open(out_path, "w") as f:
+        json.dump(rec, f, indent=1)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--no-compile", action="store_true")
+    ap.add_argument("--out", default=RESULTS_DIR)
+    ap.add_argument("--microbatches", type=int, default=None)
+    ap.add_argument("--weight-stationary", action="store_true")
+    ap.add_argument("--kv-shard", default="seq", choices=["seq", "hd"])
+    ap.add_argument("--moe-no-fsdp", action="store_true")
+    args = ap.parse_args()
+
+    if args.moe_no_fsdp:
+        SH.MOE_FSDP = False
+    cells = []
+    if args.all:
+        for arch, sname, runnable, reason in registry.runnable_cells():
+            if not runnable:
+                print(f"SKIP {arch} x {sname}: {reason}")
+                continue
+            cells.append((arch, sname))
+    else:
+        cells = [(args.arch, args.shape)]
+    meshes = [args.multi_pod] if not args.both_meshes else [False, True]
+
+    failures = 0
+    for arch, sname in cells:
+        for mp in meshes:
+            t0 = time.time()
+            rec = run_cell(arch, sname, mp, compile_=not args.no_compile,
+                           out_dir=args.out,
+                           microbatches=args.microbatches,
+                           weight_stationary=args.weight_stationary,
+                           kv_shard=args.kv_shard)
+            ok = rec["status"] == "ok"
+            failures += (not ok)
+            msg = (f"flops={rec.get('flops', 0):.3e} "
+                   f"coll={rec.get('collectives', {}).get('total', 0):.3e}B"
+                   if ok else rec.get("error", ""))
+            print(f"[dryrun] {arch} x {sname} x "
+                  f"{'2x16x16' if mp else '16x16'}: {rec['status']} "
+                  f"({time.time() - t0:.0f}s) {msg}", flush=True)
+            if ok and "temp_size_in_bytes" in rec:
+                per_dev_gb = rec["temp_size_in_bytes"] / 2**30
+                print(f"         temp={per_dev_gb:.2f}GiB/dev "
+                      f"args={rec.get('argument_size_in_bytes', 0)/2**30:.2f}GiB",
+                      flush=True)
+    raise SystemExit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,110 @@
+"""HLO-text analysis: collective-byte accounting for the roofline.
+
+cost_analysis() has no collective term, so we parse the compiled (SPMD,
+per-device) HLO and account bytes for every communication op
+(spec: ROOFLINE ANALYSIS).
+
+The scheduled-HLO rendering shows only RESULT types on op lines
+(`%all-gather = f32[64,64]{0,1} all-gather(%bitcast), replica_groups=...`),
+so per-op OPERAND bytes are derived from the result + group size:
+    all-reduce:          operand = result
+    all-gather:          operand = result / group_size
+    reduce-scatter:      operand = result * group_size
+    all-to-all:          operand = result
+    collective-permute:  operand = result
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from typing import Dict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+_SHAPE_RE = re.compile(
+    r"\b(pred|s8|u8|s16|u16|f16|bf16|s32|u32|f32|s64|u64|f64|c64|c128)\[([0-9,]*)\]")
+_OP_RE = re.compile(r"=\s*(\(?[^)=]*?\)?)\s*([a-z][a-z0-9\-]*)\(")
+_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_SET_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES[dtype]
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_RE.search(line)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_SET_RE.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    return 1
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Per-kind operand bytes (+ 'total', 'wire') for one device's program.
+
+    'wire' estimates bytes actually moved per device with ring algorithms:
+      all-reduce 2*S*(g-1)/g, all-gather/reduce-scatter S*(g-1)/g,
+      all-to-all S*(g-1)/g, collective-permute S.
+    """
+    out: Dict[str, float] = defaultdict(float)
+    wire = 0.0
+    for raw in hlo_text.splitlines():
+        line = raw.strip()
+        m = _OP_RE.search(line)
+        if not m:
+            continue
+        op = m.group(2)
+        base = op.removesuffix("-start")
+        if base not in COLLECTIVES or op.endswith("-done"):
+            continue
+        result_bytes = sum(_shape_bytes(dt, dims)
+                           for dt, dims in _SHAPE_RE.findall(m.group(1)))
+        if result_bytes == 0:  # result type may sit left of '=' oddly; fallback
+            result_bytes = sum(_shape_bytes(dt, dims)
+                               for dt, dims in _SHAPE_RE.findall(line[:m.start(2)]))
+        g = max(_group_size(line), 1)
+        if base == "all-gather":
+            operand = result_bytes / g
+            wire += result_bytes * (g - 1) / g
+        elif base == "reduce-scatter":
+            operand = result_bytes * g
+            wire += result_bytes * (g - 1)
+        elif base == "all-reduce":
+            operand = result_bytes
+            wire += 2 * result_bytes * (g - 1) / g
+        elif base == "all-to-all":
+            operand = result_bytes
+            wire += result_bytes * (g - 1) / g
+        else:  # collective-permute
+            operand = result_bytes
+            wire += result_bytes
+        out[base] += operand
+        out[base + "_count"] += 1
+    out["total"] = sum(v for k, v in out.items() if k in COLLECTIVES)
+    out["wire"] = wire
+    return {k: (int(v) if not k.endswith("_count") else int(v))
+            for k, v in out.items()}
+
+
+def op_histogram(hlo_text: str, ops=("fusion", "dot", "custom-call",
+                                     "while", "dynamic-update-slice")) -> Dict[str, int]:
+    hist: Dict[str, int] = defaultdict(int)
+    for line in hlo_text.splitlines():
+        m = _OP_RE.search(line.strip())
+        if m and m.group(2) in ops:
+            hist[m.group(2)] += 1
+    return dict(hist)

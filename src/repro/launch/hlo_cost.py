@@ -1,0 +1,284 @@
+"""HLO cost walker: scan-aware FLOP / byte / collective accounting.
+
+XLA's compiled.cost_analysis() counts a `while` body ONCE, so models built
+on lax.scan (all of ours — layers, microbatches, KV chunks) are undercounted
+by the trip count. This walker parses the scheduled HLO text, builds the
+computation call graph, and multiplies through `known_trip_count`:
+
+  flops      — 2 * numel(result) * prod(lhs contracting dims) per dot
+               (matmul flops; elementwise excluded, dots dominate these models)
+  bytes      — sum over fusion/dot/copy/collective ops of
+               (operand bytes + result bytes): post-fusion HBM traffic model
+  collectives— operand bytes per kind x trip counts (feeds the roofline's
+               collective term; same conventions as hlo.collective_bytes)
+
+Validated against closed-form matmul counts in tests/test_hlo_cost.py.
+"""
+from __future__ import annotations
+
+import json
+import re
+from collections import defaultdict
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "f16": 2, "bf16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16, "token": 0, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([0-9,]*)\]")
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%([\w\.\-]+)\s*=\s*(\(?.*?\)?)\s*([a-z][a-z0-9\-]*)\(")
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s*\(.*->.*\{\s*$")
+_TRIP_RE = re.compile(r"known_trip_count\":\{\"n\":\"(\d+)\"")
+_CALLS_RE = re.compile(r"calls=%?([\w\.\-]+)")
+_TOAPPLY_RE = re.compile(r"to_apply=%?([\w\.\-]+)")
+_BODY_RE = re.compile(r"body=%?([\w\.\-]+)")
+_COND_BRANCH_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+_LHS_CDIMS_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_SET_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_RE.search(line)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_SET_RE.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    return 1
+
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+
+def _shape_bytes_all(type_str: str) -> int:
+    return sum(_numel(dims) * _DTYPE_BYTES.get(dt, 4)
+               for dt, dims in _SHAPE_RE.findall(type_str))
+
+
+def _numel(dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n
+
+
+@dataclass
+class Op:
+    name: str
+    kind: str
+    type_str: str
+    operands: List[str]
+    line: str
+
+
+@dataclass
+class Computation:
+    name: str
+    ops: Dict[str, Op] = field(default_factory=dict)
+    order: List[str] = field(default_factory=list)
+
+
+def parse_module(text: str) -> Dict[str, Computation]:
+    comps: Dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    for raw in text.splitlines():
+        line = raw.rstrip()
+        mc = _COMP_RE.match(line)
+        if mc and ("->" in line):
+            cur = Computation(mc.group(1))
+            comps[cur.name] = cur
+            continue
+        if line.strip() == "}":
+            cur = None
+            continue
+        if cur is None:
+            continue
+        md = _DEF_RE.match(line)
+        if not md:
+            continue
+        name, type_str, kind = md.groups()
+        # operand names: %refs inside the first paren group
+        rest = line[md.end():]
+        depth, end = 1, len(rest)
+        for i, ch in enumerate(rest):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    end = i
+                    break
+        operands = re.findall(r"%([\w\.\-]+)", rest[:end])
+        op = Op(name, kind, type_str, operands, line)
+        cur.ops[name] = op
+        cur.order.append(name)
+    return comps
+
+
+class CostWalker:
+    def __init__(self, comps: Dict[str, Computation]):
+        self.comps = comps
+        self._memo: Dict[str, Tuple[float, float, dict]] = {}
+
+    def _op_shape_bytes(self, comp: Computation, opname: str) -> int:
+        op = comp.ops.get(opname)
+        return _shape_bytes_all(op.type_str) if op else 0
+
+    def _root_kind(self, comp_name: Optional[str]) -> str:
+        comp = self.comps.get(comp_name or "")
+        if comp is None or not comp.order:
+            return ""
+        for on in comp.order:
+            if "ROOT" in comp.ops[on].line:
+                return comp.ops[on].kind
+        return comp.ops[comp.order[-1]].kind
+
+    def _dot_flops(self, comp: Computation, op: Op) -> float:
+        result_elems = sum(_numel(dims) for _, dims in
+                           _SHAPE_RE.findall(op.type_str))
+        m = _LHS_CDIMS_RE.search(op.line)
+        if not m or not op.operands:
+            return 2.0 * result_elems  # degenerate
+        lhs = comp.ops.get(op.operands[0])
+        if lhs is None:
+            return 2.0 * result_elems
+        shapes = _SHAPE_RE.findall(lhs.type_str)
+        if not shapes:
+            return 2.0 * result_elems
+        lhs_dims = shapes[0][1].split(",") if shapes[0][1] else []
+        k = 1
+        for ci in (m.group(1).split(",") if m.group(1) else []):
+            idx = int(ci)
+            if idx < len(lhs_dims):
+                k *= int(lhs_dims[idx])
+        return 2.0 * result_elems * k
+
+    def comp_cost(self, name: str) -> Tuple[float, float, dict]:
+        """Returns (flops, bytes, collectives dict) for one execution."""
+        if name in self._memo:
+            return self._memo[name]
+        comp = self.comps.get(name)
+        if comp is None:
+            return 0.0, 0.0, {}
+        flops = 0.0
+        bytes_ = 0.0
+        coll: Dict[str, float] = defaultdict(float)
+        for opname in comp.order:
+            op = comp.ops[opname]
+            kind = op.kind
+            base = kind.removesuffix("-start")
+            if kind == "dot":
+                flops += self._dot_flops(comp, op)
+                bytes_ += _shape_bytes_all(op.type_str) + sum(
+                    self._op_shape_bytes(comp, o) for o in op.operands)
+            elif kind == "fusion":
+                m = _CALLS_RE.search(op.line)
+                called = m.group(1) if m else None
+                if called:
+                    f, b, c = self.comp_cost(called)
+                    flops += f
+                    for k, v in c.items():
+                        coll[k] += v
+                result_b = _shape_bytes_all(op.type_str)
+                operand_b = [self._op_shape_bytes(comp, o) for o in op.operands]
+                total = result_b + sum(operand_b)
+                # in-place / sliced-access fusions: a fused
+                # dynamic-update-slice aliases its buffer (read+write only
+                # the slice); dynamic-slice / gather read only the slice.
+                # Billing the whole buffer makes decode look 100-1000x more
+                # memory-bound than it is (KV caches in the layer scan).
+                root = self._root_kind(called)
+                if root == "dynamic-update-slice" and operand_b:
+                    total -= 2 * max(operand_b)
+                elif root in ("dynamic-slice", "gather") and operand_b:
+                    total -= max(operand_b)
+                bytes_ += max(total, result_b // 64, 0)
+            elif kind == "while":
+                m = _BODY_RE.search(op.line)
+                trips = 1
+                mt = _TRIP_RE.search(op.line)
+                if mt:
+                    trips = int(mt.group(1))
+                if m:
+                    f, b, c = self.comp_cost(m.group(1))
+                    flops += f * trips
+                    bytes_ += b * trips
+                    for k, v in c.items():
+                        coll[k] += v * trips
+            elif kind in ("call", "async-start"):
+                m = _TOAPPLY_RE.search(op.line) or _CALLS_RE.search(op.line)
+                if m:
+                    f, b, c = self.comp_cost(m.group(1))
+                    flops += f
+                    bytes_ += b
+                    for k, v in c.items():
+                        coll[k] += v
+            elif kind == "conditional":
+                m = _COND_BRANCH_RE.search(op.line)
+                if m:
+                    branches = re.findall(r"%?([\w\.\-]+)", m.group(1))
+                    costs = [self.comp_cost(b) for b in branches]
+                    if costs:
+                        f, b, c = max(costs, key=lambda t: t[0] + t[1])
+                        flops += f
+                        bytes_ += b
+                        for k, v in c.items():
+                            coll[k] += v
+            elif base in COLLECTIVES and not kind.endswith("-done"):
+                result_bytes = _shape_bytes_all(op.type_str)
+                g = _group_size(op.line)
+                if base == "all-gather":
+                    operand = result_bytes / max(g, 1)
+                    wire = result_bytes * (g - 1) / max(g, 1)
+                elif base == "reduce-scatter":
+                    operand = result_bytes * g
+                    wire = result_bytes * (g - 1)
+                elif base == "all-reduce":
+                    operand = result_bytes
+                    wire = 2 * result_bytes * (g - 1) / max(g, 1)
+                elif base == "all-to-all":
+                    operand = result_bytes
+                    wire = result_bytes * (g - 1) / max(g, 1)
+                else:
+                    operand = result_bytes
+                    wire = result_bytes
+                coll[base] += operand
+                coll[base + "_count"] += 1
+                coll["wire"] += wire
+                bytes_ += result_bytes + operand
+            elif kind == "dynamic-update-slice":
+                # in-place: read+write the UPDATE (operand 1), not the buffer
+                upd = (self._op_shape_bytes(comp, op.operands[1])
+                       if len(op.operands) > 1 else 0)
+                bytes_ += 2 * upd
+            elif kind in ("dynamic-slice", "gather"):
+                bytes_ += _shape_bytes_all(op.type_str)  # slice read+write
+            elif kind in ("copy", "copy-start", "transpose", "reshape",
+                          "broadcast", "scatter", "sort",
+                          "reduce", "convert", "iota", "concatenate", "pad",
+                          "slice", "select-and-scatter", "reverse", "rng",
+                          "compare", "add", "multiply", "subtract", "divide",
+                          "exponential", "tanh", "select"):
+                bytes_ += _shape_bytes_all(op.type_str)
+        res = (flops, bytes_, dict(coll))
+        self._memo[name] = res
+        return res
+
+
+def analyze_text(hlo_text: str, entry: Optional[str] = None) -> dict:
+    comps = parse_module(hlo_text)
+    if not comps:
+        return {"flops": 0, "bytes": 0, "collectives": {}}
+    if entry is None:
+        # entry computation: the one marked ENTRY (first in file heuristics)
+        m = re.search(r"^ENTRY\s+%?([\w\.\-]+)", hlo_text, re.M)
+        entry = m.group(1) if m else next(iter(comps))
+    walker = CostWalker(comps)
+    flops, bytes_, coll = walker.comp_cost(entry)
+    coll["total"] = sum(v for k, v in coll.items() if k in COLLECTIVES)
+    return {"flops": flops, "bytes": bytes_, "collectives": coll}

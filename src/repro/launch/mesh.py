@@ -1,0 +1,32 @@
+"""Production mesh builders (spec: MULTI-POD DRY-RUN step 1).
+
+Functions, not module-level constants — importing this module never touches
+jax device state (the dry-run sets XLA_FLAGS before any jax init)."""
+from __future__ import annotations
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    import jax
+
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_cpu_mesh(data: int = 1, model: int = 1):
+    """Tiny mesh for CPU tests (1 device => (1,1))."""
+    import jax
+
+    return jax.make_mesh((data, model), ("data", "model"))
+
+
+def dp_axes_of(mesh) -> tuple:
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+HardwareSpec = {
+    # TPU v5e per chip (ROOFLINE ANALYSIS constants from the spec)
+    "peak_flops_bf16": 197e12,   # FLOP/s
+    "hbm_bw": 819e9,             # B/s
+    "ici_bw": 50e9,              # B/s per link
+}

@@ -1,0 +1,119 @@
+"""input_specs(): ShapeDtypeStruct stand-ins + shardings for every
+(arch x shape) dry-run cell — weak-type-correct, shardable, no allocation."""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..configs.base import ModelConfig, ShapeConfig
+from ..models import model as MDL
+
+
+def _sds(shape, dtype, mesh=None, spec=None):
+    if mesh is None:
+        return jax.ShapeDtypeStruct(shape, dtype)
+    return jax.ShapeDtypeStruct(shape, dtype,
+                                sharding=NamedSharding(mesh, spec or P()))
+
+
+def batch_specs(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh | None,
+                dp_axes: Tuple[str, ...]) -> Dict[str, Any]:
+    """ShapeDtypeStructs for the model input batch of this cell."""
+    b = shape.global_batch
+    s = 1 if shape.kind == "decode" else shape.seq_len
+    dp = dp_axes if (mesh is not None and b % _axes_size(mesh, dp_axes) == 0
+                     and _axes_size(mesh, dp_axes) > 1) else None
+    tok_spec = P(dp, None)
+    out: Dict[str, Any] = {}
+    if cfg.embed_inputs:
+        out["tokens"] = _sds((b, s), jnp.int32, mesh, tok_spec)
+    else:
+        out["embeds"] = _sds((b, s, cfg.d_model), jnp.bfloat16, mesh,
+                             P(dp, None, None))
+        out["labels"] = _sds((b, s), jnp.int32, mesh, tok_spec)
+    if cfg.cross_attn_period:
+        out["image_embeds"] = _sds((b, cfg.num_image_tokens, cfg.d_model),
+                                   jnp.bfloat16, mesh, P(dp, None, None))
+    return out
+
+
+def _axes_size(mesh: Mesh, axes) -> int:
+    n = 1
+    for a in (axes or ()):
+        n *= mesh.shape[a]
+    return n
+
+
+def cache_shape(cfg: ModelConfig, shape: ShapeConfig, dtype=jnp.bfloat16):
+    """ShapeDtypeStruct pytree of the decode cache (seq_len-long)."""
+    return jax.eval_shape(functools.partial(
+        MDL.init_cache, cfg, shape.global_batch, shape.seq_len, dtype))
+
+
+def cache_specs(cache_tree, cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,
+                dp_axes: Tuple[str, ...], kv_shard: str = "seq"):
+    """Path-heuristic sharding for the cache (DESIGN.md §4):
+    batch -> dp axes (when divisible); kv head_dim / state channels ->
+    "model" (when divisible); for global_batch=1 long-context cells the KV
+    SEQUENCE dim shards over "data" instead."""
+    b = shape.global_batch
+    dp = dp_axes if (b % _axes_size(mesh, dp_axes) == 0
+                     and _axes_size(mesh, dp_axes) > 1) else None
+    seq_shard = "data" if dp is None else None  # long_500k: shard the cache seq
+    msize = mesh.shape["model"]
+
+    def spec_for(path, leaf):
+        name = "/".join(str(getattr(k, "key", getattr(k, "idx", ""))) for k in path)
+        nd = len(leaf.shape)
+        if leaf.shape == () or nd == 0:
+            return P()
+        if name.endswith("len"):
+            return P()
+        def last_model(dim):
+            return "model" if dim % msize == 0 else None
+        last = name.rsplit("/", 1)[-1]
+        if last in ("k", "v"):
+            # [..., B, S, KVH, HD] — shard the SEQ dim over "model"
+            # (flash-decode: per-shard partial softmax + tiny psums). Sharding
+            # HD instead conflicts with the attention einsum and XLA emits a
+            # full cache reshard copy per layer (§Perf iteration, Cell C).
+            lead = [None] * (nd - 4)
+            sdim = leaf.shape[-3]
+            if kv_shard == "hd":  # baseline variant (§Perf Cell C before)
+                sshard = seq_shard if (seq_shard and
+                                       sdim % mesh.shape["data"] == 0) else None
+                return P(*lead, dp, sshard, None, last_model(leaf.shape[-1]))
+            if dp is None:  # long_500k: batch=1 -> seq over data AND model
+                axes = tuple(a for a in ("data", "model")
+                             if sdim % _axes_size(mesh, (a,)) == 0)
+                if axes and sdim % _axes_size(mesh, axes) != 0:
+                    axes = axes[:1]
+                return P(*lead, None, axes or None, None, None)
+            sshard = "model" if sdim % msize == 0 else None
+            return P(*lead, dp, sshard, None, None)
+        if "wkv" in name:      # [L, B, H, D, D]
+            return P(None, dp, last_model(leaf.shape[-3]), None, None)
+        if "shift" in name:    # [L, B, 1, d]
+            return P(None, dp, None, last_model(leaf.shape[-1]))
+        if "conv" in name:     # [..., B, W-1, C]
+            lead = [None] * (nd - 3)
+            return P(*lead, dp, None, last_model(leaf.shape[-1]))
+        if "ssm" in name:      # [..., B, H, N, Pd]
+            lead = [None] * (nd - 4)
+            return P(*lead, dp, last_model(leaf.shape[-3]), None, None)
+        return P()
+
+    return jax.tree_util.tree_map_with_path(spec_for, cache_tree)
+
+
+def with_shardings(shape_tree, spec_tree, mesh: Mesh):
+    return jax.tree_util.tree_map(
+        lambda sds, sp: jax.ShapeDtypeStruct(
+            sds.shape, sds.dtype, sharding=NamedSharding(mesh, sp)),
+        shape_tree, spec_tree,
+        is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))

@@ -1,0 +1,168 @@
+import os
+if "xla_force_host_platform_device_count" not in os.environ.get("XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ must precede jax import (same rule as dryrun.py).
+#
+# Distributed-SpMV dry-run: the paper's own workload (--arch spmv) on the
+# production mesh. Lowers the 1-D (row panels + x all-gather) and 2-D
+# (rows x cols + partial-y reduce) layouts for a synthetic 4.2M-row matrix
+# and reports the collective bytes of each — the DESIGN.md §4 / EXPERIMENTS
+# beyond-paper comparison, measured from HLO rather than claimed.
+
+import argparse
+import json
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.experimental.shard_map import shard_map
+
+from ..core.spmv import ref
+from . import hlo_cost
+from .mesh import make_production_mesh
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                       "benchmarks", "results")
+
+# synthetic production matrix: 4.19M rows, ~16 nnz/row, 8x128 bricks
+M_ROWS = 1 << 22
+BM, BN = 8, 128
+K_1D = 32          # padded blocks per block-row (1-D panels)
+ITERS = 8          # CG-like repeated SpMV (xs swap)
+
+
+def lower_1d(mesh: Mesh):
+    n_dev = mesh.devices.size
+    nbr_l = M_ROWS // n_dev // BM
+    panel_n = M_ROWS // n_dev
+    axes = tuple(mesh.axis_names)
+
+    def step(blocks, cols, x):
+        def body(b, c, xl):
+            def one(x_local, _):
+                # CG dataflow: the updated (panel-sharded) vector must be
+                # re-gathered EVERY iteration — the 1-D layout's cost.
+                xs = jax.lax.all_gather(x_local, axes, tiled=True)
+                y = ref.spmv_bell(b[0], c[0], xs.reshape(-1, BN, 1))
+                return y.reshape(-1)[:panel_n], None
+            xf, _ = jax.lax.scan(one, xl[0], None, length=ITERS)
+            return xf[None]
+        f = shard_map(body, mesh=mesh, in_specs=(P(axes), P(axes), P(axes)),
+                      out_specs=P(axes))
+        return f(blocks, cols, x)
+
+    blocks = jax.ShapeDtypeStruct((n_dev, nbr_l, K_1D, BM, BN), jnp.float32,
+                                  sharding=NamedSharding(mesh, P(axes)))
+    cols = jax.ShapeDtypeStruct((n_dev, nbr_l, K_1D), jnp.int32,
+                                sharding=NamedSharding(mesh, P(axes)))
+    x = jax.ShapeDtypeStruct((n_dev, panel_n), jnp.float32,
+                             sharding=NamedSharding(mesh, P(axes)))
+    return jax.jit(step).lower(blocks, cols, x)
+
+
+def lower_2d(mesh: Mesh):
+    d, m = mesh.shape["data"], mesh.shape["model"]
+    nbr_l = M_ROWS // d // BM
+    seg_n = M_ROWS // m
+    k2 = max(K_1D // m, 1) * (1 if K_1D // m else 1)
+    k2 = max(K_1D // m, 2)
+
+    def step(blocks, cols, x_segs):
+        def body(b, c, xl):
+            def one(x_, _):
+                y = ref.spmv_bell(b[0, 0], c[0, 0], x_.reshape(-1, BN, 1))
+                y = jax.lax.psum(y.reshape(-1), "model")     # combine partials
+                # next x segment for THIS model rank = slice of y (CG swap):
+                x_next = jax.lax.dynamic_slice_in_dim(
+                    y, 0, seg_n // d if seg_n // d else seg_n, 0)
+                x_next = jax.lax.all_gather(x_next, "data", tiled=True)
+                return x_next[:x_.shape[0]], None
+            x0 = jax.lax.pcast(xl[0], ("data",), to="varying")
+            xf, _ = jax.lax.scan(one, x0, None, length=ITERS)
+            return xf[None]
+        f = shard_map(body, mesh=mesh,
+                      in_specs=(P("data", "model"), P("data", "model"),
+                                P("model")),
+                      out_specs=P("model"), check_rep=False)
+        return f(blocks, cols, x_segs)
+
+    blocks = jax.ShapeDtypeStruct((d, m, nbr_l, k2, BM, BN), jnp.float32,
+                                  sharding=NamedSharding(mesh, P("data", "model")))
+    cols = jax.ShapeDtypeStruct((d, m, nbr_l, k2), jnp.int32,
+                                sharding=NamedSharding(mesh, P("data", "model")))
+    x = jax.ShapeDtypeStruct((m, seg_n), jnp.float32,
+                             sharding=NamedSharding(mesh, P("model")))
+    return jax.jit(step).lower(blocks, cols, x)
+
+
+def lower_halo(mesh: Mesh, halo: int = 128):
+    """RCM-enabled halo exchange (bandwidth <= halo after reordering):
+    two ring permutes instead of the all-gather; K=2 blocks per block row
+    (banded structure)."""
+    n_dev = mesh.devices.size
+    panel_n = M_ROWS // n_dev
+    nbr_l = panel_n // BM
+    axes = tuple(mesh.axis_names)
+    axname = axes if len(axes) > 1 else axes[0]
+
+    def step(blocks, cols, x):
+        def body(b, c, xl):
+            def one(x_local, _):
+                nd = 1
+                for a in axes:
+                    nd *= jax.lax.axis_size(a)
+                fwd = [(i, (i + 1) % nd) for i in range(nd)]
+                bwd = [((i + 1) % nd, i) for i in range(nd)]
+                lh = jax.lax.ppermute(x_local[-halo:], axname, fwd)
+                rh = jax.lax.ppermute(x_local[:halo], axname, bwd)
+                xw = jnp.concatenate([lh, x_local, rh])
+                y = ref.spmv_bell(b[0], c[0], xw.reshape(-1, BN, 1))
+                return y.reshape(-1)[:panel_n], None
+            xf, _ = jax.lax.scan(one, xl[0], None, length=ITERS)
+            return xf[None]
+        f = shard_map(body, mesh=mesh, in_specs=(P(axes), P(axes), P(axes)),
+                      out_specs=P(axes))
+        return f(blocks, cols, x)
+
+    k_halo = 2  # banded window spans <= 2 column blocks per block row
+    blocks = jax.ShapeDtypeStruct((n_dev, nbr_l, k_halo, BM, BN), jnp.float32,
+                                  sharding=NamedSharding(mesh, P(axes)))
+    cols = jax.ShapeDtypeStruct((n_dev, nbr_l, k_halo), jnp.int32,
+                                sharding=NamedSharding(mesh, P(axes)))
+    x = jax.ShapeDtypeStruct((n_dev, panel_n), jnp.float32,
+                             sharding=NamedSharding(mesh, P(axes)))
+    return jax.jit(step).lower(blocks, cols, x)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--multi-pod", action="store_true")
+    args = ap.parse_args()
+    mesh = make_production_mesh(multi_pod=args.multi_pod)
+    out = {}
+    for name, fn in [("1d", lower_1d), ("2d", lower_2d), ("halo", lower_halo)]:
+        with mesh:
+            lowered = fn(mesh)
+            compiled = lowered.compile()
+        walk = hlo_cost.analyze_text(compiled.as_text())
+        out[name] = {
+            "flops": walk["flops"],
+            "collectives": {k: int(v) for k, v in walk["collectives"].items()},
+        }
+        print(f"[spmv-{name}] flops/dev={walk['flops']:.3e} "
+              f"coll wire/dev={walk['collectives'].get('wire', 0):.3e} B "
+              f"(per {ITERS} SpMVs)", flush=True)
+    r = (out["1d"]["collectives"].get("wire", 0)
+         / max(out["2d"]["collectives"].get("wire", 1), 1))
+    out["wire_ratio_1d_over_2d"] = r
+    rh = (out["1d"]["collectives"].get("wire", 0)
+          / max(out["halo"]["collectives"].get("wire", 1), 1))
+    out["wire_ratio_1d_over_halo"] = rh
+    print(f"[spmv] 1d/2d wire ratio: {r:.1f}x; 1d/halo: {rh:.0f}x")
+    os.makedirs(RESULTS, exist_ok=True)
+    with open(os.path.join(RESULTS, "spmv_distributed.json"), "w") as f:
+        json.dump(out, f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

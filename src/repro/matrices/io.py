@@ -1,0 +1,41 @@
+"""MatrixMarket I/O so real SuiteSparse .mtx files drop in when available."""
+from __future__ import annotations
+
+import numpy as np
+
+from ..core.sparse.csr import CSRMatrix
+
+
+def read_mtx(path: str) -> CSRMatrix:
+    with open(path, "r") as f:
+        header = f.readline()
+        if not header.startswith("%%MatrixMarket"):
+            raise ValueError("not a MatrixMarket file")
+        toks = header.lower().split()
+        symmetric = "symmetric" in toks
+        pattern = "pattern" in toks
+        line = f.readline()
+        while line.startswith("%"):
+            line = f.readline()
+        m, n, nnz = (int(t) for t in line.split())
+        data = np.loadtxt(f, ndmin=2)
+    r0 = data[:, 0].astype(np.int64) - 1
+    c0 = data[:, 1].astype(np.int64) - 1
+    v0 = np.ones(r0.size) if pattern else data[:, 2]
+    if symmetric:  # stored lower triangle only; mirror the off-diagonal
+        off = r0 != c0
+        rows = np.concatenate([r0, c0[off]])
+        cols = np.concatenate([c0, r0[off]])
+        vals = np.concatenate([v0, v0[off]])
+    else:
+        rows, cols, vals = r0, c0, v0
+    return CSRMatrix.from_coo(rows, cols, vals, (m, n))
+
+
+def write_mtx(path: str, mat: CSRMatrix) -> None:
+    r = np.repeat(np.arange(mat.m), mat.row_nnz())
+    with open(path, "w") as f:
+        f.write("%%MatrixMarket matrix coordinate real general\n")
+        f.write(f"{mat.m} {mat.n} {mat.nnz}\n")
+        for i in range(mat.nnz):
+            f.write(f"{r[i] + 1} {mat.cols[i] + 1} {mat.vals[i]:.17g}\n")

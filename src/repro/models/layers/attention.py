@@ -1,0 +1,157 @@
+"""Attention: flash-style chunked (online softmax over KV blocks) with GQA,
+causal/bidirectional, sliding-window, softcap, and cross-attention; plus the
+single-token decode path over a KV cache.
+
+Chunking over KV bounds the live score tensor to [B, H, Sq, kv_chunk] so the
+32k-prefill cells compile with bounded memory (DESIGN.md §4); XLA fuses the
+scan body. Sliding-window layers (gemma2 local) skip KV chunks entirely
+outside the window at trace time — chunks are a static loop count, so the
+skip costs nothing when it cannot apply.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .common import apply_rope, init_linear, linear, softcap_fn
+
+NEG_INF = -1e30
+
+
+def init_attention(key, d_model, n_heads, kv_heads, head_dim, qkv_bias=False,
+                   dtype=jnp.float32):
+    ks = jax.random.split(key, 4)
+    return {
+        "wq": init_linear(ks[0], d_model, n_heads * head_dim, qkv_bias, dtype),
+        "wk": init_linear(ks[1], d_model, kv_heads * head_dim, qkv_bias, dtype),
+        "wv": init_linear(ks[2], d_model, kv_heads * head_dim, qkv_bias, dtype),
+        "wo": init_linear(ks[3], n_heads * head_dim, d_model, False, dtype),
+    }
+
+
+def _split_heads(x, n, d):
+    return x.reshape(*x.shape[:-1], n, d)
+
+
+def flash_attention(q, k, v, *, causal: bool, window: Optional[int] = None,
+                    softcap: Optional[float] = None, kv_chunk: int = 1024,
+                    q_offset: int = 0):
+    """q [B,Sq,H,D]; k,v [B,Sk,KVH,D] -> [B,Sq,H,D].
+
+    GQA via head grouping. q_offset: absolute position of q[0] relative to
+    k[0] (prefill: 0; not used for decode — see decode_attention).
+    """
+    b, sq, h, d = q.shape
+    _, sk, kvh, _ = k.shape
+    g = h // kvh
+    qg = q.reshape(b, sq, kvh, g, d)
+    scale = 1.0 / np.sqrt(d)
+    kv_chunk = min(kv_chunk, sk)
+    nchunks = (sk + kv_chunk - 1) // kv_chunk
+    pad = nchunks * kv_chunk - sk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    kc = k.reshape(b, nchunks, kv_chunk, kvh, d)
+    vc = v.reshape(b, nchunks, kv_chunk, kvh, d)
+
+    q_pos = q_offset + jnp.arange(sq)
+
+    def body(carry, inputs):
+        m, l, acc = carry
+        idx, kci, vci = inputs
+        # scores: [b, kvh, g, sq, ck]
+        s = jnp.einsum("bqhgd,bkhd->bhgqk", qg, kci,
+                       preferred_element_type=jnp.float32) * scale
+        s = softcap_fn(s, softcap)
+        k_pos = idx * kv_chunk + jnp.arange(kv_chunk)
+        mask = k_pos[None, :] < sk  # padding
+        if causal:
+            mask = mask & (k_pos[None, :] <= q_pos[:, None])
+        if window is not None:
+            mask = mask & (q_pos[:, None] - k_pos[None, :] < window)
+        s = jnp.where(mask[None, None, None], s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + p.sum(axis=-1)
+        pv = jnp.einsum("bhgqk,bkhd->bhgqd", p.astype(vci.dtype), vci,
+                        preferred_element_type=jnp.float32)
+        acc_new = acc * corr[..., None] + pv
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((b, kvh, g, sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, kvh, g, sq), jnp.float32)
+    acc0 = jnp.zeros((b, kvh, g, sq, d), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(
+        body, (m0, l0, acc0),
+        (jnp.arange(nchunks), jnp.moveaxis(kc, 1, 0), jnp.moveaxis(vc, 1, 0)))
+    out = acc / jnp.maximum(l[..., None], 1e-30)
+    out = jnp.moveaxis(out, -2, 1).reshape(b, sq, h, d)  # [b,kvh,g,sq,d]->[b,sq,h,d]
+    return out.astype(q.dtype)
+
+
+def decode_attention(q, k_cache, v_cache, cache_len, *, window=None,
+                     softcap=None):
+    """One-token decode: q [B,1,H,D]; caches [B,Smax,KVH,D]; cache_len []
+    (current valid length, the new token's position = cache_len - 1
+    AFTER insertion)."""
+    b, _, h, d = q.shape
+    _, smax, kvh, _ = k_cache.shape
+    g = h // kvh
+    qg = q.reshape(b, kvh, g, d)
+    s = jnp.einsum("bhgd,bkhd->bhgk", qg, k_cache,
+                   preferred_element_type=jnp.float32) / np.sqrt(d)
+    s = softcap_fn(s, softcap)
+    k_pos = jnp.arange(smax)
+    mask = k_pos < cache_len
+    if window is not None:
+        mask = mask & (k_pos >= cache_len - window)
+    s = jnp.where(mask[None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgk,bkhd->bhgd", p.astype(v_cache.dtype), v_cache,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(b, 1, h, d).astype(q.dtype)
+
+
+def attention_block(params, x, *, n_heads, kv_heads, head_dim, rope_theta,
+                    causal=True, window=None, softcap=None, kv_chunk=1024,
+                    positions=None, cache=None, cross_kv=None):
+    """Full attention sub-block: proj -> rope -> (flash | decode) -> out proj.
+
+    cache: None (train/prefill, returns (y, new_kv) with new_kv=(k,v) full)
+           or dict {k, v, len} for decode (returns (y, updated cache)).
+    cross_kv: [B, T, d] encoder states for cross-attention (no rope/causal).
+    """
+    b, s, _ = x.shape
+    q = _split_heads(linear(params["wq"], x), n_heads, head_dim)
+    kv_src = cross_kv if cross_kv is not None else x
+    k = _split_heads(linear(params["wk"], kv_src), kv_heads, head_dim)
+    v = _split_heads(linear(params["wv"], kv_src), kv_heads, head_dim)
+
+    if cross_kv is None:
+        if positions is None:
+            base = 0 if cache is None else cache["len"]
+            positions = base + jnp.arange(s)
+            positions = jnp.broadcast_to(positions, (b, s))
+        q = apply_rope(q, positions, rope_theta)
+        k = apply_rope(k, positions, rope_theta)
+
+    if cache is not None and cross_kv is None:
+        # insert the new token at position cache["len"]
+        k_cache = jax.lax.dynamic_update_slice_in_dim(cache["k"], k, cache["len"], 1)
+        v_cache = jax.lax.dynamic_update_slice_in_dim(cache["v"], v, cache["len"], 1)
+        new_len = cache["len"] + s
+        y = decode_attention(q, k_cache, v_cache, new_len, window=window,
+                             softcap=softcap)
+        new_cache = {"k": k_cache, "v": v_cache, "len": new_len}
+    else:
+        y = flash_attention(q, k, v, causal=causal and cross_kv is None,
+                            window=window, softcap=softcap, kv_chunk=kv_chunk)
+        new_cache = None
+    y = y.reshape(b, s, n_heads * head_dim)
+    return linear(params["wo"], y), new_cache

@@ -1,0 +1,96 @@
+"""Shared model primitives: norms, rotary, embedding, initializers.
+
+Parameters are plain nested dicts of jnp arrays (pytrees); every init_*
+returns such a dict. Sharding is attached OUTSIDE the model code by
+path-based logical-axis rules (distributed/sharding.py), so the layer code
+stays mesh-agnostic and the dry-run can re-shard without touching models.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def truncated_normal(key, shape, scale, dtype=jnp.float32):
+    # float(scale): np.float64 scalars are STRONGLY typed and silently
+    # promote bf16 params to f32; python floats are weak.
+    return float(scale) * jax.random.truncated_normal(key, -2.0, 2.0, shape, dtype)
+
+
+def init_linear(key, d_in, d_out, bias=False, dtype=jnp.float32, scale=None):
+    scale = scale if scale is not None else 1.0 / np.sqrt(d_in)
+    p = {"w": truncated_normal(key, (d_in, d_out), scale, dtype)}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), dtype)
+    return p
+
+
+def linear(p, x):
+    y = x @ p["w"]
+    if "b" in p:
+        y = y + p["b"]
+    return y
+
+
+def init_rmsnorm(d, dtype=jnp.float32):
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rmsnorm(p, x, eps=1e-5):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * p["scale"].astype(jnp.float32)).astype(dt)
+
+
+def init_embedding(key, vocab, d, dtype=jnp.float32):
+    # 0.02-std (gpt/llama convention); with tied unembedding this keeps
+    # random-init CE near ln(vocab).
+    return {"table": truncated_normal(key, (vocab, d), 0.02, dtype)}
+
+
+def embed(p, tokens):
+    return p["table"][tokens]
+
+
+def unembed(p, x, softcap=None):
+    """Tied unembedding. Logits in f32 (loss numerics)."""
+    logits = jnp.einsum("...d,vd->...v", x.astype(jnp.float32),
+                        p["table"].astype(jnp.float32))
+    if softcap is not None:
+        logits = softcap * jnp.tanh(logits / softcap)
+    return logits
+
+
+def softcap_fn(x, cap):
+    return cap * jnp.tanh(x / cap) if cap is not None else x
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embedding
+# ---------------------------------------------------------------------------
+def rope_freqs(head_dim: int, theta: float):
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x, positions, theta: float):
+    """x: [..., S, H, D]; positions: [..., S] int."""
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)                         # [D/2]
+    ang = positions.astype(jnp.float32)[..., None] * freqs  # [..., S, D/2]
+    cos = jnp.cos(ang)[..., None, :]                     # [..., S, 1, D/2]
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., : d // 2], x[..., d // 2:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Losses
+# ---------------------------------------------------------------------------
+def softmax_cross_entropy(logits, labels):
+    """logits [..., V] f32, labels [...] int -> mean CE over all positions."""
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(logz - gold)

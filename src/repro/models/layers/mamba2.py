@@ -1,0 +1,155 @@
+"""Mamba2 (SSD) block — chunked state-space dual form [Dao & Gu 2024].
+
+Train/prefill: sequence split into chunks of `chunk`; within-chunk term is
+a small quadratic matmul (MXU-friendly — the "duality"), cross-chunk states
+carried by a sequential lax.scan over chunks (NC = S/chunk steps).
+Decode: O(1) recurrent state update.
+
+Faithful simplifications (documented): single B/C group (n_groups=1),
+scalar-per-head A (as in Mamba2), causal conv width 4, no dt softplus floor
+tweaks. State cache = (conv_state [B, W-1, d_conv_ch], ssm_state [B, H, N, P]).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .common import init_linear, init_rmsnorm, linear, rmsnorm
+
+
+def init_mamba2(key, d_model, ssm_cfg, dtype=jnp.float32):
+    d_inner = ssm_cfg.expand * d_model
+    n, p = ssm_cfg.d_state, ssm_cfg.head_dim
+    h = d_inner // p
+    ks = jax.random.split(key, 5)
+    conv_ch = d_inner + 2 * n  # conv over [x, B, C]
+    return {
+        # in_proj -> [z, x, B, C, dt]
+        "in_proj": init_linear(ks[0], d_model, 2 * d_inner + 2 * n + h, False, dtype),
+        "conv_w": 0.1 * jax.random.normal(ks[1], (ssm_cfg.conv_width, conv_ch), dtype),
+        "conv_b": jnp.zeros((conv_ch,), dtype),
+        "a_log": jnp.log(jnp.linspace(1.0, 16.0, h).astype(dtype)),
+        "dt_bias": jnp.zeros((h,), dtype),
+        "d_skip": jnp.ones((h,), dtype),
+        "norm": init_rmsnorm(d_inner, dtype),
+        "out_proj": init_linear(ks[4], d_inner, d_model, False, dtype),
+    }
+
+
+def _causal_conv(xbc, conv_w, conv_b, conv_state=None):
+    """xbc [B,S,C]; depthwise causal conv width W. Returns (y, new_state)."""
+    w = conv_w.shape[0]
+    if conv_state is None:
+        pad = jnp.zeros((xbc.shape[0], w - 1, xbc.shape[2]), xbc.dtype)
+    else:
+        pad = conv_state
+    xp = jnp.concatenate([pad, xbc], axis=1)  # [B, S+W-1, C]
+    y = sum(xp[:, i:i + xbc.shape[1]] * conv_w[i] for i in range(w)) + conv_b
+    new_state = xp[:, -(w - 1):]
+    return jax.nn.silu(y), new_state
+
+
+def _ssd_chunked(xh, dt, a_log, b_mat, c_mat, chunk, init_state=None):
+    """SSD scan. xh [B,S,H,P], dt [B,S,H], b/c [B,S,N].
+    Returns (y [B,S,H,P], final_state [B,H,N,P]).
+
+    One lax.scan over chunks computes the within-chunk quadratic term AND
+    the cross-chunk state pass per step, so live memory is one chunk's
+    [B,T,T,H] decay tensor, not NC of them."""
+    b, s, h, p = xh.shape
+    n = b_mat.shape[-1]
+    nc = s // chunk
+    la = -jnp.exp(a_log.astype(jnp.float32)) * dt.astype(jnp.float32)  # log decay [B,S,H]
+    xw = xh * dt[..., None].astype(xh.dtype)                            # discretized input
+
+    def reshape_c(t):  # [B,S,...] -> [NC,B,T,...] (scan leading axis)
+        return jnp.moveaxis(t.reshape(b, nc, chunk, *t.shape[2:]), 1, 0)
+
+    tri = jnp.tril(jnp.ones((chunk, chunk), bool))
+
+    def scan_fn(state, inp):
+        la_i, xw_i, b_i, c_i = inp            # [B,T,H],[B,T,H,P],[B,T,N],[B,T,N]
+        cum = jnp.cumsum(la_i, axis=1)        # [B,T,H]
+        # within-chunk: scores[t,i] = exp(cum_t - cum_i) * (c_t . b_i), i<=t
+        # mask the EXPONENT (upper triangle is exp(+large) -> inf, and
+        # 0*inf = NaN in the where() backward), then exp.
+        expo = cum[:, :, None, :] - cum[:, None, :, :]                  # [B,T,T,H]
+        expo = jnp.where(tri[None, :, :, None], expo, -1e30)
+        dec = jnp.exp(expo)
+        cb = jnp.einsum("btn,bin->bti", c_i, b_i)                       # [B,T,T]
+        y_i = jnp.einsum("bti,btih,bihp->bthp", cb, dec.astype(xw_i.dtype), xw_i)
+        # cross-chunk: y_t += (c_t . state_in) * exp(cum_t)
+        y_i += jnp.einsum("btn,bth,bhnp->bthp", c_i,
+                          jnp.exp(cum).astype(xw_i.dtype), state)
+        # state update
+        dec_end = jnp.exp(cum[:, -1:, :] - cum)                         # [B,T,H]
+        new_state = state * jnp.exp(cum[:, -1, :])[..., None, None].astype(state.dtype) \
+            + jnp.einsum("btn,bth,bthp->bhnp", b_i, dec_end.astype(xw_i.dtype), xw_i)
+        return new_state, y_i
+
+    s0 = (jnp.zeros((b, h, n, p), xh.dtype) if init_state is None
+          else init_state.astype(xh.dtype))
+    final, ys = jax.lax.scan(
+        scan_fn, s0, (reshape_c(la), reshape_c(xw), reshape_c(b_mat),
+                      reshape_c(c_mat)))
+    y = jnp.moveaxis(ys, 0, 1).reshape(b, s, h, p)
+    return y, final
+
+
+def mamba2_block(params, x, ssm_cfg, cache=None):
+    """x [B,S,d]. cache None (train/prefill from zero state) or dict
+    {conv, ssm} for decode. Returns (y, new_cache_or_None)."""
+    b, s, d = x.shape
+    d_inner = ssm_cfg.expand * d
+    n, p = ssm_cfg.d_state, ssm_cfg.head_dim
+    h = d_inner // p
+
+    zxbcdt = linear(params["in_proj"], x)
+    z, xbc, dt = jnp.split(zxbcdt, [d_inner, 2 * d_inner + 2 * n], axis=-1)
+    dt = jax.nn.softplus(dt + params["dt_bias"])                        # [B,S,H]
+
+    conv_state = cache["conv"] if cache is not None else None
+    xbc, new_conv = _causal_conv(xbc, params["conv_w"], params["conv_b"],
+                                 conv_state)
+    xs, b_mat, c_mat = jnp.split(xbc, [d_inner, d_inner + n], axis=-1)
+    xh = xs.reshape(b, s, h, p)
+
+    if cache is None:
+        pad = (-s) % ssm_cfg.chunk
+        if pad:
+            xh = jnp.pad(xh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+            b_mat = jnp.pad(b_mat, ((0, 0), (0, pad), (0, 0)))
+            c_mat = jnp.pad(c_mat, ((0, 0), (0, pad), (0, 0)))
+        y, final = _ssd_chunked(xh, dt, params["a_log"], b_mat, c_mat,
+                                ssm_cfg.chunk)
+        y = y[:, :s]
+        new_cache = None
+    else:
+        # decode: s == 1 single step, state update
+        a = jnp.exp(-jnp.exp(params["a_log"].astype(jnp.float32))
+                    * dt[:, 0].astype(jnp.float32))                     # [B,H]
+        xw = xh[:, 0] * dt[:, 0, :, None].astype(xh.dtype)              # [B,H,P]
+        state = cache["ssm"]
+        state = state * a[..., None, None].astype(state.dtype) + \
+            jnp.einsum("bn,bhp->bhnp", b_mat[:, 0], xw)
+        y = jnp.einsum("bn,bhnp->bhp", c_mat[:, 0], state)[:, None]     # [B,1,H,P]
+        final = state
+        new_cache = {"conv": new_conv, "ssm": final}
+
+    y = y + xh[:, :s] * params["d_skip"][None, None, :, None]           # D skip
+    y = y.reshape(b, s, d_inner)
+    y = rmsnorm(params["norm"], y * jax.nn.silu(z))                     # gated norm
+    return linear(params["out_proj"], y), new_cache
+
+
+def init_mamba2_cache(batch, d_model, ssm_cfg, dtype=jnp.float32):
+    d_inner = ssm_cfg.expand * d_model
+    n, p = ssm_cfg.d_state, ssm_cfg.head_dim
+    h = d_inner // p
+    conv_ch = d_inner + 2 * n
+    return {
+        "conv": jnp.zeros((batch, ssm_cfg.conv_width - 1, conv_ch), dtype),
+        "ssm": jnp.zeros((batch, h, n, p), dtype),
+    }

@@ -1,0 +1,21 @@
+"""Dense MLP blocks: SwiGLU (llama-family) used by every dense arch."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .common import init_linear, linear
+
+
+def init_mlp(key, d_model, d_ff, dtype=jnp.float32):
+    ks = jax.random.split(key, 3)
+    return {
+        "w_gate": init_linear(ks[0], d_model, d_ff, False, dtype),
+        "w_up": init_linear(ks[1], d_model, d_ff, False, dtype),
+        "w_down": init_linear(ks[2], d_ff, d_model, False, dtype),
+    }
+
+
+def mlp(params, x, activation=jax.nn.silu):
+    return linear(params["w_down"],
+                  activation(linear(params["w_gate"], x)) * linear(params["w_up"], x))

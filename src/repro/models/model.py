@@ -1,0 +1,446 @@
+"""Composable LM: one implementation consuming ModelConfig for all 10
+assigned architectures (DESIGN.md §5).
+
+Families map to scan bodies:
+  dense                 — scan over L identical (attn + SwiGLU) layers
+  gemma2 local/global   — scan over L/2 (local, global) PAIRS (static window)
+  moe                   — scan over L (attn + MoE) layers (EP shard_map inside)
+  rwkv6                 — scan over L (time-mix + channel-mix) layers
+  zamba2 hybrid         — scan over groups of `hybrid_attn_period` Mamba2
+                          layers, one SHARED attention block between groups
+  vlm                   — scan over groups of (period-1) self layers + 1
+                          gated cross-attn layer
+  hubert                — dense with causal=False, frame embeddings in,
+                          classifier head out
+
+Weights are stacked on a leading layer axis; every scan body is wrapped in
+jax.checkpoint (remat) during training. Caches (KV / SSM / conv / shift)
+are stacked the same way and threaded through the scans for decode.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.base import ModelConfig
+from .layers import attention as A
+from .layers import mamba2 as M
+from .layers import moe as MOE
+from .layers import mlp as MLP
+from .layers import rwkv6 as R
+from .layers.common import (embed, init_embedding, init_linear, init_rmsnorm,
+                            linear, rmsnorm, softmax_cross_entropy, unembed)
+
+
+def make_hint(mesh, dp_axes, seq_shard=True):
+    """Activation sharding hint at embed / layer-scan boundaries:
+    batch over dp axes AND sequence over "model" (Megatron-style sequence
+    parallelism) when the seq dim divides. Two jobs:
+      * propagation alone may replicate the batch dim (observed: XLA
+        sharded d_model instead — 16x activation memory);
+      * the layer-scan backward stacks [L, B, S, d] residuals — seq
+        sharding cuts that stack by the TP degree (104B train: 41 -> ~7GiB).
+    Attention/MLP internals re-gather the sequence as needed."""
+    if mesh is None:
+        return lambda x: x
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    msize = dict(zip(mesh.axis_names, mesh.devices.shape)).get("model", 1)
+
+    def hint(x):
+        seq = ("model" if (seq_shard and x.ndim == 3 and x.shape[1] > 1
+                           and x.shape[1] % msize == 0) else None)
+        spec = P(dp_axes, seq, *([None] * (x.ndim - 2)))
+        return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+    return hint
+
+
+def make_wconstrain(mesh):
+    """Per-layer weight sharding constraint (see sharding.constrain_tree).
+    Identity without a mesh (single-device tests)."""
+    if mesh is None:
+        return lambda lp: lp
+    from ..distributed.sharding import constrain_tree
+
+    return lambda lp: constrain_tree(lp, mesh)
+
+
+def _stack_init(init_fn, key, n, *args, **kw):
+    keys = jax.random.split(key, n)
+    return jax.vmap(lambda k: init_fn(k, *args, **kw))(keys)
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+def init_params(cfg: ModelConfig, key, dtype=jnp.float32) -> Dict[str, Any]:
+    hd = cfg.resolved_head_dim
+    ks = jax.random.split(key, 8)
+    p: Dict[str, Any] = {"final_norm": init_rmsnorm(cfg.d_model, dtype)}
+    if cfg.embed_inputs:
+        p["embed"] = init_embedding(ks[0], cfg.padded_vocab, cfg.d_model, dtype)
+    if not cfg.tie_embeddings:
+        p["head"] = init_linear(ks[1], cfg.d_model, cfg.padded_vocab, False, dtype)
+
+    def attn_args():
+        return (cfg.d_model, cfg.n_heads, cfg.kv_heads, hd)
+
+    if cfg.rwkv is not None:
+        p["layers"] = _stack_init(R.init_rwkv6, ks[2], cfg.n_layers,
+                                  cfg.d_model, cfg.rwkv, cfg.d_ff, dtype)
+    elif cfg.ssm is not None:  # zamba2 hybrid
+        period = cfg.hybrid_attn_period
+        groups, rem = divmod(cfg.n_layers, period) if period else (0, cfg.n_layers)
+        p["layers"] = _stack_init(M.init_mamba2, ks[2], groups * period,
+                                  cfg.d_model, cfg.ssm, dtype)
+        if rem:
+            p["tail_layers"] = _stack_init(M.init_mamba2, ks[3], rem,
+                                           cfg.d_model, cfg.ssm, dtype)
+        if period:
+            kk = jax.random.split(ks[4], 3)
+            p["shared_attn"] = {
+                "norm": init_rmsnorm(cfg.d_model, dtype),
+                "attn": A.init_attention(kk[0], *attn_args(), cfg.qkv_bias, dtype),
+                "mlp_norm": init_rmsnorm(cfg.d_model, dtype),
+                "mlp": MLP.init_mlp(kk[1], cfg.d_model, cfg.d_ff, dtype),
+            }
+    elif cfg.cross_attn_period:  # vlm
+        period = cfg.cross_attn_period
+        groups = cfg.n_layers // period
+        p["layers"] = _stack_init(_init_dense_layer, ks[2],
+                                  groups * (period - 1), cfg, dtype)
+        p["cross_layers"] = _stack_init(_init_cross_layer, ks[3], groups, cfg, dtype)
+    elif cfg.moe is not None:
+        p["layers"] = _stack_init(_init_moe_layer, ks[2], cfg.n_layers, cfg, dtype)
+    elif cfg.local_global_period:  # gemma2: pairs
+        p["layers"] = _stack_init(_init_dense_pair, ks[2],
+                                  cfg.n_layers // 2, cfg, dtype)
+    else:
+        p["layers"] = _stack_init(_init_dense_layer, ks[2], cfg.n_layers, cfg, dtype)
+    return p
+
+
+def _init_dense_layer(key, cfg, dtype):
+    hd = cfg.resolved_head_dim
+    kk = jax.random.split(key, 2)
+    d = {
+        "attn_norm": init_rmsnorm(cfg.d_model, dtype),
+        "attn": A.init_attention(kk[0], cfg.d_model, cfg.n_heads, cfg.kv_heads,
+                                 hd, cfg.qkv_bias, dtype),
+        "mlp_norm": init_rmsnorm(cfg.d_model, dtype),
+        "mlp": MLP.init_mlp(kk[1], cfg.d_model, cfg.d_ff, dtype),
+    }
+    if cfg.post_block_norm:
+        d["attn_post_norm"] = init_rmsnorm(cfg.d_model, dtype)
+        d["mlp_post_norm"] = init_rmsnorm(cfg.d_model, dtype)
+    return d
+
+
+def _init_dense_pair(key, cfg, dtype):
+    kk = jax.random.split(key, 2)
+    return {"local": _init_dense_layer(kk[0], cfg, dtype),
+            "global": _init_dense_layer(kk[1], cfg, dtype)}
+
+
+def _init_moe_layer(key, cfg, dtype):
+    hd = cfg.resolved_head_dim
+    kk = jax.random.split(key, 2)
+    return {
+        "attn_norm": init_rmsnorm(cfg.d_model, dtype),
+        "attn": A.init_attention(kk[0], cfg.d_model, cfg.n_heads, cfg.kv_heads,
+                                 hd, cfg.qkv_bias, dtype),
+        "mlp_norm": init_rmsnorm(cfg.d_model, dtype),
+        "moe": MOE.init_moe(kk[1], cfg.d_model, cfg.moe, dtype),
+    }
+
+
+def _init_cross_layer(key, cfg, dtype):
+    hd = cfg.resolved_head_dim
+    kk = jax.random.split(key, 2)
+    return {
+        "attn_norm": init_rmsnorm(cfg.d_model, dtype),
+        "cross_attn": A.init_attention(kk[0], cfg.d_model, cfg.n_heads,
+                                       cfg.kv_heads, hd, False, dtype),
+        "gate": jnp.zeros((), dtype),
+        "mlp_norm": init_rmsnorm(cfg.d_model, dtype),
+        "mlp": MLP.init_mlp(kk[1], cfg.d_model, cfg.d_ff, dtype),
+    }
+
+
+# ---------------------------------------------------------------------------
+# layer bodies
+# ---------------------------------------------------------------------------
+def _dense_layer(lp, x, cfg, *, window, cache=None, kv_chunk=1024):
+    hd = cfg.resolved_head_dim
+    h = rmsnorm(lp["attn_norm"], x, cfg.rmsnorm_eps)
+    y, new_cache = A.attention_block(
+        lp["attn"], h, n_heads=cfg.n_heads, kv_heads=cfg.kv_heads, head_dim=hd,
+        rope_theta=cfg.rope_theta, causal=not cfg.encoder_only, window=window,
+        softcap=cfg.attn_softcap, kv_chunk=kv_chunk, cache=cache)
+    if "attn_post_norm" in lp:
+        y = rmsnorm(lp["attn_post_norm"], y, cfg.rmsnorm_eps)
+    x = x + y
+    h = rmsnorm(lp["mlp_norm"], x, cfg.rmsnorm_eps)
+    y = MLP.mlp(lp["mlp"], h)
+    if "mlp_post_norm" in lp:
+        y = rmsnorm(lp["mlp_post_norm"], y, cfg.rmsnorm_eps)
+    return x + y, new_cache
+
+
+def _moe_dense_layer(lp, x, cfg, mesh, dp_axes, *, cache=None, kv_chunk=1024):
+    hd = cfg.resolved_head_dim
+    h = rmsnorm(lp["attn_norm"], x, cfg.rmsnorm_eps)
+    y, new_cache = A.attention_block(
+        lp["attn"], h, n_heads=cfg.n_heads, kv_heads=cfg.kv_heads, head_dim=hd,
+        rope_theta=cfg.rope_theta, causal=True, kv_chunk=kv_chunk, cache=cache)
+    x = x + y
+    h = rmsnorm(lp["mlp_norm"], x, cfg.rmsnorm_eps)
+    y, moe_metrics = MOE.moe_layer(lp["moe"], h, cfg.moe, mesh=mesh,
+                                   dp_axes=dp_axes)
+    return x + y, new_cache, moe_metrics
+
+
+def _rwkv_layer_impl(lp, x, cfg, cache=None):
+    cache_tm = None if cache is None else {"shift_t": cache["shift_t"],
+                                           "wkv": cache["wkv"]}
+    y, new_tm = R.rwkv6_time_mix(lp, x, cfg.rwkv, cache_tm)
+    x = x + y
+    last_c = None if cache is None else cache["shift_c"]
+    y = R.rwkv6_channel_mix(lp, x, last_c)
+    new_cache = None
+    if cache is not None:
+        new_cache = {"shift_t": new_tm["shift_t"], "wkv": new_tm["wkv"],
+                     "shift_c": x[:, -1:]}
+    return x + y, new_cache
+
+
+def _shared_attn_block(sp, x, cfg, cache=None, kv_chunk=1024):
+    hd = cfg.resolved_head_dim
+    h = rmsnorm(sp["norm"], x, cfg.rmsnorm_eps)
+    y, new_cache = A.attention_block(
+        sp["attn"], h, n_heads=cfg.n_heads, kv_heads=cfg.kv_heads, head_dim=hd,
+        rope_theta=cfg.rope_theta, causal=True, kv_chunk=kv_chunk, cache=cache)
+    x = x + y
+    h = rmsnorm(sp["mlp_norm"], x, cfg.rmsnorm_eps)
+    return x + MLP.mlp(sp["mlp"], h), new_cache
+
+
+def _cross_layer(lp, x, img, cfg):
+    hd = cfg.resolved_head_dim
+    h = rmsnorm(lp["attn_norm"], x, cfg.rmsnorm_eps)
+    y, _ = A.attention_block(
+        lp["cross_attn"], h, n_heads=cfg.n_heads, kv_heads=cfg.kv_heads,
+        head_dim=hd, rope_theta=cfg.rope_theta, cross_kv=img)
+    x = x + jnp.tanh(lp["gate"]) * y
+    h = rmsnorm(lp["mlp_norm"], x, cfg.rmsnorm_eps)
+    return x + MLP.mlp(lp["mlp"], h)
+
+
+# ---------------------------------------------------------------------------
+# forward
+# ---------------------------------------------------------------------------
+def forward(params, batch: Dict[str, jax.Array], cfg: ModelConfig,
+            mesh=None, dp_axes=("data",), cache=None, train=False,
+            kv_chunk: int = 1024, constrain_weights: bool = True):
+    """Returns (logits, new_cache, metrics).
+
+    batch: {"tokens": [B,S]} or {"embeds": [B,S,d]} (+ "image_embeds").
+    cache: None (train/prefill) or the arch's stacked cache pytree (decode).
+    """
+    hint = make_hint(mesh, dp_axes)
+    wcon = make_wconstrain(mesh if constrain_weights else None)
+    if cfg.embed_inputs:
+        x = embed(params["embed"], batch["tokens"])
+        if cfg.name.startswith("gemma"):
+            x = x * float(np.sqrt(cfg.d_model))
+    else:
+        x = batch["embeds"]
+    x = hint(x)
+    metrics: Dict[str, jax.Array] = {}
+
+    remat = jax.checkpoint if train else (lambda f: f)
+
+    if cfg.rwkv is not None:
+        def body(carry, xs):
+            lp, lcache = xs
+            y, new_cache = _rwkv_layer_impl(wcon(lp), hint(carry), cfg, lcache)
+            return hint(y), new_cache
+        x, new_caches = jax.lax.scan(remat(body), x, (params["layers"], cache))
+    elif cfg.ssm is not None:
+        x, new_caches, metrics = _zamba_forward(params, x, cfg, cache, remat,
+                                                kv_chunk, hint, wcon)
+    elif cfg.cross_attn_period:
+        x, new_caches = _vlm_forward(params, x, batch["image_embeds"], cfg,
+                                     cache, remat, kv_chunk, hint, wcon)
+    elif cfg.moe is not None:
+        aux0 = {"aux_loss": jnp.zeros(()), "router_li": jnp.zeros(()),
+                "drop_frac": jnp.zeros(())}
+
+        def body(carry, xs):
+            h, acc = carry
+            lp, lcache = xs
+            y, new_cache, mm = _moe_dense_layer(wcon(lp), hint(h), cfg, mesh,
+                                                dp_axes, cache=lcache,
+                                                kv_chunk=kv_chunk)
+            acc = {k: acc[k] + mm[k] for k in acc}
+            return (hint(y), acc), new_cache
+        (x, aux), new_caches = jax.lax.scan(remat(body), (x, aux0),
+                                            (params["layers"], cache))
+        metrics = {k: v / cfg.n_layers for k, v in aux.items()}
+    elif cfg.local_global_period:
+        def body(carry, xs):
+            lp, lcache = xs
+            lc = None if lcache is None else lcache["local"]
+            gc = None if lcache is None else lcache["global"]
+            lp = wcon(lp)
+            h, nl = _dense_layer(lp["local"], hint(carry), cfg,
+                                 window=cfg.sliding_window, cache=lc,
+                                 kv_chunk=kv_chunk)
+            h, ng = _dense_layer(lp["global"], h, cfg, window=None, cache=gc,
+                                 kv_chunk=kv_chunk)
+            out_cache = None if lcache is None else {"local": nl, "global": ng}
+            return hint(h), out_cache
+        x, new_caches = jax.lax.scan(remat(body), x, (params["layers"], cache))
+    else:
+        def body(carry, xs):
+            lp, lcache = xs
+            y, new_cache = _dense_layer(wcon(lp), hint(carry), cfg,
+                                        window=None, cache=lcache,
+                                        kv_chunk=kv_chunk)
+            return hint(y), new_cache
+        x, new_caches = jax.lax.scan(remat(body), x, (params["layers"], cache))
+
+    x = rmsnorm(params["final_norm"], x, cfg.rmsnorm_eps)
+    if cfg.tie_embeddings and cfg.embed_inputs:
+        logits = unembed(params["embed"], x, cfg.final_softcap)
+    else:
+        logits = linear(params["head"], x).astype(jnp.float32)
+    return logits, new_caches, metrics
+
+
+def _zamba_forward(params, x, cfg, cache, remat, kv_chunk,
+                   hint=lambda x: x, wcon=lambda p: p):
+    period = cfg.hybrid_attn_period
+    groups = params["layers"]["in_proj"]["w"].shape[0] // period
+    metrics: Dict[str, jax.Array] = {}
+
+    # reshape stacked mamba params to [groups, period, ...]
+    grouped = jax.tree_util.tree_map(
+        lambda t: t.reshape(groups, period, *t.shape[1:]), params["layers"])
+    mamba_cache = None if cache is None else cache["mamba"]
+    attn_cache = None if cache is None else cache["shared_attn"]
+    sp = params["shared_attn"]
+
+    def group_body(carry, xs):
+        gp, gcache, acache = xs
+
+        def inner(c, ys):
+            lp, lc = ys
+            y, nc = M.mamba2_block(wcon(lp), hint(c), cfg.ssm, lc)
+            return hint(y), nc
+        h, new_mcache = jax.lax.scan(inner, carry, (gp, gcache))
+        h, new_acache = _shared_attn_block(sp, h, cfg, acache, kv_chunk)
+        return hint(h), (new_mcache, new_acache)
+
+    x, (new_mc, new_ac) = jax.lax.scan(
+        remat(group_body), x, (grouped, mamba_cache, attn_cache))
+
+    new_tail = None
+    if "tail_layers" in params:
+        tail_cache = None if cache is None else cache["tail"]
+
+        def tail_body(carry, xs):
+            lp, lc = xs
+            y, nc = M.mamba2_block(lp, carry, cfg.ssm, lc)
+            return y, nc
+        x, new_tail = jax.lax.scan(remat(tail_body), x,
+                                   (params["tail_layers"], tail_cache))
+    new_cache = None
+    if cache is not None:
+        new_cache = {"mamba": new_mc, "shared_attn": new_ac, "tail": new_tail}
+    return x, new_cache, metrics
+
+
+def _vlm_forward(params, x, img, cfg, cache, remat, kv_chunk,
+                 hint=lambda x: x, wcon=lambda p: p):
+    period = cfg.cross_attn_period
+    groups = params["cross_layers"]["gate"].shape[0]
+    self_grouped = jax.tree_util.tree_map(
+        lambda t: t.reshape(groups, period - 1, *t.shape[1:]), params["layers"])
+    self_cache = None if cache is None else cache["self"]
+
+    def group_body(carry, xs):
+        gp, cp, gcache = xs
+
+        def inner(c, ys):
+            lp, lc = ys
+            y, nc = _dense_layer(wcon(lp), hint(c), cfg, window=None,
+                                 cache=lc, kv_chunk=kv_chunk)
+            return hint(y), nc
+        h, new_scache = jax.lax.scan(inner, carry, (gp, gcache))
+        h = _cross_layer(cp, h, img, cfg)
+        return hint(h), new_scache
+
+    x, new_sc = jax.lax.scan(remat(group_body), x,
+                             (self_grouped, params["cross_layers"], self_cache))
+    new_cache = None if cache is None else {"self": new_sc}
+    return x, new_cache
+
+
+# ---------------------------------------------------------------------------
+# caches
+# ---------------------------------------------------------------------------
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.bfloat16):
+    """Stacked decode cache for the arch (leading axis = scan layers)."""
+    hd = cfg.resolved_head_dim
+
+    def kv(n):
+        return {"k": jnp.zeros((n, batch, max_len, cfg.kv_heads, hd), dtype),
+                "v": jnp.zeros((n, batch, max_len, cfg.kv_heads, hd), dtype),
+                "len": jnp.zeros((n,), jnp.int32)}
+
+    if cfg.rwkv is not None:
+        base = R.init_rwkv6_cache(batch, cfg.d_model, cfg.rwkv, dtype)
+        return jax.tree_util.tree_map(
+            lambda t: jnp.broadcast_to(t, (cfg.n_layers, *t.shape)), base)
+    if cfg.ssm is not None:
+        period = cfg.hybrid_attn_period
+        groups, rem = divmod(cfg.n_layers, period)
+        mc = M.init_mamba2_cache(batch, cfg.d_model, cfg.ssm, dtype)
+        out = {"mamba": jax.tree_util.tree_map(
+            lambda t: jnp.broadcast_to(t, (groups, period, *t.shape)), mc),
+            "shared_attn": kv(groups)}
+        out["tail"] = (jax.tree_util.tree_map(
+            lambda t: jnp.broadcast_to(t, (rem, *t.shape)), mc) if rem else None)
+        return out
+    if cfg.cross_attn_period:
+        period = cfg.cross_attn_period
+        groups = cfg.n_layers // period
+        return {"self": jax.tree_util.tree_map(
+            lambda t: t.reshape(groups, period - 1, *t.shape[1:]),
+            kv(groups * (period - 1)))}
+    if cfg.local_global_period:
+        return {"local": kv(cfg.n_layers // 2), "global": kv(cfg.n_layers // 2)}
+    return kv(cfg.n_layers)
+
+
+# ---------------------------------------------------------------------------
+# loss
+# ---------------------------------------------------------------------------
+def loss_fn(params, batch, cfg: ModelConfig, mesh=None, dp_axes=("data",),
+            train=True):
+    logits, _, metrics = forward(params, batch, cfg, mesh=mesh,
+                                 dp_axes=dp_axes, cache=None, train=train)
+    if cfg.encoder_only:
+        loss = softmax_cross_entropy(logits, batch["labels"])
+    else:
+        loss = softmax_cross_entropy(logits[:, :-1], batch["tokens"][:, 1:])
+    if cfg.moe is not None and "aux_loss" in metrics:
+        loss = loss + cfg.moe.router_aux_weight * metrics["aux_loss"]
+    metrics["ce_loss"] = loss
+    return loss, metrics

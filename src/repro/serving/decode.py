@@ -1,0 +1,60 @@
+"""Serving: serve_step (one decode token for a batch over a KV/state cache)
+and a simple batched greedy generation loop.
+
+serve_step is the function the decode_32k / long_500k dry-run cells lower:
+one new token against a cache of `seq_len` (DESIGN.md §5)."""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from ..models import model as MDL
+
+
+def make_serve_step(cfg: ModelConfig, mesh=None, dp_axes=("data",),
+                    compute_dtype=jnp.bfloat16, constrain_weights=False):
+    """Returns serve_step(params, batch, cache) -> (next_tokens, cache).
+
+    constrain_weights=False: serving keeps weights wherever the caller
+    sharded them (weight-stationary TP) — re-constraining to the training
+    FSDP spec inside the layer scan would reshard every layer."""
+
+    def serve_step(params, batch, cache):
+        params_c = jax.tree_util.tree_map(
+            lambda t: t.astype(compute_dtype)
+            if jnp.issubdtype(t.dtype, jnp.floating) else t, params)
+        logits, new_cache, _ = MDL.forward(params_c, batch, cfg, mesh=mesh,
+                                           dp_axes=dp_axes, cache=cache,
+                                           train=False,
+                                           constrain_weights=constrain_weights)
+        next_tokens = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+        return next_tokens, new_cache
+
+    return serve_step
+
+
+def generate(cfg: ModelConfig, params, prompt_tokens, max_new: int,
+             cache_len: int, image_embeds=None):
+    """Greedy generation (CPU example path): token-by-token prefill then
+    decode — exercises the same cache code the dry-run lowers."""
+    b, s = prompt_tokens.shape
+    cache = MDL.init_cache(cfg, b, cache_len, dtype=jnp.float32)
+    step = jax.jit(make_serve_step(cfg, compute_dtype=jnp.float32))
+    tok = None
+    for t in range(s):
+        batch = {"tokens": prompt_tokens[:, t:t + 1]}
+        if image_embeds is not None:
+            batch["image_embeds"] = image_embeds
+        tok, cache = step(params, batch, cache)
+    out = [tok]
+    for _ in range(max_new - 1):
+        batch = {"tokens": out[-1][:, None]}
+        if image_embeds is not None:
+            batch["image_embeds"] = image_embeds
+        tok, cache = step(params, batch, cache)
+        out.append(tok)
+    return jnp.stack(out, axis=1)

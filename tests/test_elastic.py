@@ -1,0 +1,68 @@
+"""Elastic scaling: a checkpoint written on ONE device resumes on an
+8-device mesh (different sharding) and training continues — the re-mesh
+path a 1000-node deployment uses after losing/gaining pods.
+
+Subprocess: fake device count must precede jax init."""
+import subprocess
+import sys
+import textwrap
+
+SCRIPT = textwrap.dedent("""
+    import os, tempfile
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import numpy as np
+    import jax, jax.numpy as jnp
+    from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+    from repro.configs.base import ModelConfig
+    from repro.distributed import sharding as SH
+    from repro.training import checkpoint as CKPT, data as DATA
+    from repro.training import optimizer as OPT, train_loop as TL
+
+    cfg = ModelConfig(name="tiny", family="dense", n_layers=2, d_model=64,
+                      n_heads=4, kv_heads=2, d_ff=128, vocab=256, head_dim=16)
+    opt_cfg = OPT.OptConfig(peak_lr=1e-3, warmup_steps=5, total_steps=40)
+    data = DATA.SyntheticLM(DATA.DataConfig(vocab=256, seq_len=64,
+                                            global_batch=8))
+    tmp = tempfile.mkdtemp()
+
+    # ---- phase 1: single-device training, save at step 20 ----
+    step1, _, _ = TL.make_train_step(cfg, opt_cfg, mesh=None, dp_axes=(),
+                                     microbatches=1,
+                                     compute_dtype=jnp.float32)
+    state = TL.init_state(cfg, jax.random.PRNGKey(0))
+    jit1 = jax.jit(step1)
+    for s in range(20):
+        state, m = jit1(state, {k: jnp.asarray(v)
+                                for k, v in data.batch(s).items()})
+    loss_at_20 = float(m["loss"])
+    ck = CKPT.Checkpointer(tmp, async_save=False)
+    ck.save(20, state)
+
+    # ---- phase 2: resume on a (2, 4) mesh with FSDP x TP sharding ----
+    mesh = jax.make_mesh((2, 4), ("data", "model"))
+    step2, sh_fn, _ = TL.make_train_step(cfg, opt_cfg, mesh, ("data",),
+                                         microbatches=1,
+                                         compute_dtype=jnp.float32)
+    restored, _ = ck.restore(20, state)
+    st_sh = sh_fn(jax.eval_shape(lambda: restored["params"]))
+    with mesh:
+        state2 = jax.device_put(restored, st_sh)
+        jit2 = jax.jit(step2, donate_argnums=(0,))
+        for s in range(20, 40):
+            b = jax.device_put({k: jnp.asarray(v)
+                                for k, v in data.batch(s).items()},
+                               NamedSharding(mesh, P("data", None)))
+            state2, m2 = jit2(state2, b)
+    loss_at_40 = float(m2["loss"])
+    print("ELASTIC_OK", loss_at_20, loss_at_40)
+    assert loss_at_40 < loss_at_20 + 0.2, (loss_at_20, loss_at_40)
+""")
+
+
+def test_elastic_remesh_resume():
+    r = subprocess.run([sys.executable, "-c", SCRIPT], capture_output=True,
+                       text=True, timeout=1200,
+                       env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
+                            "HOME": "/root"})
+    assert r.returncode == 0, r.stdout[-2000:] + r.stderr[-3000:]
+    assert "ELASTIC_OK" in r.stdout

@@ -1,0 +1,42 @@
+"""Unit tests for the HLO collective parsers (both replica_groups forms)."""
+from repro.launch import hlo, hlo_cost
+
+LINE_BRACKET = ('  %all-gather = f32[64,64]{0,1} all-gather(%bitcast), '
+                'channel_id=1, replica_groups=[4,16]<=[64], dimensions={1}')
+LINE_SET = ('  %all_gather.5 = f32[1024]{0} all-gather(%gte), channel_id=1, '
+            'replica_groups={{0,1,2,3},{4,5,6,7}}, dimensions={0}')
+LINE_AR = ('  %all-reduce.1 = f32[2048]{0} all-reduce(%p), '
+           'replica_groups=[1,8]<=[8], to_apply=%add')
+
+
+def test_group_size_bracket_form():
+    assert hlo_cost._group_size(LINE_BRACKET) == 16
+
+
+def test_group_size_set_form():
+    assert hlo_cost._group_size(LINE_SET) == 4
+
+
+def test_collective_bytes_wire_model():
+    mod = "\n".join([
+        "HloModule m",
+        "ENTRY %main (p: f32[2048]) -> f32[2048] {",
+        LINE_AR,
+        "}",
+    ])
+    rec = hlo.collective_bytes(mod)
+    assert rec["all-reduce"] == 2048 * 4
+    # ring all-reduce wire = 2*S*(g-1)/g
+    assert abs(rec["wire"] - 2 * 2048 * 4 * 7 / 8) < 1
+
+def test_walker_counts_set_form_groups():
+    mod = "\n".join([
+        "HloModule m",
+        "ENTRY %main (p: f32[1024]) -> f32[1024] {",
+        LINE_SET,
+        "}",
+    ])
+    rec = hlo_cost.analyze_text(mod)
+    ag = rec["collectives"]["all-gather"]
+    assert ag == 1024 * 4 / 4  # operand = result / group_size
+    assert rec["collectives"]["wire"] > 0

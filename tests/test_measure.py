@@ -1,0 +1,78 @@
+"""IOS/YAX harness + CG solver + profile analytics."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.measure import cg, ios, profiles
+from repro.core.spmv.ops import build_operator
+from repro.matrices import generators as G
+
+
+@pytest.fixture(scope="module")
+def spd_op():
+    mat = G.stencil_2d(16, seed=0)  # diag-dominant -> SPD
+    return mat, build_operator(mat, "csr")
+
+
+class TestHarness:
+    def test_yax_returns_times(self, spd_op):
+        mat, op = spd_op
+        x = jnp.ones(mat.n, jnp.float32)
+        t = ios.run_yax(op, x, iters=4, warmup=1)
+        assert t.shape == (4,) and (t > 0).all()
+
+    def test_ios_swaps(self, spd_op):
+        mat, op = spd_op
+        x = jnp.ones(mat.n, jnp.float32)
+        t = ios.run_ios(op, x, iters=4, warmup=1)
+        assert t.shape == (4,) and (t > 0).all()
+
+    def test_gflops(self):
+        assert np.isclose(ios.gflops(500_000, np.array([1.0])), 1.0)
+
+
+class TestCG:
+    def test_solves_spd_system(self, spd_op):
+        mat, op = spd_op
+        rng = np.random.default_rng(1)
+        x_true = rng.standard_normal(mat.n)
+        b = jnp.asarray(mat.spmv(x_true), jnp.float32)
+        res = cg.cg_solve(op, b, max_iter=200, tol=1e-6)
+        got = np.asarray(res.x)
+        assert np.abs(mat.spmv(got) - np.asarray(b)).max() < 1e-2
+
+    def test_measured_cg_times(self, spd_op):
+        mat, op = spd_op
+        b = jnp.ones(mat.n, jnp.float32)
+        t = cg.cg_measured(op, b, iters=3, warmup=1)
+        assert t.shape == (3,) and (t > 0).all()
+
+
+class TestProfiles:
+    def test_performance_profile_best_is_one_at_tau1(self):
+        perf = np.array([[2.0, 1.0], [1.0, 2.0]])
+        prof = profiles.performance_profile(perf, np.array([1.0, 2.0]))
+        assert np.allclose(prof[:, 0], [0.5, 0.5])
+        assert np.allclose(prof[:, 1], [1.0, 1.0])
+
+    def test_buckets_sum_to_matrices(self):
+        sp = np.array([[0.5, 1.05, 1.2, 3.0]])
+        counts = profiles.speedup_buckets(sp)
+        assert counts.sum() == 4
+        assert counts[0, 0] == 1 and counts[0, -1] == 1
+
+    def test_pairwise_winrate_antisymmetric_no_ties(self):
+        perf = np.array([[1.0, 3.0], [2.0, 2.0]])
+        win = profiles.pairwise_win_rates(perf)
+        assert np.isclose(win[0, 1] + win[1, 0], 1.0)
+
+    def test_consistency_ratio(self):
+        # m0 speeds up both matrices; m1 slows down matrix 1
+        s = np.array([[1.5, 1.5], [1.2, 0.8]])
+        cons, n = profiles.consistency_ratio(s, tau=1.1)
+        assert n == 2 and np.isclose(cons, 0.5)
+
+    def test_consistency_empty_ccs(self):
+        s = np.array([[1.0, 1.0]])
+        cons, n = profiles.consistency_ratio(s, tau=2.0)
+        assert n == 0 and cons == 1.0

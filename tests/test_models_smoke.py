@@ -1,0 +1,113 @@
+"""Per-architecture smoke tests: reduced same-family config, one forward
+(and a grad step for a subset), asserting shapes + finiteness on CPU."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import registry
+from repro.configs.base import smoke_config
+from repro.models import model as MDL
+
+ARCHS = sorted(registry.ARCHS)
+B, S = 2, 64
+
+
+def make_batch(cfg, key, batch=B, seq=S):
+    ks = jax.random.split(key, 3)
+    out = {}
+    if cfg.embed_inputs:
+        out["tokens"] = jax.random.randint(ks[0], (batch, seq), 0, cfg.vocab)
+    else:
+        out["embeds"] = jax.random.normal(ks[0], (batch, seq, cfg.d_model),
+                                          jnp.float32)
+        out["labels"] = jax.random.randint(ks[1], (batch, seq), 0, cfg.vocab)
+    if cfg.cross_attn_period:
+        out["image_embeds"] = jax.random.normal(
+            ks[2], (batch, cfg.num_image_tokens, cfg.d_model), jnp.float32)
+    return out
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_forward_shapes_finite(arch):
+    cfg = smoke_config(registry.get(arch))
+    key = jax.random.PRNGKey(0)
+    params = MDL.init_params(cfg, key)
+    batch = make_batch(cfg, jax.random.PRNGKey(1))
+    logits, cache, metrics = jax.jit(
+        lambda p, b: MDL.forward(p, b, cfg))(params, batch)
+    assert logits.shape == (B, S, cfg.padded_vocab)
+    assert np.isfinite(np.asarray(logits)).all(), arch
+    for k, v in metrics.items():
+        assert np.isfinite(np.asarray(v)).all(), (arch, k)
+
+
+@pytest.mark.parametrize("arch", ["qwen2-7b", "qwen3-moe-30b-a3b", "rwkv6-7b",
+                                  "zamba2-7b", "gemma2-27b", "hubert-xlarge"])
+def test_train_grad_step(arch):
+    cfg = smoke_config(registry.get(arch))
+    params = MDL.init_params(cfg, jax.random.PRNGKey(0))
+    batch = make_batch(cfg, jax.random.PRNGKey(1))
+
+    def loss(p):
+        l, _ = MDL.loss_fn(p, batch, cfg, train=True)
+        return l
+
+    l, grads = jax.jit(jax.value_and_grad(loss))(params)
+    assert np.isfinite(float(l)), arch
+    flat = jax.tree_util.tree_leaves(grads)
+    assert all(np.isfinite(np.asarray(g)).all() for g in flat), arch
+    # loss magnitude sane for random init: ~ln(vocab)
+    assert 0.1 < float(l) < 3 * np.log(cfg.vocab) + 2
+
+
+@pytest.mark.parametrize("arch", [a for a in ARCHS
+                                  if not registry.get(a).encoder_only])
+def test_decode_step_matches_prefill_tail(arch):
+    """Prefill S tokens, then decode token S; logits must match a full
+    forward over S+1 tokens at the last position (cache correctness)."""
+    cfg = smoke_config(registry.get(arch))
+    params = MDL.init_params(cfg, jax.random.PRNGKey(0))
+    full = make_batch(cfg, jax.random.PRNGKey(1), batch=1, seq=17)
+    tokens = full["tokens"]
+
+    # full forward for reference
+    ref_logits, _, _ = MDL.forward(params, full, cfg)
+
+    # prefill first 16 by decoding token-by-token (exercises the cache), then
+    # compare the final step's logits.
+    cache = MDL.init_cache(cfg, 1, 32, dtype=jnp.float32)
+    step_fn = jax.jit(lambda p, b, c: MDL.forward(p, b, cfg, cache=c))
+    for t in range(17):
+        b1 = {"tokens": tokens[:, t:t + 1]}
+        if cfg.cross_attn_period:
+            b1["image_embeds"] = full["image_embeds"]
+        logits, cache, _ = step_fn(params, b1, cache)
+    got = np.asarray(logits[0, 0])
+    want = np.asarray(ref_logits[0, -1])
+    np.testing.assert_allclose(got, want, rtol=2e-2, atol=2e-2)
+
+
+def test_param_counts_match_spec():
+    """Full configs' parameter counts are in the advertised ballpark."""
+    expect = {
+        "qwen2-7b": (6e9, 9e9),
+        "command-r-plus-104b": (95e9, 115e9),
+        "gemma2-27b": (22e9, 30e9),
+        "minicpm-2b": (2e9, 3.5e9),
+        "qwen3-moe-30b-a3b": (25e9, 34e9),
+        "phi3.5-moe-42b-a6.6b": (38e9, 46e9),
+        "rwkv6-7b": (6e9, 9e9),
+        "llama-3.2-vision-11b": (8e9, 12e9),
+        "zamba2-7b": (6e9, 9e9),
+        "hubert-xlarge": (0.7e9, 1.3e9),
+    }
+    for arch, (lo, hi) in expect.items():
+        n = registry.get(arch).param_count()
+        assert lo < n < hi, (arch, f"{n/1e9:.2f}B not in [{lo/1e9}, {hi/1e9}]")
+
+
+def test_moe_active_params():
+    cfg = registry.get("qwen3-moe-30b-a3b")
+    active = cfg.active_param_count()
+    assert 2e9 < active < 5e9, f"{active/1e9:.2f}B"

@@ -1,0 +1,108 @@
+"""Reordering schemes: validity, quality, and scheme-specific invariants."""
+import numpy as np
+import pytest
+import scipy.sparse.csgraph as csg
+from hypothesis import given, settings, strategies as st
+
+from repro.core.reorder import api
+from repro.core.reorder.metis import metis_partition
+from repro.core.reorder.patoh import connectivity_cut, patoh_partition
+from repro.core.sparse import metrics, partition
+from repro.core.sparse.csr import CSRMatrix
+from repro.matrices import generators as G
+
+SCHEMES = list(api.SCHEMES)
+
+
+@pytest.fixture(scope="module")
+def corpus():
+    return {
+        "banded_shuf": G.shuffle(G.banded(512, 4, 0), 1),
+        "stencil_shuf": G.shuffle(G.stencil_2d(24, seed=2), 3),
+        "sbm": G.shuffle(G.sbm(768, 6, 0.06, 0.001, seed=4), 5),
+        "rmat": G.rmat(9, 5, seed=6),
+    }
+
+
+@pytest.mark.parametrize("scheme", SCHEMES)
+def test_permutation_valid(corpus, scheme):
+    for mat in corpus.values():
+        perm = api.reorder(mat, scheme, cache=False)
+        assert perm.shape == (mat.m,)
+        assert np.array_equal(np.sort(perm), np.arange(mat.m))
+
+
+@pytest.mark.parametrize("scheme", SCHEMES)
+def test_reorder_preserves_spectrum_sample(corpus, scheme):
+    """Permutation similarity: A and PAP^T have identical eigenvalues."""
+    mat = corpus["banded_shuf"]
+    sub = CSRMatrix.from_dense(mat.to_dense()[:96, :96])
+    perm = api.reorder(sub, scheme, cache=False)
+    w0 = np.sort(np.linalg.eigvalsh(sub.to_dense()))
+    w1 = np.sort(np.linalg.eigvalsh(sub.permute(perm).to_dense()))
+    assert np.allclose(w0, w1, atol=1e-8)
+
+
+def test_rcm_matches_scipy_bandwidth(corpus):
+    """Our RCM must reach scipy's bandwidth (+/- small slack) on every matrix."""
+    for name, mat in corpus.items():
+        ours = metrics.bandwidth(mat.permute(api.reorder(mat, "rcm", cache=False)))
+        sp = np.asarray(csg.reverse_cuthill_mckee(mat.to_scipy(), symmetric_mode=True),
+                        dtype=np.int64)
+        theirs = metrics.bandwidth(mat.permute(sp))
+        assert ours <= max(theirs * 1.25, theirs + 8), (name, ours, theirs)
+
+
+def test_rcm_recovers_banded_structure():
+    mat = G.shuffle(G.banded(1024, 6, 0), 1)
+    bw = metrics.bandwidth(mat.permute(api.reorder(mat, "rcm", cache=False)))
+    assert bw <= 16  # original half-bandwidth 6 -> RCM near-optimal
+
+
+def test_metis_cuts_communication(corpus):
+    mat = corpus["sbm"]
+    base_cut = metrics.cut_volume(mat, partition.static_partition(mat, 8))
+    rm = mat.permute(api.reorder(mat, "metis", cache=False))
+    metis_cut = metrics.cut_volume(rm, partition.static_partition(rm, 8))
+    assert metis_cut < base_cut * 0.8
+
+
+def test_louvain_finds_planted_communities():
+    mat = G.shuffle(G.sbm(512, 4, 0.2, 0.001, seed=0), 1)
+    rm = mat.permute(api.reorder(mat, "louvain", cache=False))
+    base_cut = metrics.cut_volume(mat, partition.static_partition(mat, 4))
+    lv_cut = metrics.cut_volume(rm, partition.static_partition(rm, 4))
+    assert lv_cut < base_cut
+
+
+def test_patoh_connectivity_objective(corpus):
+    mat = corpus["sbm"]
+    labels = patoh_partition(mat, 2, seed=0)
+    side = (labels > 0).astype(np.int8)
+    rng = np.random.default_rng(0)
+    rand_cut = connectivity_cut(mat, rng.permutation(side))
+    assert connectivity_cut(mat, side) < rand_cut
+
+
+def test_metis_partition_balanced(corpus):
+    mat = corpus["rmat"]
+    labels = metis_partition(mat, 8, seed=0)
+    counts = np.bincount(labels, minlength=8)
+    assert counts.max() <= mat.m / 8 * 1.6
+
+
+def test_cache_roundtrip(tmp_path, monkeypatch, corpus):
+    monkeypatch.setattr(api, "_CACHE_DIR", str(tmp_path))
+    mat = corpus["banded_shuf"]
+    p1 = api.reorder(mat, "rcm", cache=True)
+    p2 = api.reorder(mat, "rcm", cache=True)  # from cache
+    assert np.array_equal(p1, p2)
+
+
+@given(st.integers(16, 128), st.integers(0, 8))
+@settings(max_examples=10, deadline=None)
+def test_property_rcm_never_widens_optimal_band(m, seed):
+    """RCM on an already-banded matrix should stay within ~2x of its band."""
+    mat = G.banded(m, 2, seed=seed)
+    bw = metrics.bandwidth(mat.permute(api.reorder(mat, "rcm", cache=False)))
+    assert bw <= 8

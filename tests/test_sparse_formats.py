@@ -1,0 +1,130 @@
+"""CSR/Block-ELL/BCSR containers: roundtrips, permutation, conversions."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.sparse.csr import CSRMatrix
+from repro.core.sparse import bell, metrics, partition
+from repro.matrices import generators as G
+
+
+def random_sym(m, density, seed):
+    rng = np.random.default_rng(seed)
+    d = (rng.random((m, m)) < density) * rng.standard_normal((m, m))
+    d = d + d.T
+    return d, CSRMatrix.from_dense(d)
+
+
+class TestCSR:
+    def test_dense_roundtrip(self):
+        d, a = random_sym(50, 0.1, 0)
+        assert np.allclose(a.to_dense(), d)
+
+    def test_scipy_roundtrip(self):
+        d, a = random_sym(40, 0.15, 1)
+        assert np.allclose(CSRMatrix.from_scipy(a.to_scipy()).to_dense(), d)
+
+    def test_spmv_oracle(self):
+        d, a = random_sym(64, 0.1, 2)
+        x = np.random.default_rng(3).standard_normal(64)
+        assert np.allclose(a.spmv(x), d @ x)
+
+    def test_permute_matches_dense(self):
+        d, a = random_sym(33, 0.2, 4)
+        perm = np.random.default_rng(5).permutation(33)
+        assert np.allclose(a.permute(perm).to_dense(), d[np.ix_(perm, perm)])
+
+    def test_permute_keeps_symmetry(self):
+        _, a = random_sym(29, 0.2, 6)
+        perm = np.random.default_rng(7).permutation(29)
+        assert a.permute(perm).is_symmetric(tol=1e-12)
+
+    def test_transpose_symmetric(self):
+        _, a = random_sym(21, 0.3, 8)
+        t = a.transpose()
+        assert np.allclose(t.to_dense(), a.to_dense().T)
+
+    @given(st.integers(5, 40), st.integers(0, 10))
+    @settings(max_examples=20, deadline=None)
+    def test_property_permute_spmv_commutes(self, m, seed):
+        """(PAP^T)(Px) == P(Ax) — the algebra every reordering relies on."""
+        rng = np.random.default_rng(seed)
+        d = (rng.random((m, m)) < 0.3) * rng.standard_normal((m, m))
+        d = d + d.T
+        a = CSRMatrix.from_dense(d)
+        perm = rng.permutation(m)
+        x = rng.standard_normal(m)
+        inv = np.empty(m, dtype=np.int64)
+        inv[perm] = np.arange(m)
+        lhs = a.permute(perm).spmv(x[perm])
+        rhs = a.spmv(x)[perm]
+        assert np.allclose(lhs, rhs, atol=1e-10)
+
+
+class TestBlockFormats:
+    @pytest.mark.parametrize("bm,bn", [(4, 4), (8, 8), (8, 16), (16, 8)])
+    def test_bell_roundtrip(self, bm, bn):
+        d, a = random_sym(50, 0.12, 9)
+        be = bell.to_block_ell(a, bm, bn)
+        assert np.allclose(bell.bell_to_dense(be), d)
+
+    def test_bcsr_blocks_match_bell(self):
+        _, a = random_sym(40, 0.15, 10)
+        be = bell.to_block_ell(a, 8, 8)
+        bc = bell.to_bcsr(a, 8, 8)
+        assert bc.total_blocks == int(be.nblocks.sum())
+
+    def test_bell_k_cap_raises(self):
+        _, a = random_sym(32, 0.5, 11)
+        with pytest.raises(ValueError):
+            bell.to_block_ell(a, 8, 8, k=1)
+
+
+class TestPartition:
+    def test_static_covers_rows(self):
+        a = G.banded(100, 3)
+        s = partition.static_partition(a, 7)
+        assert s[0] == 0 and s[-1] == 100
+        assert (np.diff(s) >= 0).all()
+
+    def test_nnz_balanced_reduces_li(self):
+        a = G.rmat(10, 8, seed=0)
+        li_s = metrics.load_imbalance(a, partition.static_partition(a, 8))
+        li_b = metrics.load_imbalance(a, partition.nnz_balanced_partition(a, 8))
+        assert li_b <= li_s
+        assert li_b < 1.5
+
+    @given(st.integers(10, 200), st.integers(2, 16), st.integers(0, 5))
+    @settings(max_examples=25, deadline=None)
+    def test_property_partitions_valid(self, m, p, seed):
+        a = G.random_uniform(max(m, p), 4, seed=seed)
+        for starts in (partition.static_partition(a, p),
+                       partition.nnz_balanced_partition(a, p)):
+            assert starts[0] == 0 and starts[-1] == a.m
+            assert (np.diff(starts) >= 0).all()
+            assert len(starts) == p + 1
+
+    def test_chunked_cyclic_covers(self):
+        panels = partition.chunked_cyclic_panels(100, 4, 16)
+        allrows = np.sort(np.concatenate(panels))
+        assert np.array_equal(allrows, np.arange(100))
+
+
+class TestMetrics:
+    def test_bandwidth_banded(self):
+        assert metrics.bandwidth(G.banded(64, 5)) == 5
+
+    def test_block_fill_banded_better_than_shuffled(self):
+        b = G.banded(512, 4, 0)
+        s = G.shuffle(b, 1)
+        assert metrics.block_fill_ratio(b, 8, 8) > metrics.block_fill_ratio(s, 8, 8)
+
+    def test_cut_volume_zero_for_block_diagonal(self):
+        d = np.kron(np.eye(4), np.ones((8, 8)))
+        a = CSRMatrix.from_dense(d)
+        s = partition.static_partition(a, 4)
+        assert metrics.cut_volume(a, s) == 0
+
+    def test_li_lower_bound(self):
+        a = G.rmat(9, 6, 1)
+        assert metrics.load_imbalance(a, partition.static_partition(a, 4)) >= 1.0
