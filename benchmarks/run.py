@@ -1,9 +1,12 @@
 """Benchmark orchestrator — one module per paper table/figure.
 
   PYTHONPATH=src python -m benchmarks.run [--quick] [--only figXX,...]
+  PYTHONPATH=src python -m benchmarks.run --smoke   # CI: tiny end-to-end pass
 
-Prints one `name,us_per_call,derived` CSV line per benchmark (us_per_call =
-module wall time; `derived` = the module's headline findings)."""
+--smoke runs a minimal measurement pass on the smoke-tier matrices with the
+autotuned engine (interpret-mode kernels on CPU), exercising reorder ->
+tune -> build -> operator cache -> IOS timing without the full campaign
+cost. Exit status is nonzero on any failure."""
 from __future__ import annotations
 
 import argparse
@@ -29,11 +32,62 @@ MODULES = [
 ]
 
 
+def smoke() -> int:
+    """Tiny end-to-end pass for CI: smoke matrices x {baseline, rcm} with
+    the autotuned engine through the operator cache. Returns failure count."""
+    import numpy as np
+
+    from repro.core.measure import ios
+    from repro.core.reorder import api as reorder_api
+    from repro.core.spmv.opcache import build_cached
+    from repro.matrices import suite
+
+    import jax.numpy as jnp
+
+    failures = 0
+    print("name,us_per_call,derived")
+    for mname in suite.smoke_names():
+        for scheme in ("baseline", "rcm"):
+            t0 = time.time()
+            try:
+                mat = suite.get(mname)
+                rmat = (reorder_api.apply_scheme(mat, scheme)
+                        if scheme != "baseline" else mat)
+                # interpret-mode keeps the Pallas kernel path covered on CPU
+                # whenever the tuner picks a kernel engine
+                op, info = build_cached(rmat, engine="auto",
+                                        use_kernel="interpret")
+                x0 = jnp.asarray(
+                    np.random.default_rng(0).standard_normal(rmat.n),
+                    jnp.float32)
+                ms = float(np.median(ios.run_ios(op, x0, iters=3, warmup=1)))
+                # correctness gate, not just timing
+                want = rmat.spmv(np.asarray(x0))
+                err = float(np.abs(np.asarray(op(x0)) - want).max())
+                scale = float(np.abs(want).max()) + 1e-9
+                assert err / scale < 1e-4, (mname, scheme, err / scale)
+                derived = {"engine": info["engine"], "ms": round(ms, 3),
+                           "cache_hit": info["cache_hit"]}
+                us = (time.time() - t0) * 1e6
+                print(f"{mname}_{scheme},{us:.0f},"
+                      f"\"{json.dumps(derived)}\"", flush=True)
+            except Exception as e:
+                failures += 1
+                us = (time.time() - t0) * 1e6
+                print(f"{mname}_{scheme},{us:.0f},"
+                      f"\"ERROR: {type(e).__name__}: {e}\"", flush=True)
+                traceback.print_exc()
+    return failures
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--only", default="")
     args = ap.parse_args()
+    if args.smoke:
+        raise SystemExit(1 if smoke() else 0)
     only = set(args.only.split(",")) if args.only else None
 
     print("name,us_per_call,derived")

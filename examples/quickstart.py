@@ -21,10 +21,12 @@ print(f"matrix: {mat.m}x{mat.n}, nnz={mat.nnz}, "
 for scheme in ["baseline", "rcm", "metis", "louvain", "patoh"]:
     perm = reorder.reorder(mat, scheme)
     rmat = mat.permute(perm) if scheme != "baseline" else mat
-    op = build_operator(rmat, "csr")
+    # engine="auto": the OSKI-style tuner (DESIGN.md "Engine selection &
+    # autotuning") picks the format per reordered matrix
+    op = build_operator(rmat, "auto")
     ms = float(np.median(ios.run_ios(op, x, iters=8)))
     panels = partition.static_partition(rmat, 8)
-    print(f"{scheme:10s} ios={ms:7.2f}ms "
+    print(f"{scheme:10s} engine={op.plan.label():14s} ios={ms:7.2f}ms "
           f"gflops={ios.gflops(rmat.nnz, np.array([ms]))[0]:5.2f} "
           f"bandwidth={metrics.bandwidth(rmat):7d} "
           f"LI(8)={metrics.load_imbalance(rmat, panels):.3f} "

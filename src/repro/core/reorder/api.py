@@ -24,7 +24,9 @@ from .metis import metis_order, metis_partition
 from .patoh import patoh_order, patoh_partition
 from .rcm import rcm_order
 
-_CACHE_DIR = os.environ.get("REPRO_REORDER_CACHE", "/tmp/repro_reorder")
+def _cache_dir() -> str:
+    # read per call (not at import) so tests can repoint it via monkeypatch
+    return os.environ.get("REPRO_REORDER_CACHE", "/tmp/repro_reorder")
 
 
 def _identity(mat: CSRMatrix, seed: int = 0) -> np.ndarray:
@@ -92,8 +94,9 @@ def reorder(mat: CSRMatrix, scheme: str, seed: int = 0, cache: bool = True) -> n
         raise KeyError(f"unknown scheme {scheme!r}; known: {sorted(SCHEMES)}")
     if not cache:
         return SCHEMES[scheme](mat, seed)
-    os.makedirs(_CACHE_DIR, exist_ok=True)
-    path = os.path.join(_CACHE_DIR, _content_key(mat, scheme, seed) + ".npy")
+    cache_dir = _cache_dir()
+    os.makedirs(cache_dir, exist_ok=True)
+    path = os.path.join(cache_dir, _content_key(mat, scheme, seed) + ".npy")
     if os.path.exists(path):
         return np.load(path)
     perm = SCHEMES[scheme](mat, seed)

@@ -87,15 +87,10 @@ def _block_coo(mat: CSRMatrix, bm: int, bn: int):
     br, bc = r // bm, c // bn
     nbc = (n + bn - 1) // bn
     key = br * nbc + bc
-    order = np.argsort(key, kind="stable")
-    key_s = key[order]
-    uniq, starts = np.unique(key_s, return_index=True)
-    starts = np.append(starts, key_s.size)
+    uniq, inv = np.unique(key, return_inverse=True)
     blocks = np.zeros((uniq.size, bm, bn), dtype=mat.vals.dtype)
-    rr, cc, vv = r[order], c[order], mat.vals[order]
-    for i in range(uniq.size):
-        s, e = starts[i], starts[i + 1]
-        blocks[i, rr[s:e] % bm, cc[s:e] % bn] = vv[s:e]
+    # vectorized scatter: CSR guarantees unique (r, c), so no collisions
+    blocks[inv, r % bm, c % bn] = mat.vals
     return (uniq // nbc).astype(np.int32), (uniq % nbc).astype(np.int32), blocks
 
 
@@ -112,12 +107,12 @@ def to_block_ell(mat: CSRMatrix, bm: int = 8, bn: int = 128, k: int | None = Non
         raise ValueError(f"k={k} < max block count {counts.max()}")
     blocks = np.zeros((nbr, kk, bm, bn), dtype=mat.vals.dtype)
     cols = np.zeros((nbr, kk), dtype=np.int32)
-    slot = np.zeros(nbr, dtype=np.int32)
-    for i in range(br.size):
-        row = br[i]
-        blocks[row, slot[row]] = dense[i]
-        cols[row, slot[row]] = bc[i]
-        slot[row] += 1
+    # br is sorted (block-COO keys are row-major), so the slot of block i
+    # within its block row is i - first_index_of(br[i]).
+    csum = np.concatenate([[0], np.cumsum(np.bincount(br, minlength=nbr))])
+    slot = np.arange(br.size) - csum[br]
+    blocks[br, slot] = dense
+    cols[br, slot] = bc
     return BlockELL(blocks=blocks, block_cols=cols, nblocks=counts,
                     shape=(m, n), block_shape=(bm, bn))
 

@@ -130,16 +130,17 @@ class CSRMatrix:
         counts = self.row_nnz()[row_perm]
         new_rowptr = np.zeros(m + 1, dtype=np.int64)
         np.cumsum(counts, out=new_rowptr[1:])
-        new_cols = np.empty(self.nnz, dtype=np.int32)
-        new_vals = np.empty(self.nnz, dtype=self.vals.dtype)
         rp = self.rowptr.astype(np.int64)
-        for new_r, old_r in enumerate(row_perm):
-            s, e = rp[old_r], rp[old_r + 1]
-            ds = new_rowptr[new_r]
-            seg_cols = inv_col[self.cols[s:e]]
-            order = np.argsort(seg_cols, kind="stable")
-            new_cols[ds : ds + (e - s)] = seg_cols[order]
-            new_vals[ds : ds + (e - s)] = self.vals[s:e][order]
+        # Vectorized ragged gather: element j of new row i comes from
+        # rp[row_perm[i]] + j. Then one lexsort restores per-row column order.
+        offs = np.arange(self.nnz, dtype=np.int64) - np.repeat(new_rowptr[:-1], counts)
+        src = np.repeat(rp[row_perm], counts) + offs
+        new_rows = np.repeat(np.arange(m, dtype=np.int64), counts)
+        new_cols = inv_col[self.cols[src]].astype(np.int32)
+        new_vals = self.vals[src]
+        order = np.lexsort((new_cols, new_rows))
+        new_cols = new_cols[order]
+        new_vals = new_vals[order]
         return CSRMatrix(
             rowptr=new_rowptr.astype(np.int32),
             cols=new_cols,

@@ -223,13 +223,13 @@ def spmv_halo_1d(mesh: Mesh, axis_names: Tuple[str, ...], halo: int):
     x window is assembled with two collective_permutes (ring neighbours)
     instead of an all-gather."""
     ax = axis_names if len(axis_names) > 1 else axis_names[0]
+    # static device count from the mesh (jax.lax has no axis_size; the ring
+    # permutation pairs must be concrete anyway)
+    n_dev = int(np.prod([mesh.shape[a] for a in axis_names]))
 
     def local(blocks, block_cols, x_panels):
         x = x_panels[0]                          # [panel_n]
-        n_dev = 1
-        for a in (axis_names if isinstance(ax, tuple) else (ax,)):
-            n_dev *= jax.lax.axis_size(a)
-        axname = axis_names if len(axis_names) > 1 else axis_names[0]
+        axname = ax
         # my right edge -> right neighbour's left halo; and vice versa
         right_edge = x[-halo:]
         left_edge = x[:halo]

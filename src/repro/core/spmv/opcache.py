@@ -1,0 +1,167 @@
+"""Persistent tuned-operator cache.
+
+Repeated benchmark runs over the same (matrix, scheme) grid pay the
+host-side format conversion and autotuning cost every time; this cache
+makes the second run free. Entries are content-addressed the same way as
+core/reorder/api.py — a sha1 over the CSR structure AND values (operators
+embed values) plus the build request — so a reordered matrix, a different
+dtype, or a different engine request each get their own entry, and stale
+hits are impossible.
+
+Layout (one entry = two files under $REPRO_OPERATOR_CACHE, default
+/tmp/repro_opcache):
+    <key>.npz    device-array payload (operator.state() arrays)
+    <key>.json   {"cls": operator class, "meta": ..., "plan": TunePlan}
+
+`build_cached` is the single entry point; it wraps ops.build_operator /
+tune.build_tuned and returns (operator, info) where info separates
+plan-time (tune_ms, build_ms, load_ms, cache_hit) from the run-time the
+measurement harness goes on to observe — the paper's methodology point
+that preprocessing must be reported apart from SpMV time.
+
+Set REPRO_OPERATOR_CACHE=off (or cache=False) to disable.
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+import time
+
+import numpy as np
+
+from ..sparse.csr import CSRMatrix
+from .tune import TunePlan, tune
+
+
+def _cache_dir() -> str:
+    return os.environ.get("REPRO_OPERATOR_CACHE", "/tmp/repro_opcache")
+
+
+def cache_enabled() -> bool:
+    return _cache_dir().lower() not in ("off", "0", "none", "")
+
+
+def _registry() -> dict:
+    """Operator classes that speak the state()/from_state() protocol.
+    Imported lazily: kernels pull in pallas."""
+    from ...kernels.bcsr_spmv.ops import BcsrOperator
+    from ...kernels.bell_spmv.ops import BellOperator
+    from ...kernels.sell_spmv.ops import SellOperator
+    from .ops import DeviceCSR, DeviceDense, DeviceELL
+
+    return {c.__name__: c for c in
+            (DeviceCSR, DeviceELL, DeviceDense, SellOperator, BellOperator,
+             BcsrOperator)}
+
+
+def content_key(mat: CSRMatrix, engine: str, dtype_name: str,
+                block_shape=(8, 128), sell_sigma=None, probe=False) -> str:
+    """sha1 over matrix content + build request (reorder/api.py style)."""
+    h = hashlib.sha1()
+    h.update(np.ascontiguousarray(mat.rowptr).tobytes())
+    h.update(np.ascontiguousarray(mat.cols).tobytes())
+    h.update(np.ascontiguousarray(mat.vals).tobytes())
+    h.update(f"{tuple(mat.shape)}:{engine}:{dtype_name}:"
+             f"{tuple(block_shape)}:{sell_sigma}:{probe}".encode())
+    return h.hexdigest()[:20]
+
+
+def _store(key: str, op, plan: TunePlan | None) -> None:
+    d = _cache_dir()
+    os.makedirs(d, exist_ok=True)
+    meta, arrays = op.state()
+    rec = {"cls": type(op).__name__, "meta": meta,
+           "plan": plan.to_json() if plan is not None else None}
+    # both files tmp+rename so concurrent campaign processes never observe a
+    # half-written entry; the .json is renamed LAST and gates the read
+    pid = os.getpid()
+    ztmp = os.path.join(d, f"{key}.{pid}.npz.tmp")
+    with open(ztmp, "wb") as f:
+        np.savez(f, **arrays)
+    os.replace(ztmp, os.path.join(d, key + ".npz"))
+    jtmp = os.path.join(d, f"{key}.{pid}.json.tmp")
+    with open(jtmp, "w") as f:
+        json.dump(rec, f)
+    os.replace(jtmp, os.path.join(d, key + ".json"))
+
+
+def _load(key: str, dtype):
+    d = _cache_dir()
+    jpath = os.path.join(d, key + ".json")
+    zpath = os.path.join(d, key + ".npz")
+    if not (os.path.exists(jpath) and os.path.exists(zpath)):
+        return None, None
+    try:
+        with open(jpath) as f:
+            rec = json.load(f)
+        z = np.load(zpath)
+        arrays = {k: z[k] for k in z.files}
+        cls = _registry().get(rec["cls"])
+        if cls is None:
+            return None, None
+        op = cls.from_state(rec["meta"], arrays, dtype=dtype)
+        plan = TunePlan.from_json(rec["plan"]) if rec.get("plan") else None
+    except Exception:
+        # corrupt, truncated, or schema-incompatible entry (the cache is
+        # persistent across code versions): treat as a miss and rebuild
+        return None, None
+    if plan is not None:
+        op.plan = plan
+    return op, plan
+
+
+def build_cached(mat: CSRMatrix, engine: str = "auto", dtype=None,
+                 block_shape=(8, 128), sell_sigma=None, probe: bool = False,
+                 use_kernel: str = "auto", cache: bool = True):
+    """Build (or reload) an operator. Returns (op, info).
+
+    info: {"cache_hit", "key", "tune_ms", "build_ms", "load_ms",
+           "engine", "plan"} — plan-time accounting for the benchmarks.
+    """
+    import jax.numpy as jnp
+
+    from .ops import build_operator
+    from .tune import build_from_plan
+
+    dt = jnp.float32 if dtype is None else dtype
+    dtype_name = jnp.dtype(dt).name
+    use_cache = cache and cache_enabled()
+    key = content_key(mat, engine, dtype_name, block_shape, sell_sigma,
+                      probe) if use_cache else None
+    info = {"cache_hit": False, "key": key, "tune_ms": 0.0, "build_ms": 0.0,
+            "load_ms": 0.0, "engine": engine, "plan": None}
+
+    if use_cache:
+        t0 = time.perf_counter()
+        op, plan = _load(key, dt)
+        if op is not None:
+            # restored kernel choice must match THIS process's backend (an
+            # entry written on TPU may be reloaded on CPU and vice versa)
+            if getattr(op, "use_kernel", None) is not None:
+                import jax
+
+                op.use_kernel = use_kernel if use_kernel != "auto" else (
+                    "pallas" if jax.default_backend() == "tpu" else "ref")
+            info.update(cache_hit=True,
+                        load_ms=(time.perf_counter() - t0) * 1e3,
+                        engine=plan.engine if plan else engine,
+                        plan=plan.to_json() if plan else None)
+            return op, info
+
+    plan = None
+    t0 = time.perf_counter()
+    if engine == "auto":
+        plan = tune(mat, probe=probe, dtype=dt, use_kernel=use_kernel)
+        info["tune_ms"] = (time.perf_counter() - t0) * 1e3
+        t0 = time.perf_counter()
+        op = build_from_plan(mat, plan, dtype=dt, use_kernel=use_kernel)
+    else:
+        op = build_operator(mat, engine, dtype=dt, block_shape=block_shape,
+                            use_kernel=use_kernel, sell_sigma=sell_sigma)
+    info["build_ms"] = (time.perf_counter() - t0) * 1e3
+    info["engine"] = plan.engine if plan else engine
+    info["plan"] = plan.to_json() if plan else None
+    if use_cache:
+        _store(key, op, plan)
+    return op, info

@@ -22,9 +22,10 @@ import numpy as np
 
 from ..sparse.bell import to_bcsr, to_block_ell
 from ..sparse.csr import CSRMatrix
+from ..sparse.sell import to_sell
 from . import ref
 
-Engine = Literal["csr", "ell", "bell", "bcsr", "dense"]
+Engine = Literal["csr", "ell", "sell", "bell", "bcsr", "dense", "auto"]
 
 
 @functools.partial(jax.jit, static_argnames=("m",))
@@ -66,6 +67,23 @@ class DeviceCSR:
     def __call__(self, x: jax.Array) -> jax.Array:
         return _csr_matvec(self.row_ids, self.cols, self.vals, x, self.m)
 
+    # -- operator-cache protocol (opcache.py) ------------------------------
+    def state(self):
+        meta = {"m": self.m, "n": self.n, "nnz": self.nnz}
+        arrays = {"row_ids": np.asarray(self.row_ids),
+                  "cols": np.asarray(self.cols),
+                  "vals": np.asarray(self.vals)}
+        return meta, arrays
+
+    @classmethod
+    def from_state(cls, meta, arrays, dtype=jnp.float32):
+        op = object.__new__(cls)
+        op.m, op.n, op.nnz = meta["m"], meta["n"], meta["nnz"]
+        op.row_ids = jnp.asarray(arrays["row_ids"])
+        op.cols = jnp.asarray(arrays["cols"])
+        op.vals = jnp.asarray(arrays["vals"], dtype=dtype)
+        return op
+
 
 class DeviceELL:
     def __init__(self, mat: CSRMatrix, dtype=jnp.float32):
@@ -75,15 +93,31 @@ class DeviceELL:
         cols = np.zeros((mat.m, k), dtype=np.int32)
         vals = np.zeros((mat.m, k), dtype=np.float64)
         rp = mat.rowptr.astype(np.int64)
-        for i in range(mat.m):
-            c = counts[i]
-            cols[i, :c] = mat.cols[rp[i]:rp[i + 1]]
-            vals[i, :c] = mat.vals[rp[i]:rp[i + 1]]
+        # vectorized scatter: element e of row r lands at (r, e - rowptr[r])
+        r = np.repeat(np.arange(mat.m), counts)
+        j = np.arange(mat.nnz) - np.repeat(rp[:-1], counts)
+        cols[r, j] = mat.cols
+        vals[r, j] = mat.vals
         self.ell_cols = jnp.asarray(cols)
         self.ell_vals = jnp.asarray(vals, dtype=dtype)
+        self.padded_nnz = mat.m * k
 
     def __call__(self, x: jax.Array) -> jax.Array:
         return _ell_matvec(self.ell_cols, self.ell_vals, x)
+
+    def state(self):
+        meta = {"m": self.m, "n": self.n, "padded_nnz": self.padded_nnz}
+        return meta, {"ell_cols": np.asarray(self.ell_cols),
+                      "ell_vals": np.asarray(self.ell_vals)}
+
+    @classmethod
+    def from_state(cls, meta, arrays, dtype=jnp.float32):
+        op = object.__new__(cls)
+        op.m, op.n = meta["m"], meta["n"]
+        op.padded_nnz = meta["padded_nnz"]
+        op.ell_cols = jnp.asarray(arrays["ell_cols"])
+        op.ell_vals = jnp.asarray(arrays["ell_vals"], dtype=dtype)
+        return op
 
 
 class DeviceDense:
@@ -93,17 +127,48 @@ class DeviceDense:
     def __call__(self, x: jax.Array) -> jax.Array:
         return self.a @ x
 
+    def state(self):
+        return {}, {"a": np.asarray(self.a)}
+
+    @classmethod
+    def from_state(cls, meta, arrays, dtype=jnp.float32):
+        op = object.__new__(cls)
+        op.a = jnp.asarray(arrays["a"], dtype=dtype)
+        return op
+
 
 def build_operator(mat: CSRMatrix, engine: Engine = "csr", dtype=jnp.float32,
                    block_shape=(8, 128), use_kernel: str = "auto",
-                   nnz_bucket: int = 0):
-    """Factory: host CSRMatrix -> callable device operator y = A @ x."""
+                   nnz_bucket: int = 0, sell_sigma: int | None = None,
+                   probe: bool = False):
+    """Factory: host CSRMatrix -> callable device operator y = A @ x.
+
+    engine="auto" runs the OSKI-style tuner (core/spmv/tune.py): a cost
+    model over structural metrics (optionally refined by empirical probing
+    when probe=True) picks the engine and its shape parameters; the chosen
+    plan is attached to the returned operator as `.plan`.
+
+    For engine="sell", block_shape is (slice height C, chunk width W) and
+    sell_sigma is the σ sort window (default 8 * C).
+    """
+    if engine == "auto":
+        from .tune import build_tuned
+
+        return build_tuned(mat, dtype=dtype, probe=probe,
+                           use_kernel=use_kernel, nnz_bucket=nnz_bucket)
     if engine == "csr":
         return DeviceCSR(mat, dtype, nnz_bucket=nnz_bucket)
     if engine == "ell":
         return DeviceELL(mat, dtype)
     if engine == "dense":
         return DeviceDense(mat, dtype)
+    if engine == "sell":
+        from ...kernels.sell_spmv.ops import SellOperator
+
+        c, w = block_shape
+        sigma = 8 * c if sell_sigma is None else sell_sigma
+        return SellOperator(to_sell(mat, c=c, sigma=sigma, w=w), dtype,
+                            use_kernel)
     if engine == "bell":
         from ...kernels.bell_spmv.ops import BellOperator
 

@@ -1,0 +1,243 @@
+"""OSKI-style per-matrix engine autotuning (Akbudak et al.; Schubert et al.).
+
+SpMV is bandwidth-bound, so the cheap cost model scores each candidate
+(engine, shape) by the bytes it streams per multiply — stored values +
+index metadata + an x-gather term scaled by a locality penalty derived from
+the structural metrics the paper uses (bandwidth, row-nnz CV, block fill).
+The model is exact for the padded formats (their footprint IS their traffic)
+and a calibrated proxy for the gather engines.
+
+Two tuning modes:
+  * model  — rank candidates by modelled bytes, build the argmin. Free.
+  * probe  — additionally time the top PROBE_TOP_K candidates once
+             (OSKI's empirical search) and build the measured winner.
+
+`build_tuned` is what `build_operator(mat, engine="auto")` calls; the
+chosen `TunePlan` rides on the returned operator as `.plan` so benchmarks
+can report plan-time decisions next to run-time numbers. Persistent reuse
+of tuned operators across processes lives in opcache.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Optional
+
+import numpy as np
+
+from ..sparse import metrics
+from ..sparse.csr import CSRMatrix
+from ..sparse.sell import pick_chunk_width, sell_padded_nnz
+
+# dense fallback threshold: below this many logical entries the dense
+# engine's simplicity beats any sparse format's index traffic
+_DENSE_MAX_ENTRIES = 64 * 64
+PROBE_TOP_K = 3
+PROBE_ITERS = 3
+
+_VAL = 4          # float32 bytes
+_IDX = 4          # int32 bytes
+
+
+@dataclasses.dataclass(frozen=True)
+class TunePlan:
+    engine: str                       # chosen engine name
+    block_shape: tuple                # (bm, bn) bell/bcsr; (C, W) sell
+    sell_sigma: Optional[int]         # σ window (sell only)
+    cost_bytes: float                 # modelled bytes/SpMV of the choice
+    costs: dict                       # candidate label -> modelled bytes
+    features: dict                    # structural features the model used
+    source: str                       # "model" | "probe"
+    probe_ms: Optional[dict] = None   # candidate label -> measured ms
+    tune_ms: float = 0.0              # wall time spent deciding
+
+    def label(self) -> str:
+        return _label(self.engine, self.block_shape, self.sell_sigma)
+
+    def to_json(self) -> dict:
+        d = dataclasses.asdict(self)
+        d["block_shape"] = list(self.block_shape)
+        return d
+
+    @staticmethod
+    def from_json(d: dict) -> "TunePlan":
+        d = dict(d)
+        d["block_shape"] = tuple(d["block_shape"])
+        return TunePlan(**d)
+
+
+def _label(engine: str, block_shape: tuple, sigma: Optional[int]) -> str:
+    if engine in ("csr", "ell", "dense"):
+        return engine
+    if engine == "sell":
+        return f"sell_c{block_shape[0]}w{block_shape[1]}s{sigma}"
+    return f"{engine}_{block_shape[0]}x{block_shape[1]}"
+
+
+def matrix_features(mat: CSRMatrix, bm: int = 8, bn: int = 128) -> dict:
+    """The structural quantities the cost model conditions on."""
+    counts = mat.row_nnz()
+    mean = float(counts.mean()) if mat.m else 0.0
+    cv = float(counts.std() / mean) if mean > 0 else 0.0
+    r = np.repeat(np.arange(mat.m, dtype=np.int64), counts)
+    c = mat.cols.astype(np.int64)
+    nbc = (mat.n + bn - 1) // bn
+    bkeys = (r // bm) * nbc + (c // bn)
+    ub, bcounts = np.unique(bkeys, return_counts=True) if mat.nnz else (
+        np.empty(0, np.int64), np.empty(0, np.int64))
+    nblocks = int(ub.size)
+    br_counts = np.bincount((ub // nbc).astype(np.int64),
+                            minlength=(mat.m + bm - 1) // bm) if nblocks else \
+        np.zeros((mat.m + bm - 1) // max(bm, 1), dtype=np.int64)
+    return {
+        "m": int(mat.m),
+        "n": int(mat.n),
+        "nnz": int(mat.nnz),
+        "row_nnz_max": int(counts.max()) if mat.m else 0,
+        "row_nnz_cv": cv,
+        "avg_row_bandwidth": metrics.avg_row_bandwidth(mat),
+        "block_fill": float(mat.nnz / max(nblocks * bm * bn, 1)),
+        "nonempty_blocks": nblocks,
+        "block_row_max": int(br_counts.max()) if br_counts.size else 0,
+        "num_block_rows": int(br_counts.shape[0]),
+    }
+
+
+def _gather_penalty(feat: dict, line: int = 128) -> float:
+    """Model of x-vector re-read traffic for element-gather engines.
+
+    When the matrix bandwidth is small, consecutive rows touch the same x
+    cache lines / VMEM tiles and the effective x traffic approaches one
+    read of x; when nonzeros are scattered (shuffled/uniform matrices), each
+    nonzero pays a full line fetch. Interpolate on avg row bandwidth
+    measured in lines — the quantity RCM minimizes.
+    """
+    spread = feat["avg_row_bandwidth"] / line
+    return 1.0 + min(spread, 8.0)
+
+
+def candidate_cost(feat: dict, engine: str, block_shape: tuple = (8, 128),
+                   sigma: Optional[int] = None,
+                   sell_pad: Optional[int] = None) -> float:
+    """Modelled bytes streamed per SpMV."""
+    m, n, nnz = feat["m"], feat["n"], feat["nnz"]
+    gather = _gather_penalty(feat)
+    if engine == "dense":
+        return float(m * n * _VAL + n * _VAL + m * _VAL)
+    if engine == "csr":
+        # vals + cols + row ids (COO expansion) + gathered x + y
+        return float(nnz * (_VAL + 2 * _IDX) + nnz * _VAL * gather * 0.25
+                     + m * _VAL)
+    if engine == "ell":
+        k = max(feat["row_nnz_max"], 1)
+        pad = m * k
+        return float(pad * (_VAL + _IDX) + pad * _VAL * gather * 0.25
+                     + m * _VAL)
+    if engine == "sell":
+        pad = sell_pad if sell_pad is not None else nnz
+        return float(pad * (_VAL + _IDX) + pad * _VAL * gather * 0.25
+                     + m * _VAL)
+    if engine == "bell":
+        bm, bn = block_shape
+        pad_blocks = feat["num_block_rows"] * max(feat["block_row_max"], 1)
+        return float(pad_blocks * (bm * bn * _VAL + _IDX)
+                     + pad_blocks * bn * _VAL + m * _VAL)
+    if engine == "bcsr":
+        bm, bn = block_shape
+        blocks = max(feat["nonempty_blocks"], 1)
+        return float(blocks * (bm * bn * _VAL + 2 * _IDX)
+                     + blocks * bn * _VAL + m * _VAL)
+    raise KeyError(engine)
+
+
+def enumerate_candidates(mat: CSRMatrix, feat: dict) -> list[dict]:
+    """(engine, shape) grid the tuner searches. Kept deliberately small —
+    OSKI's lesson is that a handful of well-chosen candidates capture the
+    attainable speedup."""
+    cands = [
+        dict(engine="csr", block_shape=(8, 128), sigma=None),
+        dict(engine="ell", block_shape=(8, 128), sigma=None),
+        dict(engine="bell", block_shape=(8, 128), sigma=None),
+        dict(engine="bcsr", block_shape=(8, 128), sigma=None),
+    ]
+    c = 8
+    w_fit = pick_chunk_width(mat)
+    for w in {w_fit, 128}:
+        # σ = whole-matrix sort packs similar-degree rows best; the small
+        # window keeps rows near their reordered position (cache locality)
+        for sigma in (8 * c, max(int(feat["m"]), 1)):
+            cands.append(dict(engine="sell", block_shape=(c, w), sigma=sigma,
+                              sell_pad=sell_padded_nnz(mat, c, sigma, w)))
+    if feat["m"] * feat["n"] <= _DENSE_MAX_ENTRIES:
+        cands.append(dict(engine="dense", block_shape=(8, 128), sigma=None))
+    return cands
+
+
+def tune(mat: CSRMatrix, probe: bool = False, dtype=None,
+         use_kernel: str = "auto") -> TunePlan:
+    """Pick (engine, shape) for `mat`. probe=True times the top candidates."""
+    t0 = time.perf_counter()
+    feat = matrix_features(mat)
+    cands = enumerate_candidates(mat, feat)
+    costs = {}
+    for cd in cands:
+        costs[_label(cd["engine"], cd["block_shape"], cd["sigma"])] = \
+            candidate_cost(feat, cd["engine"], cd["block_shape"], cd["sigma"],
+                           cd.get("sell_pad"))
+    ranked = sorted(cands, key=lambda cd: costs[
+        _label(cd["engine"], cd["block_shape"], cd["sigma"])])
+    probe_ms = None
+    best = ranked[0]
+    source = "model"
+    if probe:
+        import jax.numpy as jnp
+
+        from ..measure import ios
+        from .ops import build_operator
+
+        dt = jnp.float32 if dtype is None else dtype
+        rng = np.random.default_rng(0)
+        x0 = jnp.asarray(rng.standard_normal(mat.n), dt)
+        probe_ms = {}
+        best_ms = np.inf
+        for cd in ranked[:PROBE_TOP_K]:
+            lab = _label(cd["engine"], cd["block_shape"], cd["sigma"])
+            op = build_operator(mat, cd["engine"], dtype=dt,
+                               block_shape=cd["block_shape"],
+                               sell_sigma=cd["sigma"], use_kernel=use_kernel)
+            ms = float(np.median(ios.run_ios(op, x0, iters=PROBE_ITERS,
+                                             warmup=1)))
+            probe_ms[lab] = ms
+            if ms < best_ms:
+                best_ms, best = ms, cd
+        source = "probe"
+    lab = _label(best["engine"], best["block_shape"], best["sigma"])
+    return TunePlan(engine=best["engine"], block_shape=best["block_shape"],
+                    sell_sigma=best["sigma"], cost_bytes=costs[lab],
+                    costs=costs, features=feat, source=source,
+                    probe_ms=probe_ms,
+                    tune_ms=(time.perf_counter() - t0) * 1e3)
+
+
+def build_from_plan(mat: CSRMatrix, plan: TunePlan, dtype=None,
+                    use_kernel: str = "auto", nnz_bucket: int = 0):
+    """Materialize the operator a plan describes (used by the op cache)."""
+    import jax.numpy as jnp
+
+    from .ops import build_operator
+
+    dt = jnp.float32 if dtype is None else dtype
+    op = build_operator(mat, plan.engine, dtype=dt,
+                        block_shape=plan.block_shape,
+                        sell_sigma=plan.sell_sigma, use_kernel=use_kernel,
+                        nnz_bucket=nnz_bucket)
+    op.plan = plan
+    return op
+
+
+def build_tuned(mat: CSRMatrix, dtype=None, probe: bool = False,
+                use_kernel: str = "auto", nnz_bucket: int = 0):
+    """engine="auto" entry point: tune, build, attach the plan."""
+    plan = tune(mat, probe=probe, dtype=dtype, use_kernel=use_kernel)
+    return build_from_plan(mat, plan, dtype=dtype, use_kernel=use_kernel,
+                           nnz_bucket=nnz_bucket)

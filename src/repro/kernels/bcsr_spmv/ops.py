@@ -71,3 +71,25 @@ class BcsrOperator:
     def flops(self) -> int:
         t, bm, bn = self.blocks.shape
         return 2 * t * bm * bn
+
+    # -- operator-cache protocol (core/spmv/opcache.py) --------------------
+    def state(self):
+        meta = {"shape": list(self.shape),
+                "block_shape": list(self.block_shape),
+                "nbr": self.nbr, "ncb": self.ncb,
+                "use_kernel": self.use_kernel}
+        return meta, {"blocks": np.asarray(self.blocks),
+                      "block_rows": np.asarray(self.block_rows),
+                      "block_cols": np.asarray(self.block_cols)}
+
+    @classmethod
+    def from_state(cls, meta, arrays, dtype=jnp.float32):
+        op = object.__new__(cls)
+        op.shape = tuple(meta["shape"])
+        op.block_shape = tuple(meta["block_shape"])
+        op.nbr, op.ncb = meta["nbr"], meta["ncb"]
+        op.use_kernel = meta["use_kernel"]
+        op.blocks = jnp.asarray(arrays["blocks"], dtype=dtype)
+        op.block_rows = jnp.asarray(arrays["block_rows"])
+        op.block_cols = jnp.asarray(arrays["block_cols"])
+        return op

@@ -53,3 +53,22 @@ class BellOperator:
         """MXU flops per SpMV (2 * padded block volume)."""
         nbr, k, bm, bn = self.blocks.shape
         return 2 * nbr * k * bm * bn
+
+    # -- operator-cache protocol (core/spmv/opcache.py) --------------------
+    def state(self):
+        meta = {"shape": list(self.shape),
+                "block_shape": list(self.block_shape),
+                "ncb": self.ncb, "use_kernel": self.use_kernel}
+        return meta, {"blocks": np.asarray(self.blocks),
+                      "block_cols": np.asarray(self.block_cols)}
+
+    @classmethod
+    def from_state(cls, meta, arrays, dtype=jnp.float32):
+        op = object.__new__(cls)
+        op.shape = tuple(meta["shape"])
+        op.block_shape = tuple(meta["block_shape"])
+        op.ncb = meta["ncb"]
+        op.use_kernel = meta["use_kernel"]
+        op.blocks = jnp.asarray(arrays["blocks"], dtype=dtype)
+        op.block_cols = jnp.asarray(arrays["block_cols"])
+        return op

@@ -1,0 +1,77 @@
+"""Pallas TPU kernel: SELL-C-σ SpMV/SpMM (flattened-chunk grid).
+
+Storage (core/sparse/sell.py): the matrix is a flat list of [C, W] chunks —
+C rows of one slice x W lane-aligned element slots — with a scalar-prefetched
+`chunk_slice` map naming the slice each chunk belongs to. Slices with few
+nonzeros contribute few chunks, so power-law matrices do O(nnz) grid steps
+instead of Block-ELL's O(slices * K_max).
+
+Per grid step the VPU does an elementwise multiply of the chunk's values
+against the gathered x elements and a lane reduction into the slice's y
+tile. The y tile stays resident in VMEM across the (consecutive) chunks of
+one slice and is re-initialized when `chunk_slice` changes — the same
+revisit-consecutive reduction contract as the BCSR kernel.
+
+x stays whole in VMEM (the corpus vectors are <= a few hundred KB) and the
+per-element x[col] gather happens on-chip; this is the TPU translation of
+the CPU SELL kernel's gather loads. The gather is exercised through
+interpret mode on CPU (tests force it); the jnp oracle in ref.py is the
+non-TPU fallback engine.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _sell_kernel(chunk_slice_ref, cols_ref, vals_ref, x_ref, y_ref, *,
+                 acc_dtype):
+    g = pl.program_id(0)
+    sl = chunk_slice_ref[g]
+    prev = chunk_slice_ref[jnp.maximum(g - 1, 0)]
+    is_first = jnp.logical_or(g == 0, sl != prev)
+
+    @pl.when(is_first)
+    def _init():
+        y_ref[...] = jnp.zeros_like(y_ref)
+
+    cols = cols_ref[0]                       # [C, W] int32
+    vals = vals_ref[0].astype(acc_dtype)     # [C, W]
+    xg = x_ref[cols].astype(acc_dtype)       # on-chip gather: [C, W, nv]
+    part = jnp.sum(vals[..., None] * xg, axis=1)        # [C, nv]
+    y_ref[0] += part.astype(y_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("num_slices", "interpret"))
+def sell_spmm(chunk_vals: jax.Array, chunk_cols: jax.Array,
+              chunk_slice: jax.Array, x: jax.Array, num_slices: int,
+              interpret: bool = False) -> jax.Array:
+    """y[S, C, nv] = SELL(chunk_vals, chunk_cols, chunk_slice) @ x[n_pad, nv].
+
+    chunk_vals: [T, C, W] (padding slots are 0)
+    chunk_cols: [T, C, W] int32 (padding -> 0, result-neutral via zero vals)
+    chunk_slice: int32[T], nondecreasing, covering every slice in [0, S)
+    """
+    t, c, w = chunk_vals.shape
+    n_pad, nv = x.shape
+    acc_dtype = jnp.float32
+
+    return pl.pallas_call(
+        functools.partial(_sell_kernel, acc_dtype=acc_dtype),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=(t,),
+            in_specs=[
+                pl.BlockSpec((1, c, w), lambda g, cs: (g, 0, 0)),
+                pl.BlockSpec((1, c, w), lambda g, cs: (g, 0, 0)),
+                pl.BlockSpec((n_pad, nv), lambda g, cs: (0, 0)),
+            ],
+            out_specs=pl.BlockSpec((1, c, nv), lambda g, cs: (cs[g], 0, 0)),
+        ),
+        out_shape=jax.ShapeDtypeStruct((num_slices, c, nv), x.dtype),
+        interpret=interpret,
+    )(chunk_slice, chunk_cols, chunk_vals, x)

@@ -1,0 +1,88 @@
+"""Jit'd public wrapper for SELL-C-σ SpMV: host format in, vector out.
+
+Handles x padding, the σ-sort un-permute (inv_perm gather) and the
+pallas / interpret / jnp-ref engine choice, mirroring bell_spmv/ops.py.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ...core.sparse.sell import SellCS
+from .kernel import sell_spmm
+from .ref import sell_spmm_ref
+
+
+class SellOperator:
+    """Device-resident SELL-C-σ operator: y = A @ x."""
+
+    def __init__(self, host: SellCS, dtype=jnp.float32, use_kernel: str = "auto"):
+        self.shape = host.shape
+        self.c = host.c
+        self.sigma = host.sigma
+        self.w = host.w
+        self.num_slices = host.num_slices
+        # pad x to a lane multiple (gather indices all < n, so padding is
+        # never read; it only keeps the VMEM buffer tile-aligned)
+        self.n_pad = ((host.shape[1] + 127) // 128) * 128
+        self.chunk_vals = jnp.asarray(host.chunk_vals, dtype=dtype)
+        self.chunk_cols = jnp.asarray(host.chunk_cols, dtype=jnp.int32)
+        self.chunk_slice = jnp.asarray(host.chunk_slice, dtype=jnp.int32)
+        self.inv_perm = jnp.asarray(host.inv_perm, dtype=jnp.int32)
+        if use_kernel == "auto":
+            use_kernel = "pallas" if jax.default_backend() == "tpu" else "ref"
+        self.use_kernel = use_kernel
+
+    def __call__(self, x: jax.Array) -> jax.Array:
+        """x: [n] or [n, nv] -> y: [m] or [m, nv]."""
+        squeeze = x.ndim == 1
+        if squeeze:
+            x = x[:, None]
+        n, nv = x.shape
+        xp = jnp.pad(x, ((0, self.n_pad - n), (0, 0)))
+        if self.use_kernel == "pallas":
+            y = sell_spmm(self.chunk_vals, self.chunk_cols, self.chunk_slice,
+                          xp, self.num_slices)
+        elif self.use_kernel == "interpret":
+            y = sell_spmm(self.chunk_vals, self.chunk_cols, self.chunk_slice,
+                          xp, self.num_slices, interpret=True)
+        else:
+            y = sell_spmm_ref(self.chunk_vals, self.chunk_cols,
+                              self.chunk_slice, xp, self.num_slices)
+        # y is in slice order; inv_perm[r] = slice position of original row r
+        y = y.reshape(-1, nv)[self.inv_perm]
+        return y[:, 0] if squeeze else y
+
+    # -- operator-cache protocol (core/spmv/opcache.py) --------------------
+    def state(self):
+        meta = {"shape": list(self.shape), "c": self.c, "sigma": self.sigma,
+                "w": self.w, "num_slices": self.num_slices,
+                "n_pad": self.n_pad, "use_kernel": self.use_kernel}
+        arrays = {"chunk_vals": np.asarray(self.chunk_vals),
+                  "chunk_cols": np.asarray(self.chunk_cols),
+                  "chunk_slice": np.asarray(self.chunk_slice),
+                  "inv_perm": np.asarray(self.inv_perm)}
+        return meta, arrays
+
+    @classmethod
+    def from_state(cls, meta, arrays, dtype=jnp.float32):
+        op = object.__new__(cls)
+        op.shape = tuple(meta["shape"])
+        op.c, op.sigma, op.w = meta["c"], meta["sigma"], meta["w"]
+        op.num_slices, op.n_pad = meta["num_slices"], meta["n_pad"]
+        op.use_kernel = meta["use_kernel"]
+        op.chunk_vals = jnp.asarray(arrays["chunk_vals"], dtype=dtype)
+        op.chunk_cols = jnp.asarray(arrays["chunk_cols"])
+        op.chunk_slice = jnp.asarray(arrays["chunk_slice"])
+        op.inv_perm = jnp.asarray(arrays["inv_perm"])
+        return op
+
+    @property
+    def padded_nnz(self) -> int:
+        """Stored element count — the format's work/footprint measure."""
+        return int(np.prod(self.chunk_vals.shape))
+
+    def flops(self) -> int:
+        """VPU flops per SpMV (2 * stored elements, padding included)."""
+        return 2 * self.padded_nnz

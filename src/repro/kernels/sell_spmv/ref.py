@@ -1,0 +1,12 @@
+"""Pure-jnp oracle for the SELL-C-σ kernel (same signature as kernel.py)."""
+from __future__ import annotations
+
+import jax
+
+from ...core.spmv.ref import spmv_sell
+
+
+def sell_spmm_ref(chunk_vals: jax.Array, chunk_cols: jax.Array,
+                  chunk_slice: jax.Array, x: jax.Array,
+                  num_slices: int) -> jax.Array:
+    return spmv_sell(chunk_vals, chunk_cols, chunk_slice, x, num_slices)

@@ -145,6 +145,25 @@ def kron_graph(base_m: int, power: int, density: float = 0.3, seed: int = 0) -> 
     return _symmetrize_coo(r, c, g.shape[0], rng)
 
 
+def power_law(m: int, alpha: float = 2.1, max_deg: int | None = None,
+              seed: int = 0) -> CSRMatrix:
+    """Configuration-model graph with zipf(alpha) row degrees.
+
+    The explicit row-skew stressor for the SELL-vs-ELL comparison: a few
+    hub rows carry O(max_deg) nonzeros while the bulk stay at 1-3, so
+    padded-ELL storage explodes (m * max_deg) while SELL-C-σ stays O(nnz).
+    Lower alpha = heavier tail. Degrees are capped at max_deg
+    (default m // 4) to keep the matrix buildable.
+    """
+    rng = np.random.default_rng(seed)
+    cap = m // 4 if max_deg is None else max_deg
+    deg = np.minimum(rng.zipf(alpha, size=m).astype(np.int64), max(cap, 1))
+    # configuration model: pair stubs uniformly (hubs attract edges in
+    # proportion to their degree, preserving the skew after symmetrization)
+    stubs = np.repeat(np.arange(m, dtype=np.int64), deg)
+    return _symmetrize_coo(stubs, rng.permutation(stubs), m, rng)
+
+
 def random_uniform(m: int, avg_deg: int, seed: int = 0) -> CSRMatrix:
     """Erdos-Renyi-ish uniform random (Fig. 1 right regime)."""
     rng = np.random.default_rng(seed)

@@ -30,7 +30,7 @@ def _cached(name: str, thunk: Callable[[], CSRMatrix]) -> CSRMatrix:
     if os.path.exists(path):
         z = np.load(path)
         return CSRMatrix(rowptr=z["rowptr"], cols=z["cols"], vals=z["vals"],
-                         shape=tuple(z["shape"]))
+                         shape=tuple(int(v) for v in z["shape"]))
     mat = thunk()
     np.savez(path, rowptr=mat.rowptr, cols=mat.cols, vals=mat.vals,
              shape=np.asarray(mat.shape))
@@ -74,6 +74,11 @@ def _bench_defs() -> Dict[str, Callable[[], CSRMatrix]]:
     # uniform random (no structure to find — reordering should not help)
     for i, (m, d) in enumerate([(16384, 8), (32768, 12), (65536, 6)]):
         defs[f"uniform_m{m}_d{d}"] = lambda m=m, d=d, i=i: G.random_uniform(m, d, seed=i)
+    # explicit power-law row skew (hub rows; padded-ELL worst case, the
+    # regime the SELL-C-σ engine and the autotuner exist for)
+    for i, (m, a) in enumerate([(16384, 2.1), (32768, 1.9), (16384, 1.7)]):
+        defs[f"powerlaw_m{m}_a{round(a * 10)}"] = (
+            lambda m=m, a=a, i=i: G.power_law(m, alpha=a, seed=i))
     return defs
 
 
@@ -137,6 +142,7 @@ def _smoke_defs() -> Dict[str, Callable[[], CSRMatrix]]:
         "smoke_stencil": lambda: G.stencil_2d(20, seed=2),
         "smoke_rmat": lambda: G.rmat(8, 4, seed=3),
         "smoke_sbm": lambda: G.shuffle(G.sbm(512, 8, 0.08, 0.002, seed=4), seed=5),
+        "smoke_powerlaw": lambda: G.power_law(1024, alpha=1.9, seed=6),
     }
 
 

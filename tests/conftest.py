@@ -1,0 +1,113 @@
+"""Test-environment shims.
+
+The container image does not ship `hypothesis`; rather than fork every
+property test, install a minimal deterministic stand-in that supports the
+subset this suite uses (`given`, `settings`, `strategies.integers`,
+`strategies.sampled_from`, `strategies.booleans`, `strategies.floats`).
+
+The stub enumerates a fixed, seeded sample of the strategy space
+(`max_examples` draws), so property tests stay deterministic across runs —
+weaker than real shrinking/search, but sufficient as a regression net and
+it keeps the suite green without network installs. If the real package is
+present it is used untouched.
+"""
+from __future__ import annotations
+
+import functools
+import itertools
+import random
+import sys
+import types
+
+
+def _install_hypothesis_stub() -> None:
+    try:
+        import hypothesis  # noqa: F401
+
+        return
+    except ImportError:
+        pass
+
+    class _Strategy:
+        def __init__(self, draw):
+            self._draw = draw
+
+        def example(self, rng):
+            return self._draw(rng)
+
+    def integers(min_value=None, max_value=None):
+        lo = -(2**31) if min_value is None else int(min_value)
+        hi = 2**31 - 1 if max_value is None else int(max_value)
+
+        def draw(rng, lo=lo, hi=hi):
+            # bias toward boundaries the way hypothesis does
+            pick = rng.random()
+            if pick < 0.15:
+                return lo
+            if pick < 0.3:
+                return hi
+            return rng.randint(lo, hi)
+
+        return _Strategy(draw)
+
+    def sampled_from(seq):
+        seq = list(seq)
+
+        def draw(rng, seq=seq):
+            return rng.choice(seq)
+
+        return _Strategy(draw)
+
+    def booleans():
+        return sampled_from([False, True])
+
+    def floats(min_value=0.0, max_value=1.0, **_kw):
+        def draw(rng, lo=float(min_value), hi=float(max_value)):
+            return lo + (hi - lo) * rng.random()
+
+        return _Strategy(draw)
+
+    def settings(max_examples=20, deadline=None, **_kw):
+        def deco(fn):
+            fn._stub_max_examples = max_examples
+            return fn
+
+        return deco
+
+    def given(*strategies, **kw_strategies):
+        def deco(fn):
+            max_examples = getattr(fn, "_stub_max_examples", 20)
+
+            # NB: no functools.wraps — pytest must not see the original
+            # signature (it would treat the drawn params as fixtures).
+            # *args only carries `self` when the test is a method.
+            def wrapper(*args):
+                rng = random.Random(0xC0FFEE)
+                for i in range(max_examples):
+                    drawn = tuple(s.example(rng) for s in strategies)
+                    drawn_kw = {k: s.example(rng) for k, s in kw_strategies.items()}
+                    fn(*args, *drawn, **drawn_kw)
+
+            wrapper.__name__ = fn.__name__
+            wrapper.__doc__ = fn.__doc__
+            wrapper.hypothesis_stub = True
+            return wrapper
+
+        return deco
+
+    mod = types.ModuleType("hypothesis")
+    strategies_mod = types.ModuleType("hypothesis.strategies")
+    strategies_mod.integers = integers
+    strategies_mod.sampled_from = sampled_from
+    strategies_mod.booleans = booleans
+    strategies_mod.floats = floats
+    mod.given = given
+    mod.settings = settings
+    mod.strategies = strategies_mod
+    mod.HealthCheck = types.SimpleNamespace(too_slow=None, data_too_large=None)
+    mod.__is_stub__ = True
+    sys.modules["hypothesis"] = mod
+    sys.modules["hypothesis.strategies"] = strategies_mod
+
+
+_install_hypothesis_stub()

@@ -85,6 +85,7 @@ def test_distributed_spmv_8dev():
     r = subprocess.run([sys.executable, "-c", SCRIPT], capture_output=True,
                        text=True, timeout=600,
                        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
+                            "JAX_PLATFORMS": "cpu",
                             "HOME": "/root"})
     assert r.returncode == 0, r.stdout + r.stderr
     assert "1D OK" in r.stdout and "2D OK" in r.stdout
@@ -127,6 +128,7 @@ def test_halo_exchange_spmv():
     r = subprocess.run([sys.executable, "-c", SCRIPT_HALO],
                        capture_output=True, text=True, timeout=600,
                        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
+                            "JAX_PLATFORMS": "cpu",
                             "HOME": "/root"})
     assert r.returncode == 0, r.stdout + r.stderr
     assert "HALO OK" in r.stdout

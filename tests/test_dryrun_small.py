@@ -65,6 +65,7 @@ def test_small_mesh_dryrun():
     r = subprocess.run([sys.executable, "-c", SCRIPT], capture_output=True,
                        text=True, timeout=1200,
                        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
+                            "JAX_PLATFORMS": "cpu",
                             "HOME": "/root"})
     assert r.returncode == 0, r.stdout[-2000:] + r.stderr[-3000:]
     assert "TRAIN_OK" in r.stdout and "DECODE_OK" in r.stdout

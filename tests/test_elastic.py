@@ -63,6 +63,7 @@ def test_elastic_remesh_resume():
     r = subprocess.run([sys.executable, "-c", SCRIPT], capture_output=True,
                        text=True, timeout=1200,
                        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
+                            "JAX_PLATFORMS": "cpu",
                             "HOME": "/root"})
     assert r.returncode == 0, r.stdout[-2000:] + r.stderr[-3000:]
     assert "ELASTIC_OK" in r.stdout

@@ -96,5 +96,6 @@ def test_collective_in_sharded_program():
     r = subprocess.run([sys.executable, "-c", script], capture_output=True,
                        text=True, timeout=300,
                        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
+                            "JAX_PLATFORMS": "cpu",
                             "HOME": "/root"})
     assert "COLL_OK" in r.stdout, r.stdout + r.stderr

@@ -92,7 +92,7 @@ def test_metis_partition_balanced(corpus):
 
 
 def test_cache_roundtrip(tmp_path, monkeypatch, corpus):
-    monkeypatch.setattr(api, "_CACHE_DIR", str(tmp_path))
+    monkeypatch.setenv("REPRO_REORDER_CACHE", str(tmp_path))
     mat = corpus["banded_shuf"]
     p1 = api.reorder(mat, "rcm", cache=True)
     p2 = api.reorder(mat, "rcm", cache=True)  # from cache

@@ -1,0 +1,181 @@
+"""SELL-C-σ engine, OSKI-style autotuner, and persistent operator cache.
+
+Covers the PR's acceptance criteria:
+  * cross-engine equivalence (csr/ell/sell/bell/bcsr vs the dense numpy
+    oracle) over the generator suites — including the power-law row-skew
+    generator — under every reorder scheme in PAPER_SCHEMES
+  * SELL beats padded-ELL storage by >= 2x on power-law skew
+  * build_operator(mat, engine="auto") returns a tuned operator with a plan
+  * the second spmv_bench invocation on the same (matrix, scheme) hits the
+    operator cache (no reconversion / re-tune)
+"""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.reorder import api as reorder_api
+from repro.core.sparse.csr import CSRMatrix
+from repro.core.sparse.sell import (pick_chunk_width, sell_padded_nnz,
+                                    sell_to_dense, to_sell)
+from repro.core.spmv.ops import DeviceELL, build_operator
+from repro.matrices import generators as G
+
+ENGINES = ["csr", "ell", "sell", "bell", "bcsr"]
+
+MATS = {
+    "banded": lambda: G.banded(64, 3, 0),
+    "stencil": lambda: G.stencil_2d(8, seed=1),
+    "rmat": lambda: G.rmat(6, 4, 2),
+    "powerlaw": lambda: G.power_law(96, alpha=1.8, seed=3),
+    "sbm": lambda: G.shuffle(G.sbm(96, 4, 0.2, 0.01, seed=4), seed=5),
+}
+
+
+def _check_engine(mat, engine, x, want, tol=1e-5):
+    kw = {"block_shape": (4, 4)} if engine in ("bell", "bcsr", "sell") else {}
+    op = build_operator(mat, engine, **kw)
+    got = np.asarray(op(jnp.asarray(x, jnp.float32)))
+    scale = np.abs(want).max() + 1e-9
+    assert np.abs(got - want).max() / scale < tol, engine
+
+
+@pytest.mark.parametrize("engine", ENGINES)
+@pytest.mark.parametrize("matname", list(MATS))
+@pytest.mark.parametrize("scheme", ["baseline"] + reorder_api.PAPER_SCHEMES)
+def test_cross_engine_equivalence(engine, matname, scheme):
+    """Every engine x matrix family x paper scheme must match the oracle."""
+    mat = MATS[matname]()
+    if scheme != "baseline":
+        perm = reorder_api.reorder(mat, scheme, cache=False)
+        mat = mat.permute(perm)
+    x = np.random.default_rng(0).standard_normal(mat.n)
+    want = mat.spmv(x)  # numpy oracle == dense oracle (test_sparse_formats)
+    _check_engine(mat, engine, x, want)
+
+
+@given(st.integers(8, 80), st.integers(0, 5))
+@settings(max_examples=10, deadline=None)
+def test_property_sell_matches_oracle_on_skew(m, seed):
+    mat = G.power_law(max(m, 8), alpha=1.8, seed=seed)
+    x = np.random.default_rng(seed).standard_normal(mat.n)
+    want = mat.spmv(x)
+    for c, sigma, w in [(4, 8, 8), (8, 64, 16), (8, 1, 4)]:
+        op = build_operator(mat, "sell", block_shape=(c, w), sell_sigma=sigma)
+        got = np.asarray(op(jnp.asarray(x, jnp.float32)))
+        scale = np.abs(want).max() + 1e-9
+        assert np.abs(got - want).max() / scale < 1e-5, (c, sigma, w)
+
+
+def test_sell_roundtrip_and_perm():
+    mat = G.power_law(200, alpha=1.9, seed=7)
+    s = to_sell(mat, c=8, sigma=64, w=16)
+    assert np.allclose(sell_to_dense(s), mat.to_dense())
+    # row_perm restricted to real rows is a permutation of [0, m)
+    real = s.row_perm[s.row_perm < mat.m]
+    assert np.array_equal(np.sort(real), np.arange(mat.m))
+    assert s.padded_nnz == sell_padded_nnz(mat, 8, 64, 16)
+
+
+def test_sell_interpret_kernel_matches_ref():
+    mat = G.power_law(128, alpha=1.9, seed=8)
+    x = np.random.default_rng(8).standard_normal(mat.n)
+    ops = [build_operator(mat, "sell", block_shape=(8, 16), use_kernel=uk)
+           for uk in ("ref", "interpret")]
+    outs = [np.asarray(op(jnp.asarray(x, jnp.float32))) for op in ops]
+    assert np.allclose(outs[0], outs[1], atol=1e-5 * (np.abs(outs[0]).max() + 1))
+
+
+def test_sell_beats_ell_padding_2x_on_power_law():
+    """Acceptance: >= 2x fewer stored elements than padded ELL on skew."""
+    mat = G.power_law(4096, alpha=1.9, seed=0)
+    ell_pad = DeviceELL(mat).padded_nnz
+    w = pick_chunk_width(mat)
+    sell_pad = sell_padded_nnz(mat, c=8, sigma=mat.m, w=w)
+    assert sell_pad * 2 <= ell_pad, (sell_pad, ell_pad)
+    # and the actual built format agrees with the prediction
+    op = build_operator(mat, "sell", block_shape=(8, w), sell_sigma=mat.m)
+    assert op.padded_nnz == sell_pad
+
+
+def test_auto_engine_returns_tuned_operator():
+    mat = G.power_law(512, alpha=1.9, seed=1)
+    op = build_operator(mat, "auto")
+    assert hasattr(op, "plan")
+    assert op.plan.engine in ENGINES + ["dense"]
+    assert op.plan.source == "model"
+    assert op.plan.costs  # every candidate was scored
+    x = np.random.default_rng(1).standard_normal(mat.n)
+    want = mat.spmv(x)
+    got = np.asarray(op(jnp.asarray(x, jnp.float32)))
+    assert np.abs(got - want).max() / (np.abs(want).max() + 1e-9) < 1e-5
+
+
+def test_auto_engine_probe_mode():
+    mat = G.banded(256, 4, 0)
+    op = build_operator(mat, "auto", probe=True)
+    assert op.plan.source == "probe"
+    assert op.plan.probe_ms and all(v > 0 for v in op.plan.probe_ms.values())
+
+
+def test_tuner_prefers_ell_on_uniform_rows_and_not_on_skew():
+    from repro.core.spmv.tune import tune
+
+    banded = tune(G.banded(2048, 8, 0))
+    skew = tune(G.power_law(2048, alpha=1.8, seed=0))
+    assert banded.engine == "ell"
+    # on heavy skew padded-ELL must never win
+    assert skew.engine != "ell"
+
+
+def test_operator_cache_hit(tmp_path, monkeypatch):
+    """Acceptance: second spmv_bench invocation on the same (matrix, scheme)
+    reloads the tuned operator — no reconversion, no re-tune."""
+    monkeypatch.setenv("REPRO_OPERATOR_CACHE", str(tmp_path / "opcache"))
+    monkeypatch.setenv("REPRO_REORDER_CACHE", str(tmp_path / "reorder"))
+    from repro.launch.spmv_bench import run_single
+
+    r1 = run_single("smoke_powerlaw", "rcm", iters=2, write_results=False)
+    r2 = run_single("smoke_powerlaw", "rcm", iters=2, write_results=False)
+    assert not r1["cache_hit"]
+    assert r2["cache_hit"]
+    assert r2["tune_ms"] == 0.0 and r2["build_ms"] == 0.0
+    assert r2["engine"] == r1["engine"]
+    # a different scheme is a different cache entry
+    r3 = run_single("smoke_powerlaw", "baseline", iters=2, write_results=False)
+    assert not r3["cache_hit"]
+
+
+def test_operator_cache_roundtrip_all_engines(tmp_path, monkeypatch):
+    monkeypatch.setenv("REPRO_OPERATOR_CACHE", str(tmp_path))
+    from repro.core.spmv.opcache import build_cached
+
+    mat = G.power_law(256, alpha=1.9, seed=2)
+    x = np.random.default_rng(2).standard_normal(mat.n)
+    want = mat.spmv(x)
+    for eng in ENGINES + ["dense", "auto"]:
+        kw = {"block_shape": (4, 4)} if eng in ("bell", "bcsr", "sell") else {}
+        _, i1 = build_cached(mat, eng, **kw)
+        op, i2 = build_cached(mat, eng, **kw)
+        assert not i1["cache_hit"] and i2["cache_hit"], eng
+        got = np.asarray(op(jnp.asarray(x, jnp.float32)))
+        assert np.abs(got - want).max() / (np.abs(want).max() + 1e-9) < 1e-4, eng
+
+
+def test_cache_disabled_via_env(tmp_path, monkeypatch):
+    monkeypatch.setenv("REPRO_OPERATOR_CACHE", "off")
+    from repro.core.spmv.opcache import build_cached
+
+    mat = G.banded(64, 2, 0)
+    _, i1 = build_cached(mat, "csr")
+    _, i2 = build_cached(mat, "csr")
+    assert not i1["cache_hit"] and not i2["cache_hit"]
+
+
+def test_power_law_generator_is_skewed_and_symmetric():
+    mat = G.power_law(2048, alpha=1.8, seed=0)
+    # duplicate edges sum in different orders for (i,j) vs (j,i): structure
+    # is exactly symmetric, values only to fp addition order
+    assert mat.is_symmetric(tol=1e-9)
+    counts = mat.row_nnz()
+    assert counts.max() >= 8 * np.median(counts)  # genuine hub rows
