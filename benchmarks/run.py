@@ -29,6 +29,7 @@ MODULES = [
     "bell_formats",
     "moe_dispatch",
     "roofline",
+    "spmm_batch",
 ]
 
 

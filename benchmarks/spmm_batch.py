@@ -1,0 +1,134 @@
+"""SpMM batch-width sweep: does reordering's benefit grow or shrink with k?
+
+For k ∈ {1, 2, 4, 8, 16, 32} RHS vectors, time `op.matmul(X[n, k])` under
+the IOS protocol for each (matrix, scheme, engine) cell and report the
+amortized time-per-vector. Two questions:
+
+  * amortization — per-vector time should fall with k (the matrix stream
+    and dispatch overhead are paid once per SpMM), fastest for the SELL
+    engine whose k-tiled kernel reuses each chunk across the vector tile;
+  * reordering × batching — reordering's speedup comes from x-gather
+    locality, whose share of total traffic shrinks as matrix bytes
+    amortize, so the rcm-vs-baseline ratio is expected to move with k
+    (the hypergraph locality models' prediction; CSV column
+    `speedup_vs_baseline`).
+
+    PYTHONPATH=src python -m benchmarks.spmm_batch [--quick | --smoke]
+
+Writes benchmarks/results/spmm_batch.csv.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+
+import numpy as np
+
+from repro.core.measure import ios
+from repro.core.reorder import api as reorder_api
+from repro.core.spmv.opcache import build_cached
+from repro.matrices import suite
+
+from .common import RESULTS_DIR, write_csv
+
+K_SWEEP = [1, 2, 4, 8, 16, 32]
+ENGINES = ["sell", "csr", "auto"]
+SCHEMES = ["baseline", "rcm"]
+
+FULL_MATRICES = ["powerlaw_m16384_a21", "banded_shuf_m16384_bw8",
+                 "stencil2d_shuf_128", "smallworld_m16384_k6"]
+QUICK_MATRICES = ["powerlaw_m16384_a21", "banded_shuf_m16384_bw8"]
+SMOKE_MATRICES = ["smoke_powerlaw", "smoke_banded"]
+
+
+def _measure_cell(rmat, engine: str, k: int, iters: int) -> dict:
+    op, info = build_cached(rmat, engine=engine, k=k)
+    ms = float(np.median(ios.run_ios_batched(op, rmat.n, k, iters=iters,
+                                             warmup=2)))
+    plan = getattr(op, "plan", None)      # k-specialized label, e.g. csr@k8
+    return {
+        "engine": info["engine"],
+        "plan_label": plan.label() if plan is not None else info["engine"],
+        "spmm_ms": ms,
+        "per_vector_ms": ms / k,
+        "gflops": float(ios.gflops(rmat.nnz * k, np.array([ms]))[0]),
+    }
+
+
+def run(quick: bool = True, smoke: bool = False, iters: int | None = None) -> dict:
+    matrices = SMOKE_MATRICES if smoke else (
+        QUICK_MATRICES if quick else FULL_MATRICES)
+    iters = iters if iters is not None else (3 if smoke else 6)
+    # smoke must still span k values ABOVE the SELL k-tile floor (8), so
+    # the decreasing-per-vector gate reflects real amortization, not just
+    # tile padding
+    ks = [1, 2, 8, 32] if smoke else K_SWEEP
+
+    rows = []
+    cells = {}
+    for mname in matrices:
+        mat = suite.get(mname)
+        for scheme in SCHEMES:
+            rmat = (reorder_api.apply_scheme(mat, scheme)
+                    if scheme != "baseline" else mat)
+            for engine in ENGINES:
+                for k in ks:
+                    rec = _measure_cell(rmat, engine, k, iters)
+                    cells[(mname, scheme, engine, k)] = rec
+                    rows.append([mname, scheme, engine, rec["engine"],
+                                 rec["plan_label"], k,
+                                 f"{rec['spmm_ms']:.4f}",
+                                 f"{rec['per_vector_ms']:.4f}",
+                                 f"{rec['gflops']:.3f}", ""])
+    # speedup_vs_baseline: same (matrix, engine, k), scheme vs baseline
+    for i, row in enumerate(rows):
+        mname, scheme, engine, k = row[0], row[1], row[2], row[5]
+        base = cells.get((mname, "baseline", engine, k))
+        if base and scheme != "baseline":
+            rows[i][-1] = f"{base['spmm_ms'] / cells[(mname, scheme, engine, k)]['spmm_ms']:.3f}"
+
+    path = os.path.join(RESULTS_DIR, "spmm_batch.csv")
+    write_csv(path, ["matrix", "scheme", "engine", "resolved_engine",
+                     "plan_label", "k", "spmm_ms", "per_vector_ms", "gflops",
+                     "speedup_vs_baseline"], rows)
+
+    # derived summary: amortization ratio per engine (k=1 per-vec time over
+    # widest-k per-vec time, >1 means batching pays), plus the sell check
+    # the acceptance criterion names
+    kmax = ks[-1]
+    derived = {"csv": path, "k_sweep": ks, "matrices": matrices}
+    for engine in ENGINES:
+        ratios = []
+        for mname in matrices:
+            for scheme in SCHEMES:
+                c1 = cells.get((mname, scheme, engine, 1))
+                ck = cells.get((mname, scheme, engine, kmax))
+                if c1 and ck:
+                    ratios.append(c1["per_vector_ms"] / ck["per_vector_ms"])
+        if ratios:
+            derived[f"{engine}_amortization_x"] = round(
+                float(np.median(ratios)), 2)
+    sell1 = [cells[(m, s, "sell", 1)]["per_vector_ms"]
+             for m in matrices for s in SCHEMES]
+    sellk = [cells[(m, s, "sell", kmax)]["per_vector_ms"]
+             for m in matrices for s in SCHEMES]
+    derived["sell_per_vec_decreases"] = bool(
+        np.median(sellk) < np.median(sell1))
+    return derived
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny CI pass on the smoke matrices")
+    args = ap.parse_args()
+    derived = run(quick=args.quick, smoke=args.smoke)
+    print(derived)
+    if not derived.get("sell_per_vec_decreases", False):
+        raise SystemExit("amortized per-vector time did not decrease with k "
+                         "for the SELL engine")
+
+
+if __name__ == "__main__":
+    main()

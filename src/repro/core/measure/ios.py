@@ -55,6 +55,24 @@ def run_ios(op: Callable, x0: jax.Array, iters: int = 20, warmup: int = 3) -> np
     return times
 
 
+def run_ios_batched(op, n: int, k: int, iters: int = 20, warmup: int = 3,
+                    dtype=None, seed: int = 0) -> np.ndarray:
+    """IOS-time the k-RHS path of an operator. Returns ms[iters].
+
+    Pins the measurement convention in ONE place for the benchmarks, the
+    launcher, and the tuner probe: k == 1 times the SpMV `__call__` (the
+    honest unbatched baseline — no k-tile padding inflating it), k > 1
+    times `op.matmul` on an [n, k] block.
+    """
+    dt = jnp.float32 if dtype is None else dtype
+    rng = np.random.default_rng(seed)
+    if k <= 1:
+        return run_ios(op, jnp.asarray(rng.standard_normal(n), dt),
+                       iters=iters, warmup=warmup)
+    x0 = jnp.asarray(rng.standard_normal((n, k)), dt)
+    return run_ios(op.matmul, x0, iters=iters, warmup=warmup)
+
+
 def gflops(nnz: int, ms: np.ndarray) -> np.ndarray:
     """2 flops per nonzero (mul + add), paper's convention."""
     return 2.0 * nnz / (ms * 1e-3) / 1e9

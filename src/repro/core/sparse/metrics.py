@@ -57,15 +57,20 @@ def bandwidth(mat: CSRMatrix) -> int:
 
 
 def profile(mat: CSRMatrix) -> int:
-    """sum_i (i - min_col(i)) over the lower triangle — the 'envelope'."""
-    total = 0
+    """sum_i (i - min_col(i)) over the lower triangle — the 'envelope'.
+
+    Vectorized per-row minima via ufunc.reduceat: the segment from a
+    nonempty row's rowptr to the NEXT nonempty row's rowptr is exactly that
+    row's elements (empty rows in between contribute none), so reduceat
+    over the nonempty starts gives every row min in one pass.
+    """
     rp = mat.rowptr.astype(np.int64)
     nnz_rows = np.flatnonzero(np.diff(rp) > 0)
-    for i in nnz_rows:
-        cmin = mat.cols[rp[i] : rp[i + 1]].min()
-        if cmin < i:
-            total += int(i - cmin)
-    return total
+    if nnz_rows.size == 0:
+        return 0
+    cmin = np.minimum.reduceat(mat.cols, rp[nnz_rows]).astype(np.int64)
+    d = nnz_rows - cmin
+    return int(d[d > 0].sum())
 
 
 def avg_row_bandwidth(mat: CSRMatrix) -> float:
@@ -87,12 +92,18 @@ def distinct_col_blocks(mat: CSRMatrix, panel_starts: np.ndarray, block_n: int) 
     kernel. Lower = better data movement (what RCM improves).
     """
     rp = mat.rowptr.astype(np.int64)
-    out = np.zeros(len(panel_starts) - 1, dtype=np.int64)
+    p = len(panel_starts) - 1
+    if mat.nnz == 0 or p == 0:
+        return np.zeros(p, dtype=np.int64)
     blocks = mat.cols.astype(np.int64) // block_n
-    for p in range(len(panel_starts) - 1):
-        s, e = rp[panel_starts[p]], rp[panel_starts[p + 1]]
-        out[p] = np.unique(blocks[s:e]).size
-    return out
+    bounds = rp[np.asarray(panel_starts, dtype=np.int64)]   # [P+1] nnz offsets
+    # panel of each in-panel nonzero (linear repeat over segment lengths,
+    # same construction as partition_to_owner), then count distinct
+    # (panel, block) pairs in one vectorized unique over composite keys
+    pid = np.repeat(np.arange(p, dtype=np.int64), np.diff(bounds))
+    nbt = (mat.n + block_n - 1) // block_n
+    uniq = np.unique(pid * nbt + blocks[bounds[0]:bounds[-1]])
+    return np.bincount(uniq // nbt, minlength=p).astype(np.int64)
 
 
 def block_fill_ratio(mat: CSRMatrix, block_m: int, block_n: int) -> float:
@@ -129,11 +140,15 @@ def cut_volume(mat: CSRMatrix, panel_starts: np.ndarray) -> int:
     This is what hypergraph partitioning minimizes and what turns into
     collective bytes in the distributed SpMV.
     """
-    m = mat.m
-    owner = np.zeros(m, dtype=np.int64)
-    for p in range(len(panel_starts) - 1):
-        owner[panel_starts[p] : panel_starts[p + 1]] = p
-    r = np.repeat(np.arange(m), mat.row_nnz()).astype(np.int64)
+    # tolerant owner map (old-loop semantics: rows outside the partition
+    # belong to panel 0) — partition_to_owner is the strict covering-
+    # partition variant, and this metric, like halo_width, must keep
+    # accepting prefix/partial partitions
+    starts = np.asarray(panel_starts, dtype=np.int64)
+    owner = np.zeros(mat.m, dtype=np.int32)
+    owner[starts[0]:starts[-1]] = np.repeat(
+        np.arange(starts.size - 1, dtype=np.int32), np.diff(starts))
+    r = np.repeat(np.arange(mat.m), mat.row_nnz()).astype(np.int64)
     c = mat.cols.astype(np.int64)
     return int(np.count_nonzero(owner[r] != owner[c]))
 
@@ -145,14 +160,20 @@ def halo_width(mat: CSRMatrix, panel_starts: np.ndarray) -> int:
     bounds the halo-exchange size of the distributed SpMV.
     """
     rp = mat.rowptr.astype(np.int64)
-    worst = 0
-    for p in range(len(panel_starts) - 1):
-        r0, r1 = panel_starts[p], panel_starts[p + 1]
-        s, e = rp[r0], rp[r1]
-        if e > s:
-            seg = mat.cols[s:e].astype(np.int64)
-            worst = max(worst, int(max(r0 - seg.min(), seg.max() - (r1 - 1), 0)))
-    return worst
+    starts = np.asarray(panel_starts, dtype=np.int64)
+    bounds = rp[starts]                              # [P+1] nnz offsets
+    ne = np.flatnonzero(np.diff(bounds) > 0)         # nonempty panels
+    if ne.size == 0:
+        return 0
+    # reduceat over nonempty panel starts: each segment is exactly that
+    # panel's elements (empty panels in between contribute none); slicing
+    # at bounds[-1] keeps the LAST segment inside the final panel even for
+    # a partition that does not reach row m
+    cols = mat.cols[:bounds[-1]].astype(np.int64)
+    cmin = np.minimum.reduceat(cols, bounds[ne])
+    cmax = np.maximum.reduceat(cols, bounds[ne])
+    reach = np.maximum(starts[ne] - cmin, cmax - (starts[ne + 1] - 1))
+    return int(max(np.max(reach), 0))
 
 
 def summary(mat: CSRMatrix, p: int = 8, block: int = 128) -> dict:

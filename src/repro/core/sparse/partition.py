@@ -29,13 +29,27 @@ def nnz_balanced_partition(mat: CSRMatrix, p: int) -> np.ndarray:
     Greedy prefix splitter: panel k ends at the first row where the running
     nnz count reaches (k+1)/P of total. Rows are never split (same
     granularity as the paper's rowPanel_start).
+
+    Invariants (property-tested in tests/test_partition_props.py): result
+    has length p+1, starts at 0, ends at m, is nondecreasing, and panel
+    loads sum to nnz with max load <= nnz/p + max_row_nnz. Edge cases:
+      * p > m — trailing/interspersed panels come out empty but the offsets
+        stay monotone and cover every row exactly once;
+      * a giant row swallowing several targets — maximum.accumulate
+        collapses the overtaken cuts onto the row boundary (empty panels);
+      * nnz == 0 — no balance signal exists, fall back to equal-row panels.
     """
+    if p < 1:
+        raise ValueError(f"p must be >= 1, got {p}")
+    if mat.m == 0:
+        return np.zeros(p + 1, dtype=np.int64)
+    if mat.nnz == 0:
+        return static_block_panels(mat.m, p)
     rp = mat.rowptr.astype(np.int64)
-    total = mat.nnz
-    targets = (np.arange(1, p, dtype=np.float64) * total / p)
+    targets = (np.arange(1, p, dtype=np.float64) * mat.nnz / p)
     # rp is nondecreasing; searchsorted finds the split rows.
     cuts = np.searchsorted(rp[1:], targets, side="left") + 1
-    cuts = np.clip(cuts, 1, mat.m)
+    cuts = np.minimum(cuts, mat.m)
     starts = np.concatenate([[0], cuts, [mat.m]]).astype(np.int64)
     # enforce monotonicity when several targets land in one giant row
     starts = np.maximum.accumulate(starts)
@@ -57,11 +71,13 @@ def chunked_cyclic_panels(m: int, p: int, chunk: int) -> list[np.ndarray]:
 
 
 def partition_to_owner(panel_starts: np.ndarray, m: int) -> np.ndarray:
-    """int[m] — panel id owning each row."""
-    owner = np.zeros(m, dtype=np.int32)
-    for pnl in range(len(panel_starts) - 1):
-        owner[panel_starts[pnl] : panel_starts[pnl + 1]] = pnl
-    return owner
+    """int[m] — panel id owning each row. panel_starts must cover [0, m]."""
+    starts = np.asarray(panel_starts, dtype=np.int64)
+    if starts.size == 0 or starts[0] != 0 or starts[-1] != m:
+        raise ValueError(f"panel_starts must cover [0, {m}], got "
+                         f"{starts[:1]}..{starts[-1:]}")
+    return np.repeat(np.arange(starts.size - 1, dtype=np.int32),
+                     np.diff(starts))
 
 
 def pad_panels_to_uniform(mat: CSRMatrix, panel_starts: np.ndarray):

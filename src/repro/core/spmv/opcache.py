@@ -26,6 +26,7 @@ from __future__ import annotations
 import hashlib
 import json
 import os
+import threading
 import time
 
 import numpy as np
@@ -56,14 +57,24 @@ def _registry() -> dict:
 
 
 def content_key(mat: CSRMatrix, engine: str, dtype_name: str,
-                block_shape=(8, 128), sell_sigma=None, probe=False) -> str:
-    """sha1 over matrix content + build request (reorder/api.py style)."""
+                block_shape=(8, 128), sell_sigma=None, probe=False,
+                k: int = 1) -> str:
+    """sha1 over matrix content + build request (reorder/api.py style).
+
+    k (the RHS batch width the tuner planned for) is part of the request:
+    a k=8-specialized plan may pick a different engine than the k=1 plan
+    for the same matrix, so they are distinct cache entries. For a FIXED
+    engine k never changes the stored format, so it is normalized out of
+    the key — a k-sweep over one engine is a single entry.
+    """
+    if engine != "auto":
+        k = 1
     h = hashlib.sha1()
     h.update(np.ascontiguousarray(mat.rowptr).tobytes())
     h.update(np.ascontiguousarray(mat.cols).tobytes())
     h.update(np.ascontiguousarray(mat.vals).tobytes())
     h.update(f"{tuple(mat.shape)}:{engine}:{dtype_name}:"
-             f"{tuple(block_shape)}:{sell_sigma}:{probe}".encode())
+             f"{tuple(block_shape)}:{sell_sigma}:{probe}:{int(k)}".encode())
     return h.hexdigest()[:20]
 
 
@@ -73,14 +84,16 @@ def _store(key: str, op, plan: TunePlan | None) -> None:
     meta, arrays = op.state()
     rec = {"cls": type(op).__name__, "meta": meta,
            "plan": plan.to_json() if plan is not None else None}
-    # both files tmp+rename so concurrent campaign processes never observe a
-    # half-written entry; the .json is renamed LAST and gates the read
-    pid = os.getpid()
-    ztmp = os.path.join(d, f"{key}.{pid}.npz.tmp")
+    # both files tmp+rename so concurrent writers never publish a
+    # half-written entry; the .json is renamed LAST and gates the read.
+    # tmp names carry pid AND thread id: same-process threads (e.g. two
+    # SpmvService dispatchers) must not interleave into one tmp file
+    tag = f"{os.getpid()}.{threading.get_ident()}"
+    ztmp = os.path.join(d, f"{key}.{tag}.npz.tmp")
     with open(ztmp, "wb") as f:
         np.savez(f, **arrays)
     os.replace(ztmp, os.path.join(d, key + ".npz"))
-    jtmp = os.path.join(d, f"{key}.{pid}.json.tmp")
+    jtmp = os.path.join(d, f"{key}.{tag}.json.tmp")
     with open(jtmp, "w") as f:
         json.dump(rec, f)
     os.replace(jtmp, os.path.join(d, key + ".json"))
@@ -113,8 +126,12 @@ def _load(key: str, dtype):
 
 def build_cached(mat: CSRMatrix, engine: str = "auto", dtype=None,
                  block_shape=(8, 128), sell_sigma=None, probe: bool = False,
-                 use_kernel: str = "auto", cache: bool = True):
+                 use_kernel: str = "auto", cache: bool = True, k: int = 1):
     """Build (or reload) an operator. Returns (op, info).
+
+    k is the RHS batch width to tune for (engine="auto"); the stored entry
+    carries the k-specialized plan, so a reload restores both the device
+    arrays and the plan that justified them.
 
     info: {"cache_hit", "key", "tune_ms", "build_ms", "load_ms",
            "engine", "plan"} — plan-time accounting for the benchmarks.
@@ -128,7 +145,7 @@ def build_cached(mat: CSRMatrix, engine: str = "auto", dtype=None,
     dtype_name = jnp.dtype(dt).name
     use_cache = cache and cache_enabled()
     key = content_key(mat, engine, dtype_name, block_shape, sell_sigma,
-                      probe) if use_cache else None
+                      probe, k=k) if use_cache else None
     info = {"cache_hit": False, "key": key, "tune_ms": 0.0, "build_ms": 0.0,
             "load_ms": 0.0, "engine": engine, "plan": None}
 
@@ -152,7 +169,7 @@ def build_cached(mat: CSRMatrix, engine: str = "auto", dtype=None,
     plan = None
     t0 = time.perf_counter()
     if engine == "auto":
-        plan = tune(mat, probe=probe, dtype=dt, use_kernel=use_kernel)
+        plan = tune(mat, probe=probe, dtype=dt, use_kernel=use_kernel, k=k)
         info["tune_ms"] = (time.perf_counter() - t0) * 1e3
         t0 = time.perf_counter()
         op = build_from_plan(mat, plan, dtype=dt, use_kernel=use_kernel)

@@ -10,6 +10,12 @@ Engines:
 
 `DeviceCSR.matvec` is what the measurement harness times; it is a single
 jit-compiled XLA computation per (matrix, engine).
+
+Every operator also exposes `matmul(x)` — the multi-vector SpMM path
+(y[m, k] = A @ x[n, k]) that amortizes the matrix stream over k right-hand
+sides. `build_operator(mat, "auto", k=8)` tunes with the k-aware cost model
+(core/spmv/tune.py); the batched serving front-end lives in
+serving/spmv_service.py.
 """
 from __future__ import annotations
 
@@ -33,9 +39,19 @@ def _csr_matvec(row_ids, cols, vals, x, m):
     return ref.spmv_csr(row_ids, cols, vals, x, m)
 
 
+@functools.partial(jax.jit, static_argnames=("m",))
+def _csr_matmul(row_ids, cols, vals, x, m):
+    return ref.spmm_csr(row_ids, cols, vals, x, m)
+
+
 @jax.jit
 def _ell_matvec(ell_cols, ell_vals, x):
     return ref.spmv_ell(ell_cols, ell_vals, x)
+
+
+@jax.jit
+def _ell_matmul(ell_cols, ell_vals, x):
+    return ref.spmm_ell(ell_cols, ell_vals, x)
 
 
 class DeviceCSR:
@@ -66,6 +82,13 @@ class DeviceCSR:
 
     def __call__(self, x: jax.Array) -> jax.Array:
         return _csr_matvec(self.row_ids, self.cols, self.vals, x, self.m)
+
+    def matmul(self, x: jax.Array) -> jax.Array:
+        """x: [n, k] -> y: [m, k]: one gather/segment-sum pass serves all k
+        vectors (the matrix stream is paid once, not k times)."""
+        if x.ndim == 1:
+            return self(x)
+        return _csr_matmul(self.row_ids, self.cols, self.vals, x, self.m)
 
     # -- operator-cache protocol (opcache.py) ------------------------------
     def state(self):
@@ -105,6 +128,12 @@ class DeviceELL:
     def __call__(self, x: jax.Array) -> jax.Array:
         return _ell_matvec(self.ell_cols, self.ell_vals, x)
 
+    def matmul(self, x: jax.Array) -> jax.Array:
+        """x: [n, k] -> y: [m, k] (batched padded-ELL contraction)."""
+        if x.ndim == 1:
+            return self(x)
+        return _ell_matmul(self.ell_cols, self.ell_vals, x)
+
     def state(self):
         meta = {"m": self.m, "n": self.n, "padded_nnz": self.padded_nnz}
         return meta, {"ell_cols": np.asarray(self.ell_cols),
@@ -127,6 +156,9 @@ class DeviceDense:
     def __call__(self, x: jax.Array) -> jax.Array:
         return self.a @ x
 
+    def matmul(self, x: jax.Array) -> jax.Array:
+        return self.a @ x
+
     def state(self):
         return {}, {"a": np.asarray(self.a)}
 
@@ -140,13 +172,18 @@ class DeviceDense:
 def build_operator(mat: CSRMatrix, engine: Engine = "csr", dtype=jnp.float32,
                    block_shape=(8, 128), use_kernel: str = "auto",
                    nnz_bucket: int = 0, sell_sigma: int | None = None,
-                   probe: bool = False):
+                   probe: bool = False, k: int = 1):
     """Factory: host CSRMatrix -> callable device operator y = A @ x.
 
     engine="auto" runs the OSKI-style tuner (core/spmv/tune.py): a cost
     model over structural metrics (optionally refined by empirical probing
     when probe=True) picks the engine and its shape parameters; the chosen
     plan is attached to the returned operator as `.plan`.
+
+    k is the expected number of simultaneous right-hand sides (SpMM batch
+    width). It only affects tuning — matrix bytes amortize over k vectors,
+    shifting the engine choice — never the stored format; every operator's
+    `matmul` accepts any k at run time.
 
     For engine="sell", block_shape is (slice height C, chunk width W) and
     sell_sigma is the σ sort window (default 8 * C).
@@ -155,7 +192,7 @@ def build_operator(mat: CSRMatrix, engine: Engine = "csr", dtype=jnp.float32,
         from .tune import build_tuned
 
         return build_tuned(mat, dtype=dtype, probe=probe,
-                           use_kernel=use_kernel, nnz_bucket=nnz_bucket)
+                           use_kernel=use_kernel, nnz_bucket=nnz_bucket, k=k)
     if engine == "csr":
         return DeviceCSR(mat, dtype, nnz_bucket=nnz_bucket)
     if engine == "ell":

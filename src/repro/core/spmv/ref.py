@@ -25,9 +25,40 @@ def spmv_csr(row_ids: jax.Array, cols: jax.Array, vals: jax.Array,
                                indices_are_sorted=True)
 
 
+def spmm_csr(row_ids: jax.Array, cols: jax.Array, vals: jax.Array,
+             x: jax.Array, m: int) -> jax.Array:
+    """Batched CSR gather + segment-sum: x [n, k] -> y [m, k].
+
+    Same accumulation order per column as spmv_csr — the vectorized k axis
+    rides along each gathered element, so the matrix stream (vals/cols/
+    row_ids) is paid once for all k vectors.
+    """
+    prod = vals[:, None] * x[cols]                   # [nnz, k]
+    return jax.ops.segment_sum(prod, row_ids, num_segments=m,
+                               indices_are_sorted=True)
+
+
 def spmv_ell(ell_cols: jax.Array, ell_vals: jax.Array, x: jax.Array) -> jax.Array:
     """ELLPACK: ell_cols/vals [m, K], padding has val 0 (col arbitrary)."""
     return jnp.sum(ell_vals * x[ell_cols], axis=1)
+
+
+def spmm_ell(ell_cols: jax.Array, ell_vals: jax.Array, x: jax.Array) -> jax.Array:
+    """Batched ELLPACK: x [n, k] -> y [m, k] (one pass over the pads).
+
+    Accumulates at >= the operator dtype (f32 floor), so an f64 operator's
+    matmul keeps f64 accuracy like its SpMV __call__ does.
+
+    Peak memory is the gathered [m, K, k] intermediate — the same
+    footprint class as spmm_csr's [nnz, k] in ELL's intended near-uniform
+    regime (K ~ mean row nnz); on padding-inflated matrices the tuner
+    never picks ELL in the first place.
+    """
+    out_dtype = jnp.promote_types(ell_vals.dtype, x.dtype)   # == __call__'s
+    acc = jnp.promote_types(out_dtype, jnp.float32)
+    gathered = x[ell_cols]                           # [m, K, k]
+    return jnp.einsum("mj,mjv->mv", ell_vals, gathered,
+                      preferred_element_type=acc).astype(out_dtype)
 
 
 def spmv_bell(blocks: jax.Array, block_cols: jax.Array, x2d: jax.Array) -> jax.Array:

@@ -7,6 +7,11 @@ the structural metrics the paper uses (bandwidth, row-nnz CV, block fill).
 The model is exact for the padded formats (their footprint IS their traffic)
 and a calibrated proxy for the gather engines.
 
+The model is k-aware (multi-vector SpMM): stored matrix bytes stream once
+per multiply while x/y traffic scales with the RHS batch width k, so
+`tune(mat, k=8)` can pick a different engine than `tune(mat)` — padding-
+heavy formats with regular access win once their footprint is amortized.
+
 Two tuning modes:
   * model  — rank candidates by modelled bytes, build the argmin. Free.
   * probe  — additionally time the top PROBE_TOP_K candidates once
@@ -44,15 +49,17 @@ class TunePlan:
     engine: str                       # chosen engine name
     block_shape: tuple                # (bm, bn) bell/bcsr; (C, W) sell
     sell_sigma: Optional[int]         # σ window (sell only)
-    cost_bytes: float                 # modelled bytes/SpMV of the choice
+    cost_bytes: float                 # modelled bytes/SpMM of the choice
     costs: dict                       # candidate label -> modelled bytes
     features: dict                    # structural features the model used
     source: str                       # "model" | "probe"
     probe_ms: Optional[dict] = None   # candidate label -> measured ms
     tune_ms: float = 0.0              # wall time spent deciding
+    k: int = 1                        # RHS batch width the plan was tuned for
 
     def label(self) -> str:
-        return _label(self.engine, self.block_shape, self.sell_sigma)
+        base = _label(self.engine, self.block_shape, self.sell_sigma)
+        return base if self.k == 1 else f"{base}@k{self.k}"
 
     def to_json(self) -> dict:
         d = dataclasses.asdict(self)
@@ -118,35 +125,47 @@ def _gather_penalty(feat: dict, line: int = 128) -> float:
 
 def candidate_cost(feat: dict, engine: str, block_shape: tuple = (8, 128),
                    sigma: Optional[int] = None,
-                   sell_pad: Optional[int] = None) -> float:
-    """Modelled bytes streamed per SpMV."""
+                   sell_pad: Optional[int] = None, k: int = 1) -> float:
+    """Modelled bytes streamed per SpMM with k right-hand sides.
+
+    cost(k) = matrix_bytes + k * per_vector_bytes: the stored values and
+    index metadata stream ONCE per multiply regardless of k (the SpMM
+    kernels reuse each chunk/block across the vector tile), while the
+    x-gather and y-write terms scale with k. k=1 reduces exactly to the
+    per-SpMV model, and dividing by k gives the amortized per-vector cost
+    the spmm_batch benchmark measures.
+
+    The gather line-overage also amortizes: the k values of a gathered x
+    row are contiguous in the [n, k] layout, so the line fetched for one
+    vector's element carries its k-tile siblings for free.
+    """
     m, n, nnz = feat["m"], feat["n"], feat["nnz"]
-    gather = _gather_penalty(feat)
+    k = max(int(k), 1)
+    gather = 1.0 + (_gather_penalty(feat) - 1.0) / min(k, 32)
     if engine == "dense":
-        return float(m * n * _VAL + n * _VAL + m * _VAL)
+        return float(m * n * _VAL + k * (n * _VAL + m * _VAL))
     if engine == "csr":
-        # vals + cols + row ids (COO expansion) + gathered x + y
-        return float(nnz * (_VAL + 2 * _IDX) + nnz * _VAL * gather * 0.25
-                     + m * _VAL)
+        # vals + cols + row ids (COO expansion) + k x (gathered x + y)
+        return float(nnz * (_VAL + 2 * _IDX)
+                     + k * (nnz * _VAL * gather * 0.25 + m * _VAL))
     if engine == "ell":
-        k = max(feat["row_nnz_max"], 1)
-        pad = m * k
-        return float(pad * (_VAL + _IDX) + pad * _VAL * gather * 0.25
-                     + m * _VAL)
+        pad = m * max(feat["row_nnz_max"], 1)
+        return float(pad * (_VAL + _IDX)
+                     + k * (pad * _VAL * gather * 0.25 + m * _VAL))
     if engine == "sell":
         pad = sell_pad if sell_pad is not None else nnz
-        return float(pad * (_VAL + _IDX) + pad * _VAL * gather * 0.25
-                     + m * _VAL)
+        return float(pad * (_VAL + _IDX)
+                     + k * (pad * _VAL * gather * 0.25 + m * _VAL))
     if engine == "bell":
         bm, bn = block_shape
         pad_blocks = feat["num_block_rows"] * max(feat["block_row_max"], 1)
         return float(pad_blocks * (bm * bn * _VAL + _IDX)
-                     + pad_blocks * bn * _VAL + m * _VAL)
+                     + k * (pad_blocks * bn * _VAL + m * _VAL))
     if engine == "bcsr":
         bm, bn = block_shape
         blocks = max(feat["nonempty_blocks"], 1)
         return float(blocks * (bm * bn * _VAL + 2 * _IDX)
-                     + blocks * bn * _VAL + m * _VAL)
+                     + k * (blocks * bn * _VAL + m * _VAL))
     raise KeyError(engine)
 
 
@@ -174,16 +193,18 @@ def enumerate_candidates(mat: CSRMatrix, feat: dict) -> list[dict]:
 
 
 def tune(mat: CSRMatrix, probe: bool = False, dtype=None,
-         use_kernel: str = "auto") -> TunePlan:
-    """Pick (engine, shape) for `mat`. probe=True times the top candidates."""
+         use_kernel: str = "auto", k: int = 1) -> TunePlan:
+    """Pick (engine, shape) for `mat` at RHS batch width k.
+    probe=True times the top candidates (at the same k, via matmul)."""
     t0 = time.perf_counter()
+    k = max(int(k), 1)
     feat = matrix_features(mat)
     cands = enumerate_candidates(mat, feat)
     costs = {}
     for cd in cands:
         costs[_label(cd["engine"], cd["block_shape"], cd["sigma"])] = \
             candidate_cost(feat, cd["engine"], cd["block_shape"], cd["sigma"],
-                           cd.get("sell_pad"))
+                           cd.get("sell_pad"), k=k)
     ranked = sorted(cands, key=lambda cd: costs[
         _label(cd["engine"], cd["block_shape"], cd["sigma"])])
     probe_ms = None
@@ -196,8 +217,6 @@ def tune(mat: CSRMatrix, probe: bool = False, dtype=None,
         from .ops import build_operator
 
         dt = jnp.float32 if dtype is None else dtype
-        rng = np.random.default_rng(0)
-        x0 = jnp.asarray(rng.standard_normal(mat.n), dt)
         probe_ms = {}
         best_ms = np.inf
         for cd in ranked[:PROBE_TOP_K]:
@@ -205,8 +224,8 @@ def tune(mat: CSRMatrix, probe: bool = False, dtype=None,
             op = build_operator(mat, cd["engine"], dtype=dt,
                                block_shape=cd["block_shape"],
                                sell_sigma=cd["sigma"], use_kernel=use_kernel)
-            ms = float(np.median(ios.run_ios(op, x0, iters=PROBE_ITERS,
-                                             warmup=1)))
+            ms = float(np.median(ios.run_ios_batched(
+                op, mat.n, k, iters=PROBE_ITERS, warmup=1, dtype=dt)))
             probe_ms[lab] = ms
             if ms < best_ms:
                 best_ms, best = ms, cd
@@ -216,12 +235,13 @@ def tune(mat: CSRMatrix, probe: bool = False, dtype=None,
                     sell_sigma=best["sigma"], cost_bytes=costs[lab],
                     costs=costs, features=feat, source=source,
                     probe_ms=probe_ms,
-                    tune_ms=(time.perf_counter() - t0) * 1e3)
+                    tune_ms=(time.perf_counter() - t0) * 1e3, k=k)
 
 
 def build_from_plan(mat: CSRMatrix, plan: TunePlan, dtype=None,
                     use_kernel: str = "auto", nnz_bucket: int = 0):
-    """Materialize the operator a plan describes (used by the op cache)."""
+    """Materialize the operator a plan describes (used by the op cache).
+    The plan's k only steered the engine choice; the format is k-agnostic."""
     import jax.numpy as jnp
 
     from .ops import build_operator
@@ -236,8 +256,8 @@ def build_from_plan(mat: CSRMatrix, plan: TunePlan, dtype=None,
 
 
 def build_tuned(mat: CSRMatrix, dtype=None, probe: bool = False,
-                use_kernel: str = "auto", nnz_bucket: int = 0):
+                use_kernel: str = "auto", nnz_bucket: int = 0, k: int = 1):
     """engine="auto" entry point: tune, build, attach the plan."""
-    plan = tune(mat, probe=probe, dtype=dtype, use_kernel=use_kernel)
+    plan = tune(mat, probe=probe, dtype=dtype, use_kernel=use_kernel, k=k)
     return build_from_plan(mat, plan, dtype=dtype, use_kernel=use_kernel,
                            nnz_bucket=nnz_bucket)

@@ -68,6 +68,11 @@ class BcsrOperator:
         y = y.reshape(-1, nv)[: self.shape[0]]
         return y[:, 0] if squeeze else y
 
+    def matmul(self, x: jax.Array) -> jax.Array:
+        """x: [n, k] -> y: [m, k] (vectorized __call__: one stream of the
+        flattened block list serves all k vectors)."""
+        return self(x)
+
     def flops(self) -> int:
         t, bm, bn = self.blocks.shape
         return 2 * t * bm * bn

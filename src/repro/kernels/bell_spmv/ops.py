@@ -49,6 +49,13 @@ class BellOperator:
         y = y.reshape(-1, nv)[: self.shape[0]]
         return y[:, 0] if squeeze else y
 
+    def matmul(self, x: jax.Array) -> jax.Array:
+        """x: [n, k] -> y: [m, k] — the block layout already carries a
+        trailing vector axis through the MXU contraction, so the batched
+        path IS the vectorized __call__ (each dense brick is streamed once
+        for all k vectors)."""
+        return self(x)
+
     def flops(self) -> int:
         """MXU flops per SpMV (2 * padded block volume)."""
         nbr, k, bm, bn = self.blocks.shape

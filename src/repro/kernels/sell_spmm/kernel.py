@@ -1,0 +1,89 @@
+"""Pallas TPU kernel: SELL-C-σ multi-vector SpMM (k-tiled flattened-chunk grid).
+
+The SpMV kernel (kernels/sell_spmv/kernel.py) already accepts x of shape
+[n_pad, nv], but it carries ALL nv vectors through every grid step — fine
+for nv = 1, wasteful when a serving batch or block solver brings k = 32
+right-hand sides (the y tile and the gathered x grow k-fold in VMEM).
+
+This kernel tiles the dense block X[n_pad, k_pad] into lane-aligned vector
+blocks of width KB and makes the k-tile the OUTER grid axis:
+
+    grid = (k_pad // KB, num_chunks)
+
+* Inner axis g streams the flattened [C, W] SELL chunks exactly like the
+  SpMV kernel, so consecutive chunks of one slice accumulate into the same
+  resident y tile (the revisit-consecutive reduction contract holds per
+  k-tile).
+* Each chunk block loaded for step (kt, g) multiplies the full KB-wide
+  x tile — the matrix stream is amortized over KB vectors per pass, and the
+  whole matrix is streamed ceil(k / KB) times instead of k times. This is
+  the data-movement win the k-aware tuner (core/spmv/tune.py) models.
+* The x k-tile's block index depends only on kt (the outer axis), so it
+  stays resident in VMEM across all chunks of one pass.
+
+Correctness on CPU is exercised through interpret mode (tests force it);
+ref.py holds the jnp oracle used as the non-TPU fallback engine.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _sell_spmm_kernel(chunk_slice_ref, cols_ref, vals_ref, x_ref, y_ref, *,
+                      acc_dtype):
+    g = pl.program_id(1)                     # chunk index (inner axis)
+    sl = chunk_slice_ref[g]
+    prev = chunk_slice_ref[jnp.maximum(g - 1, 0)]
+    is_first = jnp.logical_or(g == 0, sl != prev)
+
+    @pl.when(is_first)
+    def _init():
+        y_ref[...] = jnp.zeros_like(y_ref)
+
+    cols = cols_ref[0]                       # [C, W] int32
+    vals = vals_ref[0].astype(acc_dtype)     # [C, W]
+    xg = x_ref[cols].astype(acc_dtype)       # on-chip gather: [C, W, KB]
+    part = jnp.sum(vals[..., None] * xg, axis=1)        # [C, KB]
+    y_ref[0] += part.astype(y_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("num_slices", "kb", "interpret"))
+def sell_spmm_ktiled(chunk_vals: jax.Array, chunk_cols: jax.Array,
+                     chunk_slice: jax.Array, x: jax.Array, num_slices: int,
+                     kb: int, interpret: bool = False) -> jax.Array:
+    """y[S, C, k_pad] = SELL(chunk_*) @ x[n_pad, k_pad], k-tiled by kb.
+
+    chunk_vals: [T, C, W] (padding slots are 0)
+    chunk_cols: [T, C, W] int32 (padding -> 0, result-neutral via zero vals)
+    chunk_slice: int32[T], nondecreasing, covering every slice in [0, S)
+    x: [n_pad, k_pad] with k_pad a multiple of kb
+    """
+    t, c, w = chunk_vals.shape
+    n_pad, k_pad = x.shape
+    assert k_pad % kb == 0, (k_pad, kb)
+    nkt = k_pad // kb
+    # accumulate at >= the operator dtype (f32 floor): an f64 operator's
+    # matmul keeps f64 accuracy, same contract as ref.spmm_ell
+    acc_dtype = jnp.promote_types(x.dtype, jnp.float32)
+
+    return pl.pallas_call(
+        functools.partial(_sell_spmm_kernel, acc_dtype=acc_dtype),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=(nkt, t),
+            in_specs=[
+                pl.BlockSpec((1, c, w), lambda kt, g, cs: (g, 0, 0)),
+                pl.BlockSpec((1, c, w), lambda kt, g, cs: (g, 0, 0)),
+                pl.BlockSpec((n_pad, kb), lambda kt, g, cs: (0, kt)),
+            ],
+            out_specs=pl.BlockSpec((1, c, kb),
+                                   lambda kt, g, cs: (cs[g], 0, kt)),
+        ),
+        out_shape=jax.ShapeDtypeStruct((num_slices, c, k_pad), x.dtype),
+        interpret=interpret,
+    )(chunk_slice, chunk_cols, chunk_vals, x)

@@ -1,0 +1,52 @@
+"""Public wrapper for SELL-C-σ SpMM: dense RHS block in, dense block out.
+
+`sell_matmul(op, x)` is what `SellOperator.matmul` dispatches to for 2-D
+x — it handles k padding to the lane-aligned k-tile, the n padding, the
+σ-sort un-permute, and the pallas / interpret / jnp-ref engine choice,
+mirroring kernels/sell_spmv/ops.py for the single-vector path.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import sell_spmm_ktiled
+from .ref import sell_spmm_ref
+
+LANES = 128
+
+
+def pick_k_tile(k: int, lanes: int = LANES) -> int:
+    """k-tile width: smallest power of two >= k, clipped to [8, lanes].
+
+    Small batches keep the tile narrow (padding scales with KB); anything
+    past one lane row is split into multiple passes over the matrix.
+    """
+    kb = 8
+    while kb < min(max(k, 1), lanes):
+        kb *= 2
+    return min(kb, lanes)
+
+
+def sell_matmul(op, x: jax.Array) -> jax.Array:
+    """y[m, k] = A @ x[n, k] for a SellOperator `op` (kernels/sell_spmv).
+
+    Only the kernel paths pad k to the lane-aligned k-tile; the jnp-ref
+    path needs no alignment and runs on the exact k columns (small service
+    batches would otherwise pay up to the tile floor in wasted flops).
+    """
+    n, k = x.shape
+    if op.use_kernel in ("pallas", "interpret"):
+        kb = pick_k_tile(k)
+        k_pad = ((k + kb - 1) // kb) * kb
+        xp = jnp.pad(x, ((0, op.n_pad - n), (0, k_pad - k)))
+        y = sell_spmm_ktiled(op.chunk_vals, op.chunk_cols, op.chunk_slice,
+                             xp, op.num_slices, kb,
+                             interpret=(op.use_kernel == "interpret"))
+    else:
+        xp = jnp.pad(x, ((0, op.n_pad - n), (0, 0)))
+        y = sell_spmm_ref(op.chunk_vals, op.chunk_cols, op.chunk_slice,
+                          xp, op.num_slices)
+    # y is in slice order; inv_perm[r] = slice position of original row r
+    y = y.reshape(-1, y.shape[-1])[op.inv_perm]
+    return y[:, :k]

@@ -1,0 +1,9 @@
+"""jnp oracle for the k-tiled SELL SpMM kernel.
+
+The SpMV oracle already handles a trailing vector axis, so the SpMM oracle
+IS the one the sell_spmv package exposes — re-exported here (not copied)
+so both kernels are tested against a single implementation.
+"""
+from __future__ import annotations
+
+from ..sell_spmv.ref import sell_spmm_ref  # noqa: F401

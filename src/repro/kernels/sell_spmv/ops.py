@@ -54,6 +54,16 @@ class SellOperator:
         y = y.reshape(-1, nv)[self.inv_perm]
         return y[:, 0] if squeeze else y
 
+    def matmul(self, x: jax.Array) -> jax.Array:
+        """x: [n, k] -> y: [m, k] via the k-tiled SpMM kernel
+        (kernels/sell_spmm): one matrix stream amortized over a lane-aligned
+        k-tile of vectors, instead of nv riding along every chunk."""
+        if x.ndim == 1:
+            return self(x)
+        from ..sell_spmm.ops import sell_matmul
+
+        return sell_matmul(self, x)
+
     # -- operator-cache protocol (core/spmv/opcache.py) --------------------
     def state(self):
         meta = {"shape": list(self.shape), "c": self.c, "sigma": self.sigma,

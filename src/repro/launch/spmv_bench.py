@@ -136,50 +136,116 @@ def lower_halo(mesh: Mesh, halo: int = 128):
 
 def run_single(matrix: str, scheme: str = "baseline", engine: str = "auto",
                iters: int = 12, probe: bool = False,
-               write_results: bool = True) -> dict:
-    """Single-node tuned SpMV benchmark for one (matrix, scheme) cell.
+               write_results: bool = True, k: int = 1) -> dict:
+    """Single-node tuned SpMV/SpMM benchmark for one (matrix, scheme) cell.
 
     Goes through the persistent operator cache (core/spmv/opcache.py): the
     first invocation pays reorder + tune + format conversion; repeat
     invocations on the same cell reload the device arrays and only time the
     SpMV. Plan-time and run-time are reported separately (paper §3
     methodology — preprocessing is never folded into SpMV time).
+
+    k > 1 (--spmm) times the k-RHS SpMM path `op.matmul(X[n, k])` with a
+    k-specialized tuning plan and reports amortized per-vector time.
     """
     from ..core.measure import ios
     from ..core.reorder import api as reorder_api
     from ..core.spmv.opcache import build_cached
     from ..matrices import suite
 
+    if k < 1:
+        raise ValueError(f"--spmm batch width must be >= 1, got {k}")
     mat = suite.get(matrix)
     t0 = time.perf_counter()
     rmat = reorder_api.apply_scheme(mat, scheme) if scheme != "baseline" else mat
     reorder_ms = (time.perf_counter() - t0) * 1e3
-    op, info = build_cached(rmat, engine=engine, probe=probe)
-    x0 = jnp.asarray(np.random.default_rng(0).standard_normal(rmat.n),
-                     jnp.float32)
-    ms = ios.run_ios(op, x0, iters=iters)
+    op, info = build_cached(rmat, engine=engine, probe=probe, k=k)
+    med = float(np.median(ios.run_ios_batched(op, rmat.n, k, iters=iters)))
     rec = {
         "matrix": matrix,
         "scheme": scheme,
         "engine": info["engine"],
         "plan": info["plan"],
         "cache_hit": info["cache_hit"],
+        "k": k,
         "reorder_ms": reorder_ms,
         "tune_ms": info["tune_ms"],
         "build_ms": info["build_ms"],
         "load_ms": info["load_ms"],
-        "spmv_ios_ms": float(np.median(ms)),
-        "spmv_ios_gflops": float(ios.gflops(rmat.nnz, np.array(
-            [np.median(ms)]))[0]),
+        "spmv_ios_ms": med,
+        "per_vector_ms": med / k,
+        "spmv_ios_gflops": float(ios.gflops(rmat.nnz * k,
+                                            np.array([med]))[0]),
     }
-    print(f"[spmv-single] {matrix}/{scheme} engine={rec['engine']} "
+    tag = "spmm" if k > 1 else "spmv"
+    print(f"[{tag}-single] {matrix}/{scheme} engine={rec['engine']} k={k} "
           f"cache_hit={rec['cache_hit']} plan_ms="
           f"{rec['tune_ms'] + rec['build_ms'] + rec['load_ms']:.1f} "
-          f"spmv_ms={rec['spmv_ios_ms']:.3f}", flush=True)
+          f"{tag}_ms={med:.3f} per_vec_ms={rec['per_vector_ms']:.3f}",
+          flush=True)
     if write_results:
         os.makedirs(RESULTS, exist_ok=True)
-        out = os.path.join(RESULTS, f"spmv_single_{matrix}_{scheme}.json")
+        suffix = f"_k{k}" if k > 1 else ""      # SpMM never clobbers SpMV
+        out = os.path.join(RESULTS,
+                           f"spmv_single_{matrix}_{scheme}{suffix}.json")
         with open(out, "w") as f:
+            json.dump(rec, f, indent=1)
+    return rec
+
+
+def run_serve_sim(matrices=("smoke_banded", "smoke_powerlaw", "smoke_rmat"),
+                  requests: int = 48, max_batch: int = 8,
+                  window_ms: float = 20.0, engine: str = "auto",
+                  seed: int = 0, write_results: bool = True) -> dict:
+    """Serving simulation: a burst of mixed (matrix, x) requests through the
+    micro-batching SpmvService (serving/spmv_service.py). Verifies every
+    response against the numpy oracle and reports coalescing stats."""
+    from ..matrices import suite
+    from ..serving.spmv_service import SpmvService
+
+    mats = {name: suite.get(name) for name in matrices}
+    rng = np.random.default_rng(seed)
+    t0 = time.perf_counter()
+    with SpmvService(engine=engine, max_batch=max_batch,
+                     window_ms=window_ms) as svc:
+        for name, mat in mats.items():
+            svc.register(name, mat)
+        pending = []
+        for _ in range(requests):
+            name = list(matrices)[rng.integers(len(matrices))]
+            x = rng.standard_normal(mats[name].n)
+            pending.append((name, x, svc.submit(name, x)))
+        svc.flush()
+        stats = svc.stats()
+        max_rel_err = 0.0
+        for name, x, fut in pending:
+            want = mats[name].spmv(x)
+            got = np.asarray(fut.result(timeout=10))
+            scale = float(np.abs(want).max()) + 1e-9
+            max_rel_err = max(max_rel_err,
+                              float(np.abs(got - want).max()) / scale)
+    wall_ms = (time.perf_counter() - t0) * 1e3
+    rec = {
+        "matrices": list(matrices),
+        "requests": requests,
+        "max_batch": max_batch,
+        "window_ms": window_ms,
+        "wall_ms": wall_ms,
+        "batches": stats["batches"],
+        "avg_batch": stats["avg_batch"],
+        "batch_size_max": stats["batch_size_max"],
+        "coalesce_ratio": stats["coalesce_ratio"],
+        "avg_wait_ms": stats["avg_wait_ms"],
+        "max_rel_err": max_rel_err,
+        "ok": max_rel_err < 1e-4,
+    }
+    print(f"[serve-sim] {requests} requests over {len(matrices)} matrices -> "
+          f"{rec['batches']} SpMM dispatches (avg batch "
+          f"{rec['avg_batch']:.1f}, max {rec['batch_size_max']}), "
+          f"max_rel_err={max_rel_err:.2e}", flush=True)
+    if write_results:
+        os.makedirs(RESULTS, exist_ok=True)
+        with open(os.path.join(RESULTS, "spmv_serve_sim.json"), "w") as f:
             json.dump(rec, f, indent=1)
     return rec
 
@@ -194,11 +260,32 @@ def main():
     ap.add_argument("--probe", action="store_true",
                     help="empirically probe top tuner candidates")
     ap.add_argument("--iters", type=int, default=12)
+    ap.add_argument("--spmm", type=int, default=1, metavar="K",
+                    help="batch width: time K-RHS SpMM instead of SpMV")
+    ap.add_argument("--serve-sim", action="store_true",
+                    help="micro-batching service simulation over smoke "
+                         "matrices")
+    ap.add_argument("--requests", type=int, default=48)
+    ap.add_argument("--max-batch", type=int, default=8)
+    ap.add_argument("--window-ms", type=float, default=20.0)
     args = ap.parse_args()
+    if args.serve_sim:
+        if args.matrix or args.spmm != 1 or args.probe:
+            ap.error("--serve-sim does not combine with "
+                     "--matrix/--spmm/--probe")
+        rec = run_serve_sim(requests=args.requests, max_batch=args.max_batch,
+                            window_ms=args.window_ms, engine=args.engine)
+        if not rec["ok"]:
+            raise SystemExit(
+                f"serve-sim verification FAILED: max_rel_err="
+                f"{rec['max_rel_err']:.2e}")
+        return
     if args.matrix:
         run_single(args.matrix, args.scheme, args.engine, iters=args.iters,
-                   probe=args.probe)
+                   probe=args.probe, k=args.spmm)
         return
+    if args.spmm != 1 or args.probe:
+        ap.error("--spmm/--probe require --matrix (single-cell mode)")
     mesh = make_production_mesh(multi_pod=args.multi_pod)
     out = {}
     for name, fn in [("1d", lower_1d), ("2d", lower_2d), ("halo", lower_halo)]:

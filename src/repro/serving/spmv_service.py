@@ -1,0 +1,335 @@
+"""Micro-batching SpMV service — the streaming operator front-end.
+
+The ROADMAP north star ("serve heavy traffic from millions of users") means
+concurrent `y = A @ x` requests against a small set of cached operators.
+Running them one SpMV at a time streams the matrix once per request; this
+service coalesces concurrent same-matrix requests into ONE SpMM call
+
+    Y[:, 0..b) = A @ [x_0 | x_1 | ... | x_{b-1}]
+
+so the matrix bytes are paid once per batch — the same amortization the
+k-aware tuner (core/spmv/tune.py) models and the SELL SpMM kernel
+(kernels/sell_spmm) implements.
+
+Policy (classic micro-batching, cf. serving/decode.py's decode batching):
+  * Requests enqueue per matrix key; a dispatcher thread always serves the
+    key holding the OLDEST pending request (FIFO fairness across matrices).
+  * A batch closes when it reaches `max_batch` requests OR `window_ms` has
+    elapsed since its oldest request — bounded latency, opportunistic width.
+  * Operators resolve once per key through the persistent opcache
+    (core/spmv/opcache.build_cached) with a k=max_batch-specialized plan.
+
+Equivalence guarantee: request j of a coalesced batch receives column j of
+`op.matmul(X)`, which matches the unbatched `op(x_j)` to fp32 accumulation
+tolerance (the batched kernels stream the same matrix elements in the same
+per-column order; only the vector axis is widened). Tested in
+tests/test_spmm_batch.py.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import threading
+import time
+from concurrent.futures import Future
+from typing import Dict, Optional
+
+import numpy as np
+
+from ..core.sparse.csr import CSRMatrix
+
+
+@dataclasses.dataclass
+class _Request:
+    key: str
+    x: np.ndarray
+    future: Future
+    t_submit: float
+
+
+class SpmvService:
+    """Queue + coalesce concurrent (matrix_key, x) requests into SpMM calls.
+
+    Usage:
+        svc = SpmvService(max_batch=8, window_ms=2.0)
+        svc.register("mesh", mat)
+        fut = svc.submit("mesh", x)          # -> concurrent.futures.Future
+        y = fut.result()
+        svc.close()
+
+    Also usable as a context manager (close() on exit).
+    """
+
+    def __init__(self, engine: str = "auto", max_batch: int = 32,
+                 window_ms: float = 2.0, use_kernel: str = "auto",
+                 dtype=None, cache: bool = True, probe: bool = False,
+                 max_queue: int = 1024):
+        if max_batch < 1:
+            raise ValueError(f"max_batch must be >= 1, got {max_batch}")
+        if max_queue < 1:
+            raise ValueError(f"max_queue must be >= 1, got {max_queue}")
+        self.engine = engine
+        self.max_batch = int(max_batch)
+        self.max_queue = int(max_queue)
+        self.window_s = float(window_ms) * 1e-3
+        self.use_kernel = use_kernel
+        self.cache = cache
+        self.probe = probe
+        self._dtype = dtype
+        self._matrices: Dict[str, CSRMatrix] = {}
+        self._gen: collections.Counter = collections.Counter()
+        self._ops: Dict[str, tuple] = {}          # key -> (gen, operator)
+        self._build_info: Dict[str, dict] = {}
+        self._queues: Dict[str, collections.deque] = {}
+        self._cv = threading.Condition()
+        self._op_lock = threading.Lock()
+        self._stop = False
+        self._inflight = 0
+        self._key_inflight: collections.Counter = collections.Counter()
+        self._current_batch: Optional[list] = None
+        self._stats = {"requests": 0, "batches": 0, "dispatches": 0,
+                       "errors": 0, "batch_size_sum": 0, "batch_size_max": 0,
+                       "wait_ms_sum": 0.0,
+                       "batch_hist": collections.Counter()}
+        self._worker = threading.Thread(target=self._run, daemon=True,
+                                        name="spmv-service-dispatch")
+        self._worker.start()
+
+    # -- registry ----------------------------------------------------------
+    def register(self, key: str, mat: CSRMatrix) -> None:
+        """Make `key` servable. Operator build is lazy (first batch).
+
+        Re-registering a key drops its memoized operator, and is REFUSED
+        while the key has queued or in-flight requests — a request
+        validated against matrix A must never be answered from matrix B
+        (flush() first to swap safely)."""
+        with self._cv:
+            if key in self._matrices and (self._queues[key]
+                                          or self._key_inflight[key]):
+                raise RuntimeError(
+                    f"cannot re-register {key!r} with pending requests; "
+                    f"flush() first")
+            self._matrices[key] = mat
+            # bumping the generation under _cv invalidates any memoized
+            # operator atomically with the matrix swap — operator() only
+            # trusts an entry whose generation matches the matrix it read
+            self._gen[key] += 1
+            self._queues.setdefault(key, collections.deque())
+
+    def operator(self, key: str):
+        """Resolve (and memoize) the operator for `key` via the opcache,
+        tuned for this service's max batch width."""
+        with self._cv:
+            mat = self._matrices[key]
+            gen = self._gen[key]
+        with self._op_lock:
+            ent = self._ops.get(key)
+            if ent is not None and ent[0] == gen:
+                return ent[1]
+            from ..core.spmv.opcache import build_cached
+
+            op, info = build_cached(mat, engine=self.engine,
+                                    dtype=self._dtype, probe=self.probe,
+                                    use_kernel=self.use_kernel,
+                                    cache=self.cache, k=self.max_batch)
+            self._ops[key] = (gen, op)
+            self._build_info[key] = info
+        return op
+
+    # -- request path ------------------------------------------------------
+    def submit(self, key: str, x) -> Future:
+        """Enqueue one y = A_key @ x request; returns a Future of np [m]."""
+        x = np.asarray(x)
+        with self._cv:
+            if self._stop:
+                raise RuntimeError("service is closed")
+            if key not in self._matrices:
+                raise KeyError(f"unregistered matrix key {key!r}")
+            n = self._matrices[key].shape[1]
+            # reject malformed requests HERE: a bad x inside a coalesced
+            # batch would otherwise fail every well-formed neighbour
+            if x.shape != (n,):
+                raise ValueError(
+                    f"x for {key!r} must have shape ({n},), got {x.shape}")
+            # backpressure: bounded per-key queue — reject loudly instead
+            # of letting a fast producer grow pending vectors unboundedly
+            if len(self._queues[key]) >= self.max_queue:
+                raise RuntimeError(
+                    f"backpressure: queue for {key!r} is full "
+                    f"({self.max_queue} pending)")
+            fut: Future = Future()
+            self._queues[key].append(
+                _Request(key, x, fut, time.monotonic()))
+            self._stats["requests"] += 1
+            self._cv.notify_all()
+        return fut
+
+    def flush(self, timeout: float = 60.0) -> None:
+        """Block until every queued request has been dispatched & resolved."""
+        deadline = time.monotonic() + timeout
+        with self._cv:
+            while (any(self._queues.values()) or self._inflight) \
+                    and time.monotonic() < deadline:
+                self._cv.wait(0.02)
+            if any(self._queues.values()) or self._inflight:
+                raise TimeoutError("flush timed out")
+
+    def close(self, timeout: float = 60.0) -> None:
+        """Drain outstanding work (up to timeout), then stop the
+        dispatcher. The service ALWAYS stops — if draining times out the
+        TimeoutError is re-raised after shutdown, never before it — and
+        any request still queued (or stuck in a wedged dispatch) gets its
+        Future failed, so no caller blocked in result() hangs forever."""
+        err = None
+        try:
+            self.flush(timeout=timeout)
+        except TimeoutError as e:
+            err = e
+        with self._cv:
+            self._stop = True
+            leftovers = [r for q in self._queues.values() for r in q]
+            for q in self._queues.values():
+                q.clear()
+            self._cv.notify_all()
+        self._worker.join(timeout=10.0)
+        if self._worker.is_alive():
+            # dispatch wedged in device code: fail its batch best-effort
+            # (the zombie daemon thread's late set_result is swallowed by
+            # _dispatch's InvalidStateError guard)
+            with self._cv:
+                leftovers.extend(self._current_batch or [])
+        for r in leftovers:
+            if not r.future.done():
+                r.future.set_exception(
+                    RuntimeError("service closed before dispatch"))
+        if err is not None:
+            raise err
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+        return False
+
+    def stats(self) -> dict:
+        with self._cv:
+            s = dict(self._stats)
+            s["batch_hist"] = dict(self._stats["batch_hist"])
+        with self._op_lock:      # _build_info is written under _op_lock
+            op_hits = {k: v["cache_hit"] for k, v in self._build_info.items()}
+        b = max(s["batches"], 1)
+        s["avg_batch"] = s["batch_size_sum"] / b       # dispatched reqs/batch
+        s["avg_wait_ms"] = s["wait_ms_sum"] / b
+        # DISPATCHED requests per dispatch (error batches included) — the
+        # amortization the service exists for; computed from completed
+        # work only, so a mid-stream snapshot is not inflated by requests
+        # still sitting in the queues
+        s["coalesce_ratio"] = (s["batch_size_sum"] + s["errors"]) \
+            / max(s["dispatches"], 1)
+        s["op_cache_hits"] = op_hits
+        return s
+
+    # -- dispatcher --------------------------------------------------------
+    def _pick_key(self) -> Optional[str]:
+        """Next key to serve (None if all queues are empty).
+
+        Priority: (1) the oldest request whose batch window already
+        expired — the latency bound always wins; (2) any key with a FULL
+        batch ready — no reason to sleep out another key's window while a
+        dispatchable batch waits (cross-key head-of-line blocking);
+        (3) the oldest pending request.
+        """
+        oldest, oldest_t, full = None, None, None
+        for key, q in self._queues.items():
+            if not q:
+                continue
+            if oldest_t is None or q[0].t_submit < oldest_t:
+                oldest, oldest_t = key, q[0].t_submit
+            if full is None and len(q) >= self.max_batch:
+                full = key
+        if oldest is not None and \
+                time.monotonic() >= oldest_t + self.window_s:
+            return oldest
+        return full if full is not None else oldest
+
+    def _run(self) -> None:
+        while True:
+            with self._cv:
+                key = self._pick_key()
+                while key is None and not self._stop:
+                    self._cv.wait(0.05)
+                    key = self._pick_key()
+                if key is None and self._stop:
+                    return
+                # batch window: wait for more same-key arrivals, bounded by
+                # the oldest request's deadline and the batch size cap —
+                # re-evaluating the pick each wake so a key that becomes
+                # dispatchable (full batch / expired window) preempts
+                q = self._queues[key]
+                deadline = q[0].t_submit + self.window_s
+                while (len(q) < self.max_batch and not self._stop
+                       and time.monotonic() < deadline):
+                    self._cv.wait(
+                        max(min(deadline - time.monotonic(), 0.05), 1e-4))
+                    nk = self._pick_key()
+                    if nk is not None and nk != key:
+                        key, q = nk, self._queues[nk]
+                        deadline = q[0].t_submit + self.window_s
+                batch = [q.popleft()
+                         for _ in range(min(self.max_batch, len(q)))]
+                # defensive: the queue can be emptied externally while we
+                # waited (forced shutdown paths clear it under _cv)
+                if not batch:
+                    continue
+                self._inflight += 1
+                self._key_inflight[key] += 1
+                self._current_batch = batch
+            try:
+                self._dispatch(key, batch)
+            finally:
+                with self._cv:
+                    self._inflight -= 1
+                    self._key_inflight[key] -= 1
+                    self._current_batch = None
+                    self._cv.notify_all()
+
+    def _dispatch(self, key: str, batch: list) -> None:
+        import jax.numpy as jnp
+
+        t0 = time.monotonic()
+        try:
+            op = self.operator(key)
+            dt = jnp.float32 if self._dtype is None else self._dtype
+            if len(batch) == 1:
+                # a lone request takes the SpMV path: matmul's k-tile
+                # padding would do tile-width times the work for 1 column
+                y = np.asarray(op(jnp.asarray(batch[0].x, dt)))[:, None]
+            else:
+                # assemble on host, ONE device put per batch
+                x_block = jnp.asarray(
+                    np.stack([r.x for r in batch], axis=1), dt)
+                y = np.asarray(op.matmul(x_block))
+        except Exception as e:                       # pragma: no cover
+            with self._cv:
+                self._stats["dispatches"] += 1
+                self._stats["errors"] += len(batch)
+            for r in batch:
+                try:
+                    r.future.set_exception(e)
+                except Exception:    # already failed by a wedged close()
+                    pass
+            return
+        with self._cv:
+            self._stats["dispatches"] += 1
+            self._stats["batches"] += 1
+            self._stats["batch_size_sum"] += len(batch)
+            self._stats["batch_size_max"] = max(
+                self._stats["batch_size_max"], len(batch))
+            self._stats["batch_hist"][len(batch)] += 1
+            self._stats["wait_ms_sum"] += (t0 - batch[0].t_submit) * 1e3
+        for j, r in enumerate(batch):
+            try:
+                r.future.set_result(y[:, j])
+            except Exception:        # already failed by a wedged close()
+                pass

@@ -1,0 +1,139 @@
+"""Operator-cache robustness: corruption fallback, write atomicity, k plans.
+
+The cache is persistent across processes AND code versions, so every
+defensive property matters:
+  * a corrupt / truncated / schema-stale entry must be treated as a miss
+    and rebuilt, never crash or serve garbage;
+  * writers must publish entries atomically (tmp file + rename, with the
+    .json gate renamed last) so a concurrent reader never observes a
+    half-written entry;
+  * k-specialized plans (tuned for an SpMM batch width) round-trip: the
+    reloaded operator carries the same plan, and different k means a
+    different entry.
+"""
+import json
+import os
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core.spmv import opcache
+from repro.core.spmv.opcache import build_cached, content_key
+from repro.matrices import generators as G
+
+
+@pytest.fixture()
+def cache_dir(tmp_path, monkeypatch):
+    d = tmp_path / "opcache"
+    monkeypatch.setenv("REPRO_OPERATOR_CACHE", str(d))
+    return d
+
+
+def _mat():
+    return G.power_law(256, alpha=1.9, seed=11)
+
+
+def _check(op, mat):
+    x = np.random.default_rng(0).standard_normal(mat.n)
+    want = mat.spmv(x)
+    got = np.asarray(op(jnp.asarray(x, jnp.float32)))
+    assert np.abs(got - want).max() / (np.abs(want).max() + 1e-9) < 1e-4
+
+
+@pytest.mark.parametrize("damage", ["npz_garbage", "npz_truncated",
+                                    "json_garbage", "json_bad_schema",
+                                    "npz_missing"])
+def test_corrupt_entry_falls_back_to_rebuild(cache_dir, damage):
+    mat = _mat()
+    _, i1 = build_cached(mat, "auto")
+    assert not i1["cache_hit"]
+    key = i1["key"]
+    npz, js = cache_dir / f"{key}.npz", cache_dir / f"{key}.json"
+    assert npz.exists() and js.exists()
+    if damage == "npz_garbage":
+        npz.write_bytes(b"not an npz at all")
+    elif damage == "npz_truncated":
+        npz.write_bytes(npz.read_bytes()[: npz.stat().st_size // 2])
+    elif damage == "json_garbage":
+        js.write_text("{this is not json")
+    elif damage == "json_bad_schema":
+        js.write_text(json.dumps({"cls": "NoSuchOperator", "meta": {},
+                                  "plan": None}))
+    elif damage == "npz_missing":
+        npz.unlink()
+    op, i2 = build_cached(mat, "auto")
+    assert not i2["cache_hit"], "damaged entry must be a miss"
+    _check(op, mat)
+    # and the rebuild repaired the entry
+    op3, i3 = build_cached(mat, "auto")
+    assert i3["cache_hit"]
+    _check(op3, mat)
+
+
+def test_store_is_write_then_rename_json_last(cache_dir, monkeypatch):
+    """Atomicity contract: both files are written to tmp names and renamed,
+    npz first, the .json gate LAST — a concurrent reader either sees no
+    entry (json missing -> miss) or a complete one."""
+    events = []
+    real_replace = os.replace
+
+    def spy_replace(src, dst):
+        # the tmp file must be fully written before publication
+        assert os.path.exists(src) and src.endswith(".tmp")
+        events.append(os.path.basename(dst))
+        return real_replace(src, dst)
+
+    monkeypatch.setattr(opcache.os, "replace", spy_replace)
+    mat = _mat()
+    _, info = build_cached(mat, "csr")
+    key = info["key"]
+    assert events == [f"{key}.npz", f"{key}.json"]
+    # no tmp litter left behind
+    assert not [f for f in os.listdir(cache_dir) if f.endswith(".tmp")]
+
+
+def test_reader_treats_json_missing_as_miss(cache_dir):
+    """The in-between state of an interrupted writer (npz published, json
+    not yet) must read as a clean miss."""
+    mat = _mat()
+    _, i1 = build_cached(mat, "csr")
+    (cache_dir / f"{i1['key']}.json").unlink()
+    op, i2 = build_cached(mat, "csr")
+    assert not i2["cache_hit"]
+    _check(op, mat)
+
+
+def test_cache_hit_with_k_specialized_plan(cache_dir):
+    mat = _mat()
+    op1, i1 = build_cached(mat, "auto", k=8)
+    op2, i2 = build_cached(mat, "auto", k=8)
+    assert not i1["cache_hit"] and i2["cache_hit"]
+    assert op2.plan.k == 8 and i2["plan"]["k"] == 8
+    assert op2.plan.engine == op1.plan.engine
+    _check(op2, mat)
+    # a different batch width is a different entry (different plan)
+    op3, i3 = build_cached(mat, "auto", k=1)
+    assert not i3["cache_hit"] and op3.plan.k == 1
+    assert i3["key"] != i1["key"]
+    dt = jnp.dtype(jnp.float32).name
+    assert content_key(mat, "auto", dt, k=8) != content_key(mat, "auto", dt)
+    # for a FIXED engine k never changes the stored format: one entry
+    assert content_key(mat, "csr", dt, k=8) == content_key(mat, "csr", dt)
+    _, j1 = build_cached(mat, "csr", k=1)
+    _, j2 = build_cached(mat, "csr", k=8)
+    assert j2["cache_hit"] and j1["key"] == j2["key"]
+
+
+def test_legacy_plan_without_k_still_loads(cache_dir):
+    """Entries written before k-aware tuning have no 'k' in the plan json;
+    they must load with the default k=1."""
+    mat = _mat()
+    _, i1 = build_cached(mat, "auto")
+    js = cache_dir / f"{i1['key']}.json"
+    rec = json.loads(js.read_text())
+    rec["plan"].pop("k")
+    js.write_text(json.dumps(rec))
+    op, i2 = build_cached(mat, "auto")
+    assert i2["cache_hit"] and op.plan.k == 1
+    _check(op, mat)

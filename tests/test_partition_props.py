@@ -1,0 +1,191 @@
+"""Property tests: nnz_balanced_partition edge cases + vectorized metrics.
+
+Satellites of the SpMM PR:
+  * nnz_balanced_partition must survive p > m, a single giant row that
+    swallows several nnz targets, and empty trailing panels — always
+    returning monotone offsets that cover every row exactly once.
+  * The vectorized metrics (profile / distinct_col_blocks / cut_volume /
+    halo_width) must be BIT-identical to the straightforward per-row /
+    per-panel loops they replaced.
+"""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.sparse import metrics
+from repro.core.sparse.csr import CSRMatrix
+from repro.core.sparse.partition import (nnz_balanced_partition,
+                                         partition_to_owner,
+                                         static_partition)
+from repro.matrices import generators as G
+
+
+def _skewed(m: int, seed: int) -> CSRMatrix:
+    return G.power_law(max(m, 8), alpha=1.8, seed=seed)
+
+
+def _check_invariants(mat: CSRMatrix, p: int, starts: np.ndarray) -> None:
+    assert starts.shape == (p + 1,)
+    assert starts[0] == 0 and starts[-1] == mat.m
+    assert np.all(np.diff(starts) >= 0), "panel offsets must be monotone"
+    loads = metrics.panel_loads(mat, starts)
+    assert int(loads.sum()) == mat.nnz, "panels must cover every nnz once"
+    if mat.nnz and p > 1:
+        # greedy-splitter guarantee: no panel exceeds fair share + one row
+        max_row = int(mat.row_nnz().max())
+        assert loads.max() <= mat.nnz / p + max_row + 1e-9
+
+
+@given(st.integers(8, 200), st.integers(1, 64), st.integers(0, 5))
+@settings(max_examples=25, deadline=None)
+def test_property_nnz_balanced_invariants(m, p, seed):
+    """Random skewed matrices x panel counts (including p > m)."""
+    mat = _skewed(m, seed)
+    _check_invariants(mat, p, nnz_balanced_partition(mat, p))
+
+
+def test_nnz_balanced_p_greater_than_m():
+    mat = _skewed(16, 0)
+    starts = nnz_balanced_partition(mat, 64)
+    _check_invariants(mat, 64, starts)
+    # exactly m nonempty panels at most
+    assert int(np.count_nonzero(np.diff(starts))) <= mat.m
+
+
+def test_nnz_balanced_giant_row_swallows_targets():
+    """One row holding ~90% of nnz overruns several targets at once."""
+    m, p = 64, 8
+    counts = np.ones(m, dtype=np.int64)
+    counts[3] = 600
+    rowptr = np.concatenate([[0], np.cumsum(counts)]).astype(np.int32)
+    nnz = int(rowptr[-1])
+    rng = np.random.default_rng(0)
+    mat = CSRMatrix(rowptr=rowptr,
+                    cols=rng.integers(0, m, nnz).astype(np.int32),
+                    vals=np.ones(nnz), shape=(m, m))
+    starts = nnz_balanced_partition(mat, p)
+    _check_invariants(mat, p, starts)
+    # the giant row sits alone in its panel; the overtaken cuts collapse
+    giant_panel = int(np.searchsorted(starts, 3, side="right")) - 1
+    assert starts[giant_panel] <= 3 < starts[giant_panel + 1]
+
+
+def test_nnz_balanced_degenerate_inputs():
+    empty = CSRMatrix(rowptr=np.zeros(9, np.int32),
+                      cols=np.empty(0, np.int32), vals=np.empty(0),
+                      shape=(8, 8))
+    starts = nnz_balanced_partition(empty, 4)  # nnz == 0 -> equal rows
+    assert np.array_equal(starts, static_partition(empty, 4))
+    zero_rows = CSRMatrix(rowptr=np.zeros(1, np.int32),
+                          cols=np.empty(0, np.int32), vals=np.empty(0),
+                          shape=(0, 0))
+    assert np.array_equal(nnz_balanced_partition(zero_rows, 3),
+                          np.zeros(4, np.int64))
+    with pytest.raises(ValueError):
+        nnz_balanced_partition(empty, 0)
+
+
+def test_partition_to_owner_matches_loop():
+    mat = _skewed(100, 1)
+    for p in (1, 3, 8, 200):
+        starts = nnz_balanced_partition(mat, p)
+        want = np.zeros(mat.m, dtype=np.int32)
+        for pnl in range(len(starts) - 1):
+            want[starts[pnl]:starts[pnl + 1]] = pnl
+        assert np.array_equal(partition_to_owner(starts, mat.m), want)
+
+
+# --------------------------------------------------------------------------
+# Vectorized metrics == the loops they replaced (bit-identical)
+# --------------------------------------------------------------------------
+def _profile_loop(mat):
+    total = 0
+    rp = mat.rowptr.astype(np.int64)
+    for i in np.flatnonzero(np.diff(rp) > 0):
+        cmin = mat.cols[rp[i]:rp[i + 1]].min()
+        if cmin < i:
+            total += int(i - cmin)
+    return total
+
+
+def _distinct_loop(mat, panel_starts, block_n):
+    rp = mat.rowptr.astype(np.int64)
+    out = np.zeros(len(panel_starts) - 1, dtype=np.int64)
+    blocks = mat.cols.astype(np.int64) // block_n
+    for p in range(len(panel_starts) - 1):
+        s, e = rp[panel_starts[p]], rp[panel_starts[p + 1]]
+        out[p] = np.unique(blocks[s:e]).size
+    return out
+
+
+def _cut_loop(mat, panel_starts):
+    owner = np.zeros(mat.m, dtype=np.int64)
+    for p in range(len(panel_starts) - 1):
+        owner[panel_starts[p]:panel_starts[p + 1]] = p
+    r = np.repeat(np.arange(mat.m), mat.row_nnz()).astype(np.int64)
+    return int(np.count_nonzero(owner[r] != owner[mat.cols.astype(np.int64)]))
+
+
+def _halo_loop(mat, panel_starts):
+    rp = mat.rowptr.astype(np.int64)
+    worst = 0
+    for p in range(len(panel_starts) - 1):
+        r0, r1 = panel_starts[p], panel_starts[p + 1]
+        s, e = rp[r0], rp[r1]
+        if e > s:
+            seg = mat.cols[s:e].astype(np.int64)
+            worst = max(worst,
+                        int(max(r0 - seg.min(), seg.max() - (r1 - 1), 0)))
+    return worst
+
+
+_MATS = [
+    lambda: G.power_law(150, alpha=1.8, seed=0),
+    lambda: G.banded(96, 5, seed=1),
+    lambda: G.shuffle(G.sbm(128, 4, 0.15, 0.01, seed=2), seed=3),
+    # rows 10..19 empty: exercises the reduceat empty-segment argument
+    lambda: _with_empty_rows(),
+]
+
+
+def _with_empty_rows():
+    mat = G.banded(64, 3, seed=4)
+    dense = mat.to_dense()
+    dense[10:20, :] = 0.0
+    rows, cols = np.nonzero(dense)
+    return CSRMatrix.from_coo(rows, cols, dense[rows, cols], mat.shape)
+
+
+@pytest.mark.parametrize("mk", range(len(_MATS)))
+@pytest.mark.parametrize("p", [1, 3, 7, 64])
+def test_vectorized_metrics_bit_identical(mk, p):
+    mat = _MATS[mk]()
+    for starts in (static_partition(mat, p), nnz_balanced_partition(mat, p)):
+        assert metrics.profile(mat) == _profile_loop(mat)
+        assert np.array_equal(metrics.distinct_col_blocks(mat, starts, 16),
+                              _distinct_loop(mat, starts, 16))
+        assert metrics.cut_volume(mat, starts) == _cut_loop(mat, starts)
+        assert metrics.halo_width(mat, starts) == _halo_loop(mat, starts)
+
+
+def test_vectorized_metrics_non_covering_partition():
+    """A partition spanning only a sub-range of rows must behave exactly
+    like the old loops: out-of-panel nonzeros are simply ignored."""
+    mat = G.power_law(150, alpha=1.8, seed=5)
+    starts = np.array([10, 40, 90], dtype=np.int64)
+    assert np.array_equal(metrics.distinct_col_blocks(mat, starts, 16),
+                          _distinct_loop(mat, starts, 16))
+    assert metrics.cut_volume(mat, starts) == _cut_loop(mat, starts)
+    assert metrics.halo_width(mat, starts) == _halo_loop(mat, starts)
+
+
+def test_vectorized_metrics_empty_matrix():
+    empty = CSRMatrix(rowptr=np.zeros(17, np.int32),
+                      cols=np.empty(0, np.int32), vals=np.empty(0),
+                      shape=(16, 16))
+    starts = static_partition(empty, 4)
+    assert metrics.profile(empty) == 0
+    assert np.array_equal(metrics.distinct_col_blocks(empty, starts, 8),
+                          np.zeros(4, np.int64))
+    assert metrics.cut_volume(empty, starts) == 0
+    assert metrics.halo_width(empty, starts) == 0
