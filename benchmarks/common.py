@@ -25,10 +25,10 @@ from typing import Dict, Iterable
 import jax.numpy as jnp
 import numpy as np
 
+from repro.api import SpmvProblem, plan
 from repro.core.measure import cg, ios, parallel_model
 from repro.core.reorder import api as reorder_api
 from repro.core.sparse import metrics, partition
-from repro.core.spmv.opcache import build_cached
 from repro.matrices import suite
 
 RESULTS_DIR = os.path.join(os.path.dirname(__file__), "results")
@@ -70,12 +70,15 @@ def measure_cell(mat, scheme: str, profile: dict, iters: int = 12,
                  with_cg: bool = True) -> dict:
     """All measurements for one (matrix, scheme, machine profile) cell."""
     dtype = jnp.float32 if profile["dtype"] == "float32" else jnp.float64
-    perm = reorder_api.reorder(mat, scheme)
-    rmat_ = mat.permute(perm) if scheme != "baseline" else mat
+    # one plan() + build() through the pipeline facade: repeat campaigns
+    # reload plan + device arrays from the plan store (plan time -> ~0)
+    pl = plan(SpmvProblem(mat, dtype=profile["dtype"]), reorder=scheme,
+              engine=profile["engine"])
+    op_full = pl.build()
+    rmat_ = pl.reordered_matrix()
     nnz = rmat_.nnz
-    # operator goes through the persistent cache: repeat campaigns reload
-    # device arrays instead of reconverting/re-tuning (plan time -> ~0)
-    op, build_info = build_cached(rmat_, engine=profile["engine"], dtype=dtype)
+    build_info = op_full.build_info
+    op = op_full.unwrap()      # measurements run in the reordered space
     rng = np.random.default_rng(0)
     x0 = jnp.asarray(rng.standard_normal(rmat_.n), dtype)
 
@@ -90,16 +93,15 @@ def measure_cell(mat, scheme: str, profile: dict, iters: int = 12,
         # plan-time accounting (paper methodology: preprocessing is
         # reported separately from SpMV run-time, never folded in)
         "engine": build_info["engine"],
-        "tuner_choice": (build_info["plan"] or {}).get("engine",
-                                                       build_info["engine"]),
-        "tune_ms": build_info["tune_ms"],
+        "tuner_choice": pl.tune.engine,
+        "tune_ms": pl.tune_ms,
         "format_build_ms": build_info["build_ms"],
         "op_cache_hit": build_info["cache_hit"],
         "op_load_ms": build_info["load_ms"],
     }
-    if build_info["plan"]:
-        rec["tuner_label"] = op.plan.label()
-        rec["tuner_cost_bytes"] = build_info["plan"]["cost_bytes"]
+    if pl.engine_request == "auto":
+        rec["tuner_label"] = pl.tune.label()
+        rec["tuner_cost_bytes"] = pl.tune.cost_bytes
     if with_cg:
         cg_ms = float(np.median(cg.cg_measured(op, x0, iters=iters)))
         rec["cg_ms"] = cg_ms

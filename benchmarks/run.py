@@ -35,12 +35,12 @@ MODULES = [
 
 def smoke() -> int:
     """Tiny end-to-end pass for CI: smoke matrices x {baseline, rcm} with
-    the autotuned engine through the operator cache. Returns failure count."""
+    the autotuned engine through the pipeline facade (plan store included).
+    Returns failure count."""
     import numpy as np
 
+    from repro.api import SpmvProblem, plan
     from repro.core.measure import ios
-    from repro.core.reorder import api as reorder_api
-    from repro.core.spmv.opcache import build_cached
     from repro.matrices import suite
 
     import jax.numpy as jnp
@@ -52,21 +52,24 @@ def smoke() -> int:
             t0 = time.time()
             try:
                 mat = suite.get(mname)
-                rmat = (reorder_api.apply_scheme(mat, scheme)
-                        if scheme != "baseline" else mat)
                 # interpret-mode keeps the Pallas kernel path covered on CPU
                 # whenever the tuner picks a kernel engine
-                op, info = build_cached(rmat, engine="auto",
-                                        use_kernel="interpret")
+                pl = plan(SpmvProblem(mat,
+                                      hints={"use_kernel": "interpret"}),
+                          reorder=scheme, engine="auto")
+                op = pl.build()
                 x0 = jnp.asarray(
-                    np.random.default_rng(0).standard_normal(rmat.n),
+                    np.random.default_rng(0).standard_normal(mat.n),
                     jnp.float32)
-                ms = float(np.median(ios.run_ios(op, x0, iters=3, warmup=1)))
-                # correctness gate, not just timing
-                want = rmat.spmv(np.asarray(x0))
+                ms = float(np.median(ios.run_ios(op.unwrap(), x0, iters=3,
+                                                 warmup=1)))
+                # correctness gate in the ORIGINAL index space: this also
+                # exercises the operator's carried permutation
+                want = mat.spmv(np.asarray(x0))
                 err = float(np.abs(np.asarray(op(x0)) - want).max())
                 scale = float(np.abs(want).max()) + 1e-9
                 assert err / scale < 1e-4, (mname, scheme, err / scale)
+                info = op.build_info
                 derived = {"engine": info["engine"], "ms": round(ms, 3),
                            "cache_hit": info["cache_hit"]}
                 us = (time.time() - t0) * 1e6

@@ -1,33 +1,44 @@
-"""Quickstart: reorder a sparse matrix and measure SpMV under IOS.
+"""Quickstart: the Problem -> Plan -> Operator pipeline (repro.api).
+
+One staged call replaces the old reorder/build/tune wiring: `plan()` picks
+the (scheme, engine, shape) jointly, `Plan.build()` returns an operator
+that CARRIES its permutation — `op(x)` takes x in the original index
+space, so nothing here permutes vectors by hand.
 
     PYTHONPATH=src python examples/quickstart.py
 """
 import jax.numpy as jnp
 import numpy as np
 
+from repro.api import SpmvProblem, plan
 from repro.core.measure import ios
-from repro.core.reorder import api as reorder
 from repro.core.sparse import metrics, partition
-from repro.core.spmv.ops import build_operator
 from repro.matrices import generators as G
 
 # a shuffled banded matrix: structure exists but is hidden (paper Fig. 1)
 mat = G.shuffle(G.banded(100_000, 8, seed=0), seed=1)
 x = jnp.asarray(np.random.default_rng(0).standard_normal(mat.n), jnp.float32)
+want = mat.spmv(np.asarray(x))
 
 print(f"matrix: {mat.m}x{mat.n}, nnz={mat.nnz}, "
       f"bandwidth={metrics.bandwidth(mat)}")
 
-for scheme in ["baseline", "rcm", "metis", "louvain", "patoh"]:
-    perm = reorder.reorder(mat, scheme)
-    rmat = mat.permute(perm) if scheme != "baseline" else mat
+problem = SpmvProblem(mat)
+for scheme in ["baseline", "rcm", "metis", "louvain", "patoh", "auto"]:
     # engine="auto": the OSKI-style tuner (DESIGN.md "Engine selection &
-    # autotuning") picks the format per reordered matrix
-    op = build_operator(rmat, "auto")
-    ms = float(np.median(ios.run_ios(op, x, iters=8)))
+    # autotuning") picks the format per reordered matrix; scheme "auto"
+    # additionally searches the reordering axis (joint selection)
+    pl = plan(problem, reorder=scheme, engine="auto")
+    op = pl.build()
+    # the operator accepts x in the ORIGINAL index space — verify it
+    err = float(np.abs(np.asarray(op(x)) - want).max() / np.abs(want).max())
+    assert err < 1e-4, (scheme, err)
+    # measurement opts out of the permutation wrapper (reordered space)
+    ms = float(np.median(ios.run_ios(op.unwrap(), x, iters=8)))
+    rmat = pl.reordered_matrix()
     panels = partition.static_partition(rmat, 8)
-    print(f"{scheme:10s} engine={op.plan.label():14s} ios={ms:7.2f}ms "
+    print(f"{scheme:10s} plan={pl.label():22s} ios={ms:7.2f}ms "
           f"gflops={ios.gflops(rmat.nnz, np.array([ms]))[0]:5.2f} "
           f"bandwidth={metrics.bandwidth(rmat):7d} "
           f"LI(8)={metrics.load_imbalance(rmat, panels):.3f} "
-          f"cut(8)={metrics.cut_volume(rmat, panels):8d}")
+          f"cut(8)={metrics.cut_volume(rmat, panels):8d} err={err:.1e}")

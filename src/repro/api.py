@@ -1,0 +1,41 @@
+"""repro.api — the unified Problem → Plan → Operator pipeline facade.
+
+One staged, OSKI-style entry point for the paper's reorder/convert/tune/
+measure loop (DESIGN.md "Pipeline API"):
+
+    from repro.api import SpmvProblem, plan
+
+    problem = SpmvProblem(mat, k=8)              # matrix + RHS width + dtype
+    pl = plan(problem, reorder="auto")           # scheme x engine x shape x k
+    op = pl.build()                              # permutation-carrying op
+    y = op(x)                                    # x in the ORIGINAL space
+
+    pl.save()                                    # one content-addressed
+    pl2 = Plan.load(pl.key, mat=mat)             # store: plan + perm + op
+    op2 = pl2.build()                            # arrays — no re-tune
+
+Schemes and engines are plugins: anything registered through
+@register_scheme / @register_engine (core/registry.py) participates in
+planning, including `plan(reorder="auto", engine="auto")` joint selection.
+Importing this module registers every built-in (core.reorder.api schemes,
+core.spmv.ops engines), so the registries are populated as a side effect.
+
+Legacy entry points (`core.spmv.ops.build_operator`,
+`core.reorder.api.apply_scheme`) remain as deprecation shims; see the
+README migration table.
+"""
+from __future__ import annotations
+
+from .core.registry import (ENGINE_REGISTRY, SCHEME_REGISTRY, EngineSpec,
+                            SchemeSpec, get_engine, get_scheme,
+                            register_engine, register_scheme)
+# importing these populates the registries with every built-in
+from .core.reorder import api as _reorder_api  # noqa: F401
+from .core.spmv import ops as _ops  # noqa: F401
+from .core.spmv.plan import Operator, Plan, SpmvProblem, plan, plan_key
+
+__all__ = [
+    "SpmvProblem", "plan", "Plan", "Operator", "plan_key",
+    "register_scheme", "register_engine", "get_scheme", "get_engine",
+    "SchemeSpec", "EngineSpec", "SCHEME_REGISTRY", "ENGINE_REGISTRY",
+]

@@ -1,11 +1,15 @@
 """Conjugate Gradient — the paper's "real application" yardstick (Listing 3).
 
-Three forms:
+Four forms:
   * cg_solve      — fully jit-compiled (lax.while_loop) production solver
                     used by examples/cg_solver.py and the distributed runtime.
   * block_cg_solve— k right-hand sides at once; one SpMM (operator.matmul)
                     per iteration instead of k SpMVs — the solver workload
                     the batched engine layer opens.
+  * solve_problem — pipeline-facade consumer: plan + build + solve entirely
+                    in the ORIGINAL index space (the permutation-carrying
+                    operator absorbs the reordering; callers never permute
+                    b or un-permute x by hand).
   * cg_measured   — open-coded iteration that times the SpMV separately from
                     the vector updates, exactly like the paper's
                     instrumented Listing 3 (per-iteration SpMV wall-clock).
@@ -93,6 +97,37 @@ def block_cg_solve(matmul: Callable, b: jax.Array, max_iter: int = 100,
 
     x, r, p, rs, k = jax.lax.while_loop(cond, body, (x0, r0, p0, rs0, 0))
     return CGResult(x=x, iters=k, residual=jnp.sqrt(rs))
+
+
+def solve_problem(problem, b: jax.Array, reorder: str = "auto",
+                  engine: str = "auto", max_iter: int = 100,
+                  tol: float = 1e-8, probe: bool = False,
+                  cache: bool = True):
+    """Plan, build, and CG-solve A x = b through the pipeline facade.
+
+    `problem` is an SpmvProblem or a bare CSRMatrix. b of shape [n] runs
+    cg_solve; [n, k] runs block_cg_solve (one SpMM per iteration). Both b
+    and the returned solution live in the ORIGINAL index space — the
+    reordering the planner picks (e.g. reorder="auto" choosing rcm for
+    locality) happens inside the permutation-carrying operator, so there
+    is no hand-carried permutation between caller and solver.
+
+    Returns (CGResult, Operator); the operator's `.plan` records what the
+    pipeline decided (scheme, engine, costs).
+    """
+    from ...api import SpmvProblem, plan as make_plan
+
+    k = int(b.shape[1]) if getattr(b, "ndim", 1) == 2 else 1
+    if not isinstance(problem, SpmvProblem):
+        problem = SpmvProblem(problem, k=k)
+    pl = make_plan(problem, reorder=reorder, engine=engine, probe=probe,
+                   cache=cache)
+    op = pl.build(cache=cache)
+    if k > 1:
+        res = block_cg_solve(op.matmul, b, max_iter=max_iter, tol=tol)
+    else:
+        res = cg_solve(op, b, max_iter=max_iter, tol=tol)
+    return res, op
 
 
 def cg_measured(matvec: Callable, b: jax.Array, iters: int = 20,

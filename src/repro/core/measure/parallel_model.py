@@ -21,7 +21,7 @@ import jax.numpy as jnp
 
 from ..sparse.csr import CSRMatrix
 from ..sparse.partition import static_partition, nnz_balanced_partition
-from ..spmv.ops import build_operator
+from ..spmv.ops import make_engine
 from .ios import run_ios
 
 ALPHA_SYNC_MS = 0.005  # barrier cost estimate (one core-to-core sync)
@@ -60,7 +60,7 @@ def modelled_parallel_ms(mat: CSRMatrix, p: int, engine: str = "csr",
         # bucket nnz so same-sized panels share one XLA compilation
         nz = max(sub.nnz, 1)
         bucket = max(4096, 1 << (int(np.ceil(np.log2(nz))) - 3))
-        op = build_operator(sub, engine, nnz_bucket=bucket)
+        op = make_engine(sub, engine, nnz_bucket=bucket)
         # IOS-style but x comes from outside the panel (real CG dataflow):
         # swap only the panel's slice of a fresh vector each iteration.
         ms = run_ios_panel(op, x, r0, r1, iters)

@@ -1,0 +1,116 @@
+"""Plugin registries for reordering schemes and SpMV engines.
+
+The pipeline facade (repro.api) plans over *whatever is registered*, not a
+hardcoded list: a reordering scheme is a function `(mat, seed) -> perm`
+registered with @register_scheme, and an engine is a builder
+`(mat, dtype=..., block_shape=..., sell_sigma=..., use_kernel=...,
+nnz_bucket=...) -> operator` registered with @register_engine. Capability
+metadata rides on the spec so planners can reason about candidates without
+importing them:
+
+  * SchemeSpec.paper           — one of the paper's §2.1 schemes
+  * SchemeSpec.auto_candidate  — plan(reorder="auto") tries it by default
+  * EngineSpec.supports_spmm   — operator.matmul(X[n, k]) is implemented
+  * EngineSpec.cost_fn         — bytes-per-SpMM model (core/spmv/tune.py)
+  * EngineSpec.candidates_fn   — (mat, feat) -> shape grid the tuner scores
+  * EngineSpec.device          — "any" (pure XLA) or "tpu" (Pallas kernel
+                                 with interpret/ref fallback elsewhere)
+
+Built-ins register at import of core.reorder.api / core.spmv.ops (both are
+imported by repro.api, so `import repro.api` is the one-line way to get a
+fully populated registry). Third-party schemes/engines register the same
+way and immediately participate in plan(reorder="auto", engine="auto").
+
+This module must stay jax-free: it is imported by plan-time code that runs
+before XLA_FLAGS are pinned (see core/sparse/csr.py's rule).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, Optional
+
+
+@dataclasses.dataclass(frozen=True)
+class SchemeSpec:
+    """A registered reordering scheme: perm = fn(mat, seed)."""
+
+    name: str
+    fn: Callable
+    paper: bool = False
+    auto_candidate: bool = False
+    description: str = ""
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineSpec:
+    """A registered SpMV engine: operator = build(mat, **build_kwargs)."""
+
+    name: str
+    build: Callable
+    supports_spmm: bool = True
+    device: str = "any"
+    cost_fn: Optional[Callable] = None
+    candidates_fn: Optional[Callable] = None
+    description: str = ""
+
+
+SCHEME_REGISTRY: Dict[str, SchemeSpec] = {}
+ENGINE_REGISTRY: Dict[str, EngineSpec] = {}
+
+
+def register_scheme(name: str, *, paper: bool = False,
+                    auto_candidate: bool = False, description: str = "",
+                    override: bool = False) -> Callable:
+    """Decorator: register `fn(mat, seed=0) -> perm` under `name`."""
+
+    def deco(fn: Callable) -> Callable:
+        if name in SCHEME_REGISTRY and not override:
+            raise ValueError(f"scheme {name!r} already registered "
+                             f"(pass override=True to replace)")
+        SCHEME_REGISTRY[name] = SchemeSpec(
+            name=name, fn=fn, paper=paper, auto_candidate=auto_candidate,
+            description=description)
+        return fn
+
+    return deco
+
+
+def register_engine(name: str, *, supports_spmm: bool = True,
+                    device: str = "any", cost_fn: Optional[Callable] = None,
+                    candidates_fn: Optional[Callable] = None,
+                    description: str = "",
+                    override: bool = False) -> Callable:
+    """Decorator: register an operator builder under `name`.
+
+    The builder must accept the keyword surface
+    (mat, dtype=..., block_shape=..., sell_sigma=..., use_kernel=...,
+    nnz_bucket=...) and may ignore what it doesn't use.
+    """
+
+    def deco(build: Callable) -> Callable:
+        if name in ENGINE_REGISTRY and not override:
+            raise ValueError(f"engine {name!r} already registered "
+                             f"(pass override=True to replace)")
+        ENGINE_REGISTRY[name] = EngineSpec(
+            name=name, build=build, supports_spmm=supports_spmm,
+            device=device, cost_fn=cost_fn, candidates_fn=candidates_fn,
+            description=description)
+        return build
+
+    return deco
+
+
+def get_scheme(name: str) -> SchemeSpec:
+    try:
+        return SCHEME_REGISTRY[name]
+    except KeyError:
+        raise KeyError(f"unknown scheme {name!r}; known: "
+                       f"{sorted(SCHEME_REGISTRY)}") from None
+
+
+def get_engine(name: str) -> EngineSpec:
+    try:
+        return ENGINE_REGISTRY[name]
+    except KeyError:
+        raise KeyError(f"unknown engine {name!r}; known: "
+                       f"{sorted(ENGINE_REGISTRY)}") from None

@@ -13,7 +13,7 @@ Layout (one entry = two files under $REPRO_OPERATOR_CACHE, default
     <key>.npz    device-array payload (operator.state() arrays)
     <key>.json   {"cls": operator class, "meta": ..., "plan": TunePlan}
 
-`build_cached` is the single entry point; it wraps ops.build_operator /
+`build_cached` is the low-level entry point; it wraps ops.make_engine /
 tune.build_tuned and returns (operator, info) where info separates
 plan-time (tune_ms, build_ms, load_ms, cache_hit) from the run-time the
 measurement harness goes on to observe — the paper's methodology point
@@ -138,7 +138,7 @@ def build_cached(mat: CSRMatrix, engine: str = "auto", dtype=None,
     """
     import jax.numpy as jnp
 
-    from .ops import build_operator
+    from .ops import make_engine
     from .tune import build_from_plan
 
     dt = jnp.float32 if dtype is None else dtype
@@ -174,8 +174,8 @@ def build_cached(mat: CSRMatrix, engine: str = "auto", dtype=None,
         t0 = time.perf_counter()
         op = build_from_plan(mat, plan, dtype=dt, use_kernel=use_kernel)
     else:
-        op = build_operator(mat, engine, dtype=dt, block_shape=block_shape,
-                            use_kernel=use_kernel, sell_sigma=sell_sigma)
+        op = make_engine(mat, engine, dtype=dt, block_shape=block_shape,
+                         use_kernel=use_kernel, sell_sigma=sell_sigma)
     info["build_ms"] = (time.perf_counter() - t0) * 1e3
     info["engine"] = plan.engine if plan else engine
     info["plan"] = plan.to_json() if plan else None

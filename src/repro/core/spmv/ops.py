@@ -1,35 +1,45 @@
 """Unified jit'd SpMV engine dispatch.
 
-Engines:
+Engines (each a builder in the plugin registry, core/registry.py):
   csr    — gather + segment-sum (paper Listing 4 semantics; the CPU
            measurement engine for the reproduction study)
   ell    — padded row-major ELLPACK
+  sell   — SELL-C-σ Pallas kernel (TPU) / jnp oracle (CPU)
   bell   — Block-ELL Pallas kernel (TPU) / jnp oracle (CPU)
   bcsr   — BCSR Pallas kernel (TPU) / jnp oracle (CPU)
   dense  — dense matmul (tiny matrices / sanity only)
 
-`DeviceCSR.matvec` is what the measurement harness times; it is a single
-jit-compiled XLA computation per (matrix, engine).
+`make_engine(mat, name)` is the registry-dispatched factory; engine="auto"
+runs the OSKI-style tuner (core/spmv/tune.py), whose cost model and
+candidate grids are themselves registry metadata (`cost_fn` /
+`candidates_fn` on each EngineSpec), so a plugin engine registered with
+@register_engine participates in tuning and planning with no change here.
+The staged pipeline entry point — problem in, serializable plan out,
+permutation-carrying operator built from the plan — is repro.api.
 
 Every operator also exposes `matmul(x)` — the multi-vector SpMM path
 (y[m, k] = A @ x[n, k]) that amortizes the matrix stream over k right-hand
-sides. `build_operator(mat, "auto", k=8)` tunes with the k-aware cost model
-(core/spmv/tune.py); the batched serving front-end lives in
-serving/spmv_service.py.
+sides; the batched serving front-end lives in serving/spmv_service.py.
+
+`build_operator` is a deprecated shim over `make_engine` kept for external
+callers.
 """
 from __future__ import annotations
 
 import functools
+import warnings
 from typing import Literal
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from .. import registry
+from ..registry import register_engine
 from ..sparse.bell import to_bcsr, to_block_ell
 from ..sparse.csr import CSRMatrix
 from ..sparse.sell import to_sell
-from . import ref
+from . import ref, tune
 
 Engine = Literal["csr", "ell", "sell", "bell", "bcsr", "dense", "auto"]
 
@@ -169,11 +179,77 @@ class DeviceDense:
         return op
 
 
-def build_operator(mat: CSRMatrix, engine: Engine = "csr", dtype=jnp.float32,
-                   block_shape=(8, 128), use_kernel: str = "auto",
-                   nnz_bucket: int = 0, sell_sigma: int | None = None,
-                   probe: bool = False, k: int = 1):
-    """Factory: host CSRMatrix -> callable device operator y = A @ x.
+# -- engine registry entries (registration order = tuner candidate order) --
+
+@register_engine("csr", supports_spmm=True, device="any",
+                 cost_fn=tune.cost_csr, candidates_fn=tune.cands_default,
+                 description="COO-expanded gather + segment-sum")
+def _build_csr(mat: CSRMatrix, dtype=jnp.float32, block_shape=(8, 128),
+               sell_sigma=None, use_kernel: str = "auto",
+               nnz_bucket: int = 0):
+    return DeviceCSR(mat, dtype, nnz_bucket=nnz_bucket)
+
+
+@register_engine("ell", supports_spmm=True, device="any",
+                 cost_fn=tune.cost_ell, candidates_fn=tune.cands_default,
+                 description="padded row-major ELLPACK")
+def _build_ell(mat: CSRMatrix, dtype=jnp.float32, block_shape=(8, 128),
+               sell_sigma=None, use_kernel: str = "auto",
+               nnz_bucket: int = 0):
+    return DeviceELL(mat, dtype)
+
+
+@register_engine("bell", supports_spmm=True, device="tpu",
+                 cost_fn=tune.cost_bell, candidates_fn=tune.cands_default,
+                 description="Block-ELL Pallas kernel (ref fallback on CPU)")
+def _build_bell(mat: CSRMatrix, dtype=jnp.float32, block_shape=(8, 128),
+                sell_sigma=None, use_kernel: str = "auto",
+                nnz_bucket: int = 0):
+    from ...kernels.bell_spmv.ops import BellOperator
+
+    return BellOperator(to_block_ell(mat, *block_shape), dtype, use_kernel)
+
+
+@register_engine("bcsr", supports_spmm=True, device="tpu",
+                 cost_fn=tune.cost_bcsr, candidates_fn=tune.cands_default,
+                 description="BCSR Pallas kernel (ref fallback on CPU)")
+def _build_bcsr(mat: CSRMatrix, dtype=jnp.float32, block_shape=(8, 128),
+                sell_sigma=None, use_kernel: str = "auto",
+                nnz_bucket: int = 0):
+    from ...kernels.bcsr_spmv.ops import BcsrOperator
+
+    return BcsrOperator(to_bcsr(mat, *block_shape), dtype, use_kernel)
+
+
+@register_engine("sell", supports_spmm=True, device="tpu",
+                 cost_fn=tune.cost_sell, candidates_fn=tune.cands_sell,
+                 description="SELL-C-σ Pallas kernel, k-tiled SpMM")
+def _build_sell(mat: CSRMatrix, dtype=jnp.float32, block_shape=(8, 128),
+                sell_sigma=None, use_kernel: str = "auto",
+                nnz_bucket: int = 0):
+    from ...kernels.sell_spmv.ops import SellOperator
+
+    c, w = block_shape
+    sigma = 8 * c if sell_sigma is None else sell_sigma
+    return SellOperator(to_sell(mat, c=c, sigma=sigma, w=w), dtype,
+                        use_kernel)
+
+
+@register_engine("dense", supports_spmm=True, device="any",
+                 cost_fn=tune.cost_dense, candidates_fn=tune.cands_dense,
+                 description="dense matmul (tiny matrices / sanity only)")
+def _build_dense(mat: CSRMatrix, dtype=jnp.float32, block_shape=(8, 128),
+                 sell_sigma=None, use_kernel: str = "auto",
+                 nnz_bucket: int = 0):
+    return DeviceDense(mat, dtype)
+
+
+def make_engine(mat: CSRMatrix, engine: Engine = "csr", dtype=jnp.float32,
+                block_shape=(8, 128), use_kernel: str = "auto",
+                nnz_bucket: int = 0, sell_sigma: int | None = None,
+                probe: bool = False, k: int = 1):
+    """Factory: host CSRMatrix -> callable device operator y = A @ x,
+    dispatched through the engine registry.
 
     engine="auto" runs the OSKI-style tuner (core/spmv/tune.py): a cost
     model over structural metrics (optionally refined by empirical probing
@@ -187,31 +263,37 @@ def build_operator(mat: CSRMatrix, engine: Engine = "csr", dtype=jnp.float32,
 
     For engine="sell", block_shape is (slice height C, chunk width W) and
     sell_sigma is the σ sort window (default 8 * C).
+
+    Operators built here live in the *given* matrix's index space; the
+    permutation-carrying wrapper that accepts original-index-space vectors
+    is repro.api.plan(...).build().
     """
     if engine == "auto":
-        from .tune import build_tuned
+        return tune.build_tuned(mat, dtype=dtype, probe=probe,
+                                use_kernel=use_kernel, nnz_bucket=nnz_bucket,
+                                k=k)
+    spec = registry.get_engine(engine)
+    return spec.build(mat, dtype=dtype, block_shape=block_shape,
+                      sell_sigma=sell_sigma, use_kernel=use_kernel,
+                      nnz_bucket=nnz_bucket)
 
-        return build_tuned(mat, dtype=dtype, probe=probe,
-                           use_kernel=use_kernel, nnz_bucket=nnz_bucket, k=k)
-    if engine == "csr":
-        return DeviceCSR(mat, dtype, nnz_bucket=nnz_bucket)
-    if engine == "ell":
-        return DeviceELL(mat, dtype)
-    if engine == "dense":
-        return DeviceDense(mat, dtype)
-    if engine == "sell":
-        from ...kernels.sell_spmv.ops import SellOperator
 
-        c, w = block_shape
-        sigma = 8 * c if sell_sigma is None else sell_sigma
-        return SellOperator(to_sell(mat, c=c, sigma=sigma, w=w), dtype,
-                            use_kernel)
-    if engine == "bell":
-        from ...kernels.bell_spmv.ops import BellOperator
+def build_operator(mat: CSRMatrix, engine: Engine = "csr", dtype=jnp.float32,
+                   block_shape=(8, 128), use_kernel: str = "auto",
+                   nnz_bucket: int = 0, sell_sigma: int | None = None,
+                   probe: bool = False, k: int = 1):
+    """Deprecated shim over `make_engine` (same signature and behavior).
 
-        return BellOperator(to_block_ell(mat, *block_shape), dtype, use_kernel)
-    if engine == "bcsr":
-        from ...kernels.bcsr_spmv.ops import BcsrOperator
-
-        return BcsrOperator(to_bcsr(mat, *block_shape), dtype, use_kernel)
-    raise KeyError(engine)
+    New code plans through repro.api — `plan(SpmvProblem(mat, k=k),
+    engine=...).build()` — which adds joint scheme/engine selection, the
+    persistent plan store, and permutation-carrying operators; code that
+    really wants a bare operator in the matrix's own index space calls
+    `make_engine` directly.
+    """
+    warnings.warn(
+        "build_operator() is deprecated; use repro.api.plan(...).build() "
+        "(or core.spmv.ops.make_engine for a bare fixed-engine operator)",
+        DeprecationWarning, stacklevel=2)
+    return make_engine(mat, engine, dtype=dtype, block_shape=block_shape,
+                       use_kernel=use_kernel, nnz_bucket=nnz_bucket,
+                       sell_sigma=sell_sigma, probe=probe, k=k)

@@ -12,15 +12,22 @@ per multiply while x/y traffic scales with the RHS batch width k, so
 `tune(mat, k=8)` can pick a different engine than `tune(mat)` — padding-
 heavy formats with regular access win once their footprint is amortized.
 
+The per-engine cost functions and candidate grids are attached to the
+engine registry (core/registry.py) as `cost_fn` / `candidates_fn`
+capability metadata: `candidate_cost` and `enumerate_candidates` dispatch
+over whatever engines are registered, so a plugin engine that ships a cost
+model participates in tuning with no change here.
+
 Two tuning modes:
   * model  — rank candidates by modelled bytes, build the argmin. Free.
   * probe  — additionally time the top PROBE_TOP_K candidates once
              (OSKI's empirical search) and build the measured winner.
 
-`build_tuned` is what `build_operator(mat, engine="auto")` calls; the
-chosen `TunePlan` rides on the returned operator as `.plan` so benchmarks
-can report plan-time decisions next to run-time numbers. Persistent reuse
-of tuned operators across processes lives in opcache.py.
+`build_tuned` is what the engine="auto" build path calls; the chosen
+`TunePlan` rides on the returned operator as `.plan` so benchmarks can
+report plan-time decisions next to run-time numbers. Persistent reuse of
+tuned operators across processes lives in opcache.py; the joint
+(scheme x engine) planner is core/spmv/plan.py.
 """
 from __future__ import annotations
 
@@ -30,6 +37,7 @@ from typing import Optional
 
 import numpy as np
 
+from .. import registry
 from ..sparse import metrics
 from ..sparse.csr import CSRMatrix
 from ..sparse.sell import pick_chunk_width, sell_padded_nnz
@@ -52,7 +60,7 @@ class TunePlan:
     cost_bytes: float                 # modelled bytes/SpMM of the choice
     costs: dict                       # candidate label -> modelled bytes
     features: dict                    # structural features the model used
-    source: str                       # "model" | "probe"
+    source: str                       # "model" | "probe" | "fixed"
     probe_ms: Optional[dict] = None   # candidate label -> measured ms
     tune_ms: float = 0.0              # wall time spent deciding
     k: int = 1                        # RHS batch width the plan was tuned for
@@ -71,6 +79,17 @@ class TunePlan:
         d = dict(d)
         d["block_shape"] = tuple(d["block_shape"])
         return TunePlan(**d)
+
+
+def fixed_plan(engine: str, block_shape: tuple = (8, 128),
+               sell_sigma: Optional[int] = None, k: int = 1) -> TunePlan:
+    """A TunePlan for an explicitly requested engine (no search). Gives the
+    pipeline layer (plan.py) one uniform decision record to serialize."""
+    if engine == "sell" and sell_sigma is None:
+        sell_sigma = 8 * block_shape[0]
+    return TunePlan(engine=engine, block_shape=tuple(block_shape),
+                    sell_sigma=sell_sigma, cost_bytes=0.0, costs={},
+                    features={}, source="fixed", k=max(int(k), 1))
 
 
 def _label(engine: str, block_shape: tuple, sigma: Optional[int]) -> str:
@@ -123,72 +142,114 @@ def _gather_penalty(feat: dict, line: int = 128) -> float:
     return 1.0 + min(spread, 8.0)
 
 
-def candidate_cost(feat: dict, engine: str, block_shape: tuple = (8, 128),
-                   sigma: Optional[int] = None,
-                   sell_pad: Optional[int] = None, k: int = 1) -> float:
-    """Modelled bytes streamed per SpMM with k right-hand sides.
-
-    cost(k) = matrix_bytes + k * per_vector_bytes: the stored values and
-    index metadata stream ONCE per multiply regardless of k (the SpMM
-    kernels reuse each chunk/block across the vector tile), while the
-    x-gather and y-write terms scale with k. k=1 reduces exactly to the
-    per-SpMV model, and dividing by k gives the amortized per-vector cost
-    the spmm_batch benchmark measures.
-
-    The gather line-overage also amortizes: the k values of a gathered x
-    row are contiguous in the [n, k] layout, so the line fetched for one
-    vector's element carries its k-tile siblings for free.
-    """
-    m, n, nnz = feat["m"], feat["n"], feat["nnz"]
-    k = max(int(k), 1)
-    gather = 1.0 + (_gather_penalty(feat) - 1.0) / min(k, 32)
-    if engine == "dense":
-        return float(m * n * _VAL + k * (n * _VAL + m * _VAL))
-    if engine == "csr":
-        # vals + cols + row ids (COO expansion) + k x (gathered x + y)
-        return float(nnz * (_VAL + 2 * _IDX)
-                     + k * (nnz * _VAL * gather * 0.25 + m * _VAL))
-    if engine == "ell":
-        pad = m * max(feat["row_nnz_max"], 1)
-        return float(pad * (_VAL + _IDX)
-                     + k * (pad * _VAL * gather * 0.25 + m * _VAL))
-    if engine == "sell":
-        pad = sell_pad if sell_pad is not None else nnz
-        return float(pad * (_VAL + _IDX)
-                     + k * (pad * _VAL * gather * 0.25 + m * _VAL))
-    if engine == "bell":
-        bm, bn = block_shape
-        pad_blocks = feat["num_block_rows"] * max(feat["block_row_max"], 1)
-        return float(pad_blocks * (bm * bn * _VAL + _IDX)
-                     + k * (pad_blocks * bn * _VAL + m * _VAL))
-    if engine == "bcsr":
-        bm, bn = block_shape
-        blocks = max(feat["nonempty_blocks"], 1)
-        return float(blocks * (bm * bn * _VAL + 2 * _IDX)
-                     + k * (blocks * bn * _VAL + m * _VAL))
-    raise KeyError(engine)
+def _gather(feat: dict, k: int) -> float:
+    """k-amortized gather penalty: the k values of a gathered x row are
+    contiguous in the [n, k] layout, so the line fetched for one vector's
+    element carries its k-tile siblings for free."""
+    return 1.0 + (_gather_penalty(feat) - 1.0) / min(k, 32)
 
 
-def enumerate_candidates(mat: CSRMatrix, feat: dict) -> list[dict]:
-    """(engine, shape) grid the tuner searches. Kept deliberately small —
-    OSKI's lesson is that a handful of well-chosen candidates capture the
-    attainable speedup."""
-    cands = [
-        dict(engine="csr", block_shape=(8, 128), sigma=None),
-        dict(engine="ell", block_shape=(8, 128), sigma=None),
-        dict(engine="bell", block_shape=(8, 128), sigma=None),
-        dict(engine="bcsr", block_shape=(8, 128), sigma=None),
-    ]
+# -- per-engine cost models (attached to the registry as cost_fn) ----------
+# Signature: (feat, block_shape, sigma, sell_pad, k) -> modelled bytes.
+# cost(k) = matrix_bytes + k * per_vector_bytes: stored values and index
+# metadata stream ONCE per multiply regardless of k (the SpMM kernels reuse
+# each chunk/block across the vector tile), while the x-gather and y-write
+# terms scale with k. k=1 reduces exactly to the per-SpMV model.
+
+def cost_dense(feat, block_shape, sigma, sell_pad, k):
+    m, n = feat["m"], feat["n"]
+    return float(m * n * _VAL + k * (n * _VAL + m * _VAL))
+
+
+def cost_csr(feat, block_shape, sigma, sell_pad, k):
+    # vals + cols + row ids (COO expansion) + k x (gathered x + y)
+    m, nnz = feat["m"], feat["nnz"]
+    return float(nnz * (_VAL + 2 * _IDX)
+                 + k * (nnz * _VAL * _gather(feat, k) * 0.25 + m * _VAL))
+
+
+def cost_ell(feat, block_shape, sigma, sell_pad, k):
+    m = feat["m"]
+    pad = m * max(feat["row_nnz_max"], 1)
+    return float(pad * (_VAL + _IDX)
+                 + k * (pad * _VAL * _gather(feat, k) * 0.25 + m * _VAL))
+
+
+def cost_sell(feat, block_shape, sigma, sell_pad, k):
+    pad = sell_pad if sell_pad is not None else feat["nnz"]
+    return float(pad * (_VAL + _IDX)
+                 + k * (pad * _VAL * _gather(feat, k) * 0.25
+                        + feat["m"] * _VAL))
+
+
+def cost_bell(feat, block_shape, sigma, sell_pad, k):
+    bm, bn = block_shape
+    pad_blocks = feat["num_block_rows"] * max(feat["block_row_max"], 1)
+    return float(pad_blocks * (bm * bn * _VAL + _IDX)
+                 + k * (pad_blocks * bn * _VAL + feat["m"] * _VAL))
+
+
+def cost_bcsr(feat, block_shape, sigma, sell_pad, k):
+    bm, bn = block_shape
+    blocks = max(feat["nonempty_blocks"], 1)
+    return float(blocks * (bm * bn * _VAL + 2 * _IDX)
+                 + k * (blocks * bn * _VAL + feat["m"] * _VAL))
+
+
+# -- per-engine candidate grids (attached as candidates_fn) ----------------
+# Signature: (mat, feat) -> [{"block_shape": ..., "sigma": ..., ...}].
+# Kept deliberately small — OSKI's lesson is that a handful of well-chosen
+# candidates capture the attainable speedup.
+
+def cands_default(mat, feat):
+    return [dict(block_shape=(8, 128), sigma=None)]
+
+
+def cands_sell(mat, feat):
     c = 8
     w_fit = pick_chunk_width(mat)
+    out = []
     for w in {w_fit, 128}:
         # σ = whole-matrix sort packs similar-degree rows best; the small
         # window keeps rows near their reordered position (cache locality)
         for sigma in (8 * c, max(int(feat["m"]), 1)):
-            cands.append(dict(engine="sell", block_shape=(c, w), sigma=sigma,
-                              sell_pad=sell_padded_nnz(mat, c, sigma, w)))
+            out.append(dict(block_shape=(c, w), sigma=sigma,
+                            sell_pad=sell_padded_nnz(mat, c, sigma, w)))
+    return out
+
+
+def cands_dense(mat, feat):
     if feat["m"] * feat["n"] <= _DENSE_MAX_ENTRIES:
-        cands.append(dict(engine="dense", block_shape=(8, 128), sigma=None))
+        return [dict(block_shape=(8, 128), sigma=None)]
+    return []
+
+
+def candidate_cost(feat: dict, engine: str, block_shape: tuple = (8, 128),
+                   sigma: Optional[int] = None,
+                   sell_pad: Optional[int] = None, k: int = 1) -> float:
+    """Modelled bytes streamed per SpMM with k right-hand sides, dispatched
+    through the engine registry's cost_fn. Dividing by k gives the
+    amortized per-vector cost the spmm_batch benchmark measures."""
+    from . import ops  # noqa: F401 — ensure built-in engines are registered
+
+    spec = registry.get_engine(engine)
+    if spec.cost_fn is None:
+        raise KeyError(f"engine {engine!r} registered without a cost_fn")
+    return spec.cost_fn(feat, block_shape, sigma, sell_pad, max(int(k), 1))
+
+
+def enumerate_candidates(mat: CSRMatrix, feat: dict) -> list[dict]:
+    """The (engine, shape) grid the tuner searches: every registered engine
+    with a cost model contributes its candidates_fn grid, in registration
+    order (built-ins: csr, ell, bell, bcsr, sell, dense)."""
+    from . import ops  # noqa: F401 — ensure built-in engines are registered
+
+    cands = []
+    for spec in registry.ENGINE_REGISTRY.values():
+        if spec.cost_fn is None or spec.candidates_fn is None:
+            continue
+        for shape in spec.candidates_fn(mat, feat):
+            cands.append(dict({"engine": spec.name}, **shape))
     return cands
 
 
@@ -214,16 +275,16 @@ def tune(mat: CSRMatrix, probe: bool = False, dtype=None,
         import jax.numpy as jnp
 
         from ..measure import ios
-        from .ops import build_operator
+        from .ops import make_engine
 
         dt = jnp.float32 if dtype is None else dtype
         probe_ms = {}
         best_ms = np.inf
         for cd in ranked[:PROBE_TOP_K]:
             lab = _label(cd["engine"], cd["block_shape"], cd["sigma"])
-            op = build_operator(mat, cd["engine"], dtype=dt,
-                               block_shape=cd["block_shape"],
-                               sell_sigma=cd["sigma"], use_kernel=use_kernel)
+            op = make_engine(mat, cd["engine"], dtype=dt,
+                             block_shape=cd["block_shape"],
+                             sell_sigma=cd["sigma"], use_kernel=use_kernel)
             ms = float(np.median(ios.run_ios_batched(
                 op, mat.n, k, iters=PROBE_ITERS, warmup=1, dtype=dt)))
             probe_ms[lab] = ms
@@ -240,17 +301,18 @@ def tune(mat: CSRMatrix, probe: bool = False, dtype=None,
 
 def build_from_plan(mat: CSRMatrix, plan: TunePlan, dtype=None,
                     use_kernel: str = "auto", nnz_bucket: int = 0):
-    """Materialize the operator a plan describes (used by the op cache).
-    The plan's k only steered the engine choice; the format is k-agnostic."""
+    """Materialize the operator a plan describes (used by the op cache and
+    the pipeline layer). The plan's k only steered the engine choice; the
+    format is k-agnostic."""
     import jax.numpy as jnp
 
-    from .ops import build_operator
+    from .ops import make_engine
 
     dt = jnp.float32 if dtype is None else dtype
-    op = build_operator(mat, plan.engine, dtype=dt,
-                        block_shape=plan.block_shape,
-                        sell_sigma=plan.sell_sigma, use_kernel=use_kernel,
-                        nnz_bucket=nnz_bucket)
+    op = make_engine(mat, plan.engine, dtype=dt,
+                     block_shape=plan.block_shape,
+                     sell_sigma=plan.sell_sigma, use_kernel=use_kernel,
+                     nnz_bucket=nnz_bucket)
     op.plan = plan
     return op
 

@@ -139,42 +139,50 @@ def run_single(matrix: str, scheme: str = "baseline", engine: str = "auto",
                write_results: bool = True, k: int = 1) -> dict:
     """Single-node tuned SpMV/SpMM benchmark for one (matrix, scheme) cell.
 
-    Goes through the persistent operator cache (core/spmv/opcache.py): the
-    first invocation pays reorder + tune + format conversion; repeat
-    invocations on the same cell reload the device arrays and only time the
-    SpMV. Plan-time and run-time are reported separately (paper §3
-    methodology — preprocessing is never folded into SpMV time).
+    One plan() + build() through the pipeline facade (repro.api): the first
+    invocation pays reorder + tune + format conversion and persists the
+    plan; repeat invocations reload the plan AND the device arrays from the
+    plan store and only time the SpMV. Plan-time and run-time are reported
+    separately (paper §3 methodology — preprocessing is never folded into
+    SpMV time).
+
+    scheme may be "auto": the planner jointly selects (scheme, engine);
+    the resolved choice is reported as `resolved_scheme`.
 
     k > 1 (--spmm) times the k-RHS SpMM path `op.matmul(X[n, k])` with a
     k-specialized tuning plan and reports amortized per-vector time.
     """
+    from ..api import SpmvProblem, plan as make_plan
     from ..core.measure import ios
-    from ..core.reorder import api as reorder_api
-    from ..core.spmv.opcache import build_cached
     from ..matrices import suite
 
     if k < 1:
         raise ValueError(f"--spmm batch width must be >= 1, got {k}")
     mat = suite.get(matrix)
-    t0 = time.perf_counter()
-    rmat = reorder_api.apply_scheme(mat, scheme) if scheme != "baseline" else mat
-    reorder_ms = (time.perf_counter() - t0) * 1e3
-    op, info = build_cached(rmat, engine=engine, probe=probe, k=k)
-    med = float(np.median(ios.run_ios_batched(op, rmat.n, k, iters=iters)))
+    pl = make_plan(SpmvProblem(mat, k=k), reorder=scheme, engine=engine,
+                   probe=probe)
+    op = pl.build()
+    info = op.build_info
+    # measurement opts out of the original-index-space wrapper: time the
+    # bare reordered-space engine, exactly like the legacy path
+    med = float(np.median(ios.run_ios_batched(op.unwrap(), mat.n, k,
+                                              iters=iters)))
     rec = {
         "matrix": matrix,
         "scheme": scheme,
+        "resolved_scheme": pl.scheme,
         "engine": info["engine"],
         "plan": info["plan"],
+        "plan_label": pl.label(),
         "cache_hit": info["cache_hit"],
         "k": k,
-        "reorder_ms": reorder_ms,
-        "tune_ms": info["tune_ms"],
+        "reorder_ms": pl.reorder_ms,
+        "tune_ms": pl.tune_ms,
         "build_ms": info["build_ms"],
         "load_ms": info["load_ms"],
         "spmv_ios_ms": med,
         "per_vector_ms": med / k,
-        "spmv_ios_gflops": float(ios.gflops(rmat.nnz * k,
+        "spmv_ios_gflops": float(ios.gflops(mat.nnz * k,
                                             np.array([med]))[0]),
     }
     tag = "spmm" if k > 1 else "spmv"
@@ -196,17 +204,23 @@ def run_single(matrix: str, scheme: str = "baseline", engine: str = "auto",
 def run_serve_sim(matrices=("smoke_banded", "smoke_powerlaw", "smoke_rmat"),
                   requests: int = 48, max_batch: int = 8,
                   window_ms: float = 20.0, engine: str = "auto",
-                  seed: int = 0, write_results: bool = True) -> dict:
+                  reorder: str = "baseline", seed: int = 0,
+                  write_results: bool = True) -> dict:
     """Serving simulation: a burst of mixed (matrix, x) requests through the
     micro-batching SpmvService (serving/spmv_service.py). Verifies every
-    response against the numpy oracle and reports coalescing stats."""
+    response against the numpy oracle and reports coalescing stats.
+
+    reorder != "baseline" exercises the permutation-carrying operators:
+    the service reorders internally for locality while requests and
+    responses stay in the ORIGINAL index space (the oracle check still
+    compares against the unreordered matrix)."""
     from ..matrices import suite
     from ..serving.spmv_service import SpmvService
 
     mats = {name: suite.get(name) for name in matrices}
     rng = np.random.default_rng(seed)
     t0 = time.perf_counter()
-    with SpmvService(engine=engine, max_batch=max_batch,
+    with SpmvService(engine=engine, reorder=reorder, max_batch=max_batch,
                      window_ms=window_ms) as svc:
         for name, mat in mats.items():
             svc.register(name, mat)
@@ -227,6 +241,7 @@ def run_serve_sim(matrices=("smoke_banded", "smoke_powerlaw", "smoke_rmat"),
     wall_ms = (time.perf_counter() - t0) * 1e3
     rec = {
         "matrices": list(matrices),
+        "reorder": reorder,
         "requests": requests,
         "max_batch": max_batch,
         "window_ms": window_ms,
@@ -268,13 +283,17 @@ def main():
     ap.add_argument("--requests", type=int, default=48)
     ap.add_argument("--max-batch", type=int, default=8)
     ap.add_argument("--window-ms", type=float, default=20.0)
+    ap.add_argument("--serve-reorder", default="baseline",
+                    help="reordering scheme the service applies internally "
+                         "(requests stay in the original index space)")
     args = ap.parse_args()
     if args.serve_sim:
         if args.matrix or args.spmm != 1 or args.probe:
             ap.error("--serve-sim does not combine with "
                      "--matrix/--spmm/--probe")
         rec = run_serve_sim(requests=args.requests, max_batch=args.max_batch,
-                            window_ms=args.window_ms, engine=args.engine)
+                            window_ms=args.window_ms, engine=args.engine,
+                            reorder=args.serve_reorder)
         if not rec["ok"]:
             raise SystemExit(
                 f"serve-sim verification FAILED: max_rel_err="

@@ -16,8 +16,13 @@ Policy (classic micro-batching, cf. serving/decode.py's decode batching):
     key holding the OLDEST pending request (FIFO fairness across matrices).
   * A batch closes when it reaches `max_batch` requests OR `window_ms` has
     elapsed since its oldest request — bounded latency, opportunistic width.
-  * Operators resolve once per key through the persistent opcache
-    (core/spmv/opcache.build_cached) with a k=max_batch-specialized plan.
+  * Operators resolve once per key through the pipeline facade
+    (repro.api.plan + Plan.build, persistent plan store) with a
+    k=max_batch-specialized plan.
+  * The service may reorder a matrix internally (`reorder=` scheme, per
+    service or per register() call) — the planned operators carry their
+    permutation, so requests and responses stay in the ORIGINAL index
+    space; no caller ever sees the reordered numbering.
 
 Equivalence guarantee: request j of a coalesced batch receives column j of
 `op.matmul(X)`, which matches the unbatched `op(x_j)` to fp32 accumulation
@@ -63,12 +68,13 @@ class SpmvService:
     def __init__(self, engine: str = "auto", max_batch: int = 32,
                  window_ms: float = 2.0, use_kernel: str = "auto",
                  dtype=None, cache: bool = True, probe: bool = False,
-                 max_queue: int = 1024):
+                 max_queue: int = 1024, reorder: str = "baseline"):
         if max_batch < 1:
             raise ValueError(f"max_batch must be >= 1, got {max_batch}")
         if max_queue < 1:
             raise ValueError(f"max_queue must be >= 1, got {max_queue}")
         self.engine = engine
+        self.reorder = reorder
         self.max_batch = int(max_batch)
         self.max_queue = int(max_queue)
         self.window_s = float(window_ms) * 1e-3
@@ -77,6 +83,7 @@ class SpmvService:
         self.probe = probe
         self._dtype = dtype
         self._matrices: Dict[str, CSRMatrix] = {}
+        self._schemes: Dict[str, str] = {}
         self._gen: collections.Counter = collections.Counter()
         self._ops: Dict[str, tuple] = {}          # key -> (gen, operator)
         self._build_info: Dict[str, dict] = {}
@@ -96,8 +103,13 @@ class SpmvService:
         self._worker.start()
 
     # -- registry ----------------------------------------------------------
-    def register(self, key: str, mat: CSRMatrix) -> None:
+    def register(self, key: str, mat: CSRMatrix,
+                 reorder: Optional[str] = None) -> None:
         """Make `key` servable. Operator build is lazy (first batch).
+
+        reorder overrides the service-wide scheme for this key; requests
+        stay in the original index space either way (the operator carries
+        its permutation).
 
         Re-registering a key drops its memoized operator, and is REFUSED
         while the key has queued or in-flight requests — a request
@@ -110,6 +122,7 @@ class SpmvService:
                     f"cannot re-register {key!r} with pending requests; "
                     f"flush() first")
             self._matrices[key] = mat
+            self._schemes[key] = self.reorder if reorder is None else reorder
             # bumping the generation under _cv invalidates any memoized
             # operator atomically with the matrix swap — operator() only
             # trusts an entry whose generation matches the matrix it read
@@ -117,23 +130,28 @@ class SpmvService:
             self._queues.setdefault(key, collections.deque())
 
     def operator(self, key: str):
-        """Resolve (and memoize) the operator for `key` via the opcache,
-        tuned for this service's max batch width."""
+        """Resolve (and memoize) the operator for `key` via the pipeline
+        facade, tuned for this service's max batch width. The returned
+        operator accepts original-index-space vectors (it carries the
+        permutation of this key's reordering scheme)."""
         with self._cv:
             mat = self._matrices[key]
+            scheme = self._schemes[key]
             gen = self._gen[key]
         with self._op_lock:
             ent = self._ops.get(key)
             if ent is not None and ent[0] == gen:
                 return ent[1]
-            from ..core.spmv.opcache import build_cached
+            from ..api import SpmvProblem, plan as make_plan
 
-            op, info = build_cached(mat, engine=self.engine,
-                                    dtype=self._dtype, probe=self.probe,
-                                    use_kernel=self.use_kernel,
-                                    cache=self.cache, k=self.max_batch)
+            pl = make_plan(
+                SpmvProblem(mat, k=self.max_batch, dtype=self._dtype,
+                            hints={"use_kernel": self.use_kernel}),
+                reorder=scheme, engine=self.engine, probe=self.probe,
+                cache=self.cache)
+            op = pl.build(cache=self.cache)
             self._ops[key] = (gen, op)
-            self._build_info[key] = info
+            self._build_info[key] = op.build_info
         return op
 
     # -- request path ------------------------------------------------------

@@ -1,0 +1,388 @@
+"""Problem -> Plan -> Operator pipeline facade (repro.api).
+
+Covers the PR's acceptance criteria:
+  * one plan() + Plan.build() reproduces the legacy apply_scheme +
+    build_operator(engine="auto") wiring bit-identically
+  * Plan.save / Plan.load round-trips restore operators for EVERY
+    registered engine (including k-specialized SELL-SpMM plans) without
+    re-tuning or re-conversion
+  * permutation-carrying operator equivalence: Plan.build()(x) on the
+    ORIGINAL index space matches the dense oracle for every registered
+    scheme x engine pair
+  * plugin registries: duplicate registration raises; a custom scheme
+    participates in planning end-to-end
+  * deprecation shims warn; the facade paths never touch them
+  * the reorder disk cache writes atomically (no torn/partial files)
+  * vectorized _rcm_blocked signature pass is bit-identical to the loop
+"""
+import os
+import warnings
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.api import (ENGINE_REGISTRY, SCHEME_REGISTRY, Plan, SpmvProblem,
+                       plan, register_scheme)
+from repro.core.reorder import api as reorder_api
+from repro.core.reorder.rcm import rcm_order
+from repro.matrices import generators as G
+
+ALL_SCHEMES = list(SCHEME_REGISTRY)
+ALL_ENGINES = list(ENGINE_REGISTRY)
+
+
+@pytest.fixture()
+def stores(tmp_path, monkeypatch):
+    monkeypatch.setenv("REPRO_PLAN_CACHE", str(tmp_path / "plans"))
+    monkeypatch.setenv("REPRO_REORDER_CACHE", str(tmp_path / "reorder"))
+    monkeypatch.setenv("REPRO_OPERATOR_CACHE", str(tmp_path / "opcache"))
+    return tmp_path
+
+
+def _mat96():
+    return G.shuffle(G.banded(96, 3, seed=0), seed=1)
+
+
+# -- original-index-space equivalence, every scheme x engine ---------------
+
+@pytest.mark.parametrize("engine", ALL_ENGINES)
+@pytest.mark.parametrize("scheme", ALL_SCHEMES)
+def test_operator_original_space_equivalence(scheme, engine, stores):
+    """Plan.build()(x) with x in the ORIGINAL index space must match the
+    dense oracle for every registered scheme x engine pair."""
+    mat = _mat96()
+    hints = {"block_shape": (4, 4)} if engine in ("sell", "bell", "bcsr") \
+        else {}
+    pl = plan(SpmvProblem(mat, hints=hints), reorder=scheme, engine=engine)
+    op = pl.build()
+    x = np.random.default_rng(0).standard_normal(mat.n)
+    want = mat.spmv(x)                      # == dense oracle (seed tests)
+    got = np.asarray(op(jnp.asarray(x, jnp.float32)))
+    scale = np.abs(want).max() + 1e-9
+    assert np.abs(got - want).max() / scale < 1e-5, (scheme, engine)
+    # and the SpMM path, same index-space contract
+    X = np.random.default_rng(1).standard_normal((mat.n, 3))
+    wantX = mat.to_dense() @ X
+    gotX = np.asarray(op.matmul(jnp.asarray(X, jnp.float32)))
+    assert np.abs(gotX - wantX).max() / (np.abs(wantX).max() + 1e-9) < 1e-5
+
+
+def test_permuted_optout_equals_unwrap(stores):
+    mat = _mat96()
+    pl = plan(SpmvProblem(mat), reorder="rcm", engine="csr")
+    op = pl.build()
+    assert op.perm is not None and op.iperm is not None
+    assert np.array_equal(np.sort(op.perm), np.arange(mat.m))
+    xr = jnp.asarray(
+        np.random.default_rng(2).standard_normal(mat.n), jnp.float32)
+    y_opt = np.asarray(op(xr, permuted=True))
+    y_raw = np.asarray(op.unwrap()(xr))
+    assert np.array_equal(y_opt, y_raw)
+    # carried permutation is exactly perm/iperm gathers around the engine
+    x = np.asarray(xr)
+    y_carried = np.asarray(op(xr))
+    assert np.array_equal(
+        y_carried, np.asarray(op.unwrap()(
+            jnp.asarray(x[op.perm], jnp.float32)))[op.iperm])
+
+
+# -- bit-identical reproduction of the legacy wiring -----------------------
+
+def test_facade_matches_legacy_wiring_bitwise(stores):
+    from repro.core.spmv.opcache import build_cached
+
+    mat = G.shuffle(G.banded(256, 4, seed=0), seed=1)
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        rmat = reorder_api.apply_scheme(mat, "rcm")
+    op_legacy, info = build_cached(rmat, engine="auto")
+    pl = plan(SpmvProblem(mat), reorder="rcm", engine="auto")
+    op_new = pl.build()
+    # same joint decision ...
+    assert pl.tune.engine == info["plan"]["engine"]
+    assert list(pl.tune.block_shape) == list(info["plan"]["block_shape"])
+    assert pl.tune.sell_sigma == info["plan"]["sell_sigma"]
+    assert pl.tune.costs == info["plan"]["costs"]
+    # ... and bit-identical numerics in the reordered space
+    xr = jnp.asarray(
+        np.random.default_rng(0).standard_normal(mat.n), jnp.float32)
+    y_legacy = np.asarray(op_legacy(xr))
+    y_new = np.asarray(op_new(xr, permuted=True))
+    assert np.array_equal(y_legacy, y_new)
+
+
+# -- plan store round-trips, every engine ----------------------------------
+
+@pytest.mark.parametrize("engine", ALL_ENGINES + ["auto"])
+def test_plan_save_load_roundtrip(engine, stores):
+    """Plan.load restores the decision AND the operator payload: no
+    re-tune, no re-conversion, bit-identical results — for every engine,
+    with a k=8-specialized plan (the SELL case exercises the k-tiled SpMM
+    kernel path after reload)."""
+    mat = G.power_law(128, alpha=1.8, seed=3)
+    hints = {"block_shape": (4, 4)} if engine in ("sell", "bell", "bcsr") \
+        else {}
+    pl = plan(SpmvProblem(mat, k=8, hints=hints), reorder="rcm",
+              engine=engine)
+    op = pl.build()
+    assert pl.tune.k == 8
+
+    pl2 = Plan.load(pl.key, mat=mat)
+    assert pl2 is not None and pl2.cache_hit
+    assert pl2.tune_ms == 0.0
+    assert pl2.tune.to_json() == pl.tune.to_json()
+    assert pl2.scheme == "rcm" and np.array_equal(pl2.perm, pl.perm)
+    op2 = pl2.build()
+    assert op2.build_info["cache_hit"]
+    assert op2.build_info["build_ms"] == 0.0
+
+    x = jnp.asarray(
+        np.random.default_rng(4).standard_normal(mat.n), jnp.float32)
+    assert np.array_equal(np.asarray(op(x)), np.asarray(op2(x)))
+    X = jnp.asarray(
+        np.random.default_rng(5).standard_normal((mat.n, 8)), jnp.float32)
+    assert np.array_equal(np.asarray(op.matmul(X)), np.asarray(op2.matmul(X)))
+
+
+def test_plan_load_restores_operator_without_matrix(stores):
+    """A complete store entry rebuilds the operator with NO matrix at all
+    (device arrays + perm live in the entry)."""
+    mat = _mat96()
+    pl = plan(SpmvProblem(mat), reorder="rcm", engine="ell")
+    y_ref = np.asarray(pl.build()(jnp.ones(mat.n, jnp.float32)))
+    pl2 = Plan.load(pl.key)              # no mat=
+    op2 = pl2.build()
+    assert op2.build_info["cache_hit"]
+    assert np.array_equal(np.asarray(op2(jnp.ones(mat.n, jnp.float32))),
+                          y_ref)
+
+
+def test_plan_second_call_hits_store(stores):
+    mat = _mat96()
+    p1 = plan(SpmvProblem(mat, k=4), reorder="auto", engine="auto")
+    assert not p1.cache_hit and p1.scheme_costs
+    p1.build()
+    p2 = plan(SpmvProblem(mat, k=4), reorder="auto", engine="auto")
+    assert p2.cache_hit and p2.tune_ms == 0.0
+    assert p2.scheme == p1.scheme
+    assert p2.label() == p1.label()
+
+
+def test_auto_plan_distinct_scheme_sets_are_distinct_entries(stores):
+    """hints["schemes"] is part of the plan identity: searching a
+    different candidate set must never return another request's plan."""
+    mat = _mat96()
+    p1 = plan(SpmvProblem(mat, hints={"schemes": ["rcm"]}),
+              reorder="auto", engine="csr")
+    p2 = plan(SpmvProblem(mat, hints={"schemes": ["random"]}),
+              reorder="auto", engine="csr")
+    assert p1.key != p2.key
+    assert not p2.cache_hit and p2.scheme == "random"
+
+
+def test_auto_scheme_plans_are_k_specialized(stores):
+    """reorder="auto" selection is k-dependent (per-scheme cost deltas
+    amortize differently), so k must stay in the key even when the engine
+    is fixed."""
+    mat = _mat96()
+    p1 = plan(SpmvProblem(mat, k=1), reorder="auto", engine="ell")
+    p8 = plan(SpmvProblem(mat, k=8), reorder="auto", engine="ell")
+    assert p1.key != p8.key and not p8.cache_hit
+    assert p8.k == 8
+    # fixed scheme AND engine: k normalizes out (one entry per k-sweep)
+    f1 = plan(SpmvProblem(mat, k=1), reorder="rcm", engine="ell")
+    f8 = plan(SpmvProblem(mat, k=8), reorder="rcm", engine="ell")
+    assert f1.key == f8.key and f8.cache_hit
+
+
+def test_loaded_plan_resave_roundtrips_operator(stores, tmp_path):
+    """Saving a LOADED plan re-prefixes the operator payload: the copy
+    must restore the operator exactly like the original entry."""
+    mat = _mat96()
+    pl = plan(SpmvProblem(mat), reorder="rcm", engine="ell")
+    y_ref = np.asarray(pl.build()(jnp.ones(mat.n, jnp.float32)))
+    copy_path = str(tmp_path / "copies" / "entry.json")
+    Plan.load(pl.key).save(path=copy_path)
+    pl2 = Plan.load(copy_path)
+    op2 = pl2.build()
+    assert op2.build_info["cache_hit"]
+    assert np.array_equal(
+        np.asarray(op2(jnp.ones(mat.n, jnp.float32))), y_ref)
+
+
+def test_plan_hit_reports_zero_plan_time(stores):
+    """Cache-hit accounting reflects THIS run: no reorder/tune was paid."""
+    mat = _mat96()
+    p1 = plan(SpmvProblem(mat), reorder="rcm", engine="csr")
+    assert p1.reorder_ms > 0.0
+    p2 = plan(SpmvProblem(mat), reorder="rcm", engine="csr")
+    assert p2.cache_hit
+    assert p2.reorder_ms == 0.0 and p2.tune_ms == 0.0 and p2.plan_ms == 0.0
+
+
+def test_plan_store_disabled(stores, monkeypatch):
+    monkeypatch.setenv("REPRO_PLAN_CACHE", "off")
+    mat = _mat96()
+    p1 = plan(SpmvProblem(mat), reorder="rcm", engine="csr")
+    op = p1.build()
+    assert not p1.cache_hit and not op.build_info["cache_hit"]
+    p2 = plan(SpmvProblem(mat), reorder="rcm", engine="csr")
+    assert not p2.cache_hit
+
+
+# -- registries ------------------------------------------------------------
+
+def test_duplicate_registration_raises():
+    with pytest.raises(ValueError):
+        register_scheme("rcm")(lambda mat, seed=0: None)
+
+
+def test_unknown_names_raise(stores):
+    mat = _mat96()
+    with pytest.raises(KeyError):
+        plan(SpmvProblem(mat), reorder="nope")
+    with pytest.raises(KeyError):
+        plan(SpmvProblem(mat), engine="nope")
+
+
+def test_custom_scheme_plugin_plans_end_to_end(stores):
+    """A scheme registered by a third party is immediately plannable."""
+    name = "test_reverse"
+
+    def reverse_order(mat, seed=0):
+        return np.arange(mat.m - 1, -1, -1, dtype=np.int64)
+
+    register_scheme(name, description="test plugin",
+                    override=name in SCHEME_REGISTRY)(reverse_order)
+    try:
+        mat = _mat96()
+        pl = plan(SpmvProblem(mat), reorder=name, engine="csr")
+        assert pl.scheme == name
+        x = np.random.default_rng(6).standard_normal(mat.n)
+        got = np.asarray(pl.build()(jnp.asarray(x, jnp.float32)))
+        want = mat.spmv(x)
+        assert np.abs(got - want).max() / (np.abs(want).max() + 1e-9) < 1e-5
+    finally:
+        SCHEME_REGISTRY.pop(name, None)
+
+
+def test_engine_capability_metadata():
+    for name in ("csr", "ell", "sell", "bell", "bcsr", "dense"):
+        spec = ENGINE_REGISTRY[name]
+        assert spec.supports_spmm
+        assert spec.cost_fn is not None and spec.candidates_fn is not None
+    assert ENGINE_REGISTRY["sell"].device == "tpu"
+    assert ENGINE_REGISTRY["csr"].device == "any"
+
+
+# -- deprecation shims ------------------------------------------------------
+
+def test_shims_emit_deprecation_warnings(stores):
+    from repro.core.spmv.ops import build_operator
+
+    mat = _mat96()
+    with pytest.warns(DeprecationWarning):
+        build_operator(mat, "csr")
+    with pytest.warns(DeprecationWarning):
+        reorder_api.apply_scheme(mat, "rcm")
+
+
+def test_facade_paths_use_no_shims(stores):
+    """Nothing inside src/ goes through the deprecated entry points: the
+    full pipeline (plan, build, both call paths, bench cell, service
+    round-trip) runs clean under DeprecationWarning-as-error."""
+    from repro.launch.spmv_bench import run_single
+    from repro.serving.spmv_service import SpmvService
+
+    mat = _mat96()
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", DeprecationWarning)
+        pl = plan(SpmvProblem(mat, k=4), reorder="auto", engine="auto")
+        op = pl.build()
+        op(jnp.ones(mat.n, jnp.float32))
+        op.matmul(jnp.ones((mat.n, 4), jnp.float32))
+        run_single("smoke_powerlaw", "rcm", iters=2, write_results=False)
+        with SpmvService(engine="csr", reorder="rcm", max_batch=4,
+                         window_ms=2.0) as svc:
+            svc.register("m", mat)
+            fut = svc.submit("m", np.ones(mat.n))
+            svc.flush()
+            fut.result(timeout=10)
+
+
+# -- service x permutation-carrying operators ------------------------------
+
+def test_service_reorders_internally_serves_original_space(stores):
+    from repro.serving.spmv_service import SpmvService
+
+    mat = _mat96()
+    rng = np.random.default_rng(7)
+    xs = [rng.standard_normal(mat.n) for _ in range(6)]
+    with SpmvService(engine="auto", reorder="rcm", max_batch=4,
+                     window_ms=5.0) as svc:
+        svc.register("m", mat)
+        futs = [svc.submit("m", x) for x in xs]
+        svc.flush()
+        for x, fut in zip(xs, futs):
+            want = mat.spmv(x)
+            got = np.asarray(fut.result(timeout=10))
+            scale = np.abs(want).max() + 1e-9
+            assert np.abs(got - want).max() / scale < 1e-4
+
+
+# -- satellite: atomic reorder cache ---------------------------------------
+
+def test_reorder_cache_write_is_atomic(stores):
+    mat = _mat96()
+    perm = reorder_api.reorder(mat, "rcm")
+    d = os.environ["REPRO_REORDER_CACHE"]
+    files = os.listdir(d)
+    assert len([f for f in files if f.endswith(".npy")]) == 1
+    assert not [f for f in files if f.endswith(".tmp")], files
+    # cache hit returns the identical permutation
+    assert np.array_equal(reorder_api.reorder(mat, "rcm"), perm)
+
+
+# -- satellite: vectorized _rcm_blocked ------------------------------------
+
+def _rcm_blocked_loop_reference(mat, seed=0, block=8):
+    """The pre-vectorization per-row loop form, verbatim."""
+    base = rcm_order(mat, seed)
+    rmat = mat.permute(base)
+    m = rmat.m
+    win = block * 8
+    perm_local = np.arange(m, dtype=np.int64)
+    rp = rmat.rowptr.astype(np.int64)
+    cols = rmat.cols.astype(np.int64)
+    for w0 in range(0, m, win):
+        w1 = min(w0 + win, m)
+        rows = np.arange(w0, w1)
+        sig = np.full(rows.size, np.iinfo(np.int64).max)
+        for i, r in enumerate(rows):
+            if rp[r + 1] > rp[r]:
+                sig[i] = cols[rp[r]] // 128
+        order = np.argsort(sig, kind="stable")
+        perm_local[w0:w1] = rows[order]
+    return base[perm_local]
+
+
+def test_rcm_blocked_vectorized_bit_identical(stores):
+    mats = [
+        G.power_law(200, alpha=1.9, seed=7),
+        G.shuffle(G.banded(300, 5, seed=0), seed=2),
+        G.shuffle(G.sbm(256, 4, 0.2, 0.01, seed=4), seed=5),
+    ]
+    # plus a matrix WITH empty rows (the sentinel branch of the gather)
+    dense = np.zeros((70, 70))
+    rng = np.random.default_rng(0)
+    for i in range(0, 70, 2):                    # odd rows/cols stay empty
+        js = rng.integers(0, 35, size=3) * 2
+        dense[i, js] = 1.0
+        dense[js, i] = 1.0
+    from repro.core.sparse.csr import CSRMatrix
+
+    mats.append(CSRMatrix.from_dense(dense))
+    fn = SCHEME_REGISTRY["rcm_blocked"].fn
+    for mat in mats:
+        assert np.array_equal(fn(mat), _rcm_blocked_loop_reference(mat))
