@@ -1,131 +1,113 @@
-"""Shared measurement campaign for the paper-reproduction benchmarks.
+"""Shared campaign specs for the paper-reproduction benchmarks.
 
-One campaign = the full measurement grid over (machine profile, matrix,
-scheme): sequential IOS/YAX, instrumented-CG, and modelled-parallel
-static/nnz-balanced timings + structural metrics. Figures (fig*.py) are
-pure views over the campaign JSON, so the grid is measured once and cached
-under benchmarks/results/.
+The measurement layer is `repro.experiments` (ExperimentSpec → Runner →
+ResultStore → Report); this module holds the two standard campaign specs
+the figures share plus the store wiring:
 
-Machine profiles (DESIGN.md §7 — configs standing in for the paper's four
-hosts; consistency claims are about *existence* of inconsistency):
-    M1 csr-f32-p8   — primary
-    M2 csr-f64-p8   — 2x bandwidth pressure (bigger values+x)
-    M3 csr-f32-p4   — fewer cores
-    M4 csr-f32-p16  — more cores
+  * locality campaign    — locality-tier matrices × all schemes on the
+                           primary machine profile, instrumented CG
+                           included (figs 3, 5, 6, 7, 11, table 1).
+  * consistency campaign — the fig-8 matrix subset × all schemes over
+                           EVERY registered machine profile (M1..M5 —
+                           DESIGN.md §7; plugin profiles join
+                           automatically).
+
+Cells are content-addressed in `benchmarks/results/store/`, so the grid
+is measured once no matter how many figures view it, a re-run measures
+nothing, and adding a matrix/scheme/profile measures only the delta.
+
+`run_campaign` / `grid` / `measure_cell` remain as deprecation shims for
+external callers; figures use the Report accessors (which raise
+MissingCellError instead of propagating NaN).
 """
 from __future__ import annotations
 
-import dataclasses
-import hashlib
-import json
 import os
-import time
+import warnings
 from typing import Dict, Iterable
 
-import jax.numpy as jnp
 import numpy as np
 
-from repro.api import SpmvProblem, plan
-from repro.core.measure import cg, ios, parallel_model
-from repro.core.reorder import api as reorder_api
-from repro.core.sparse import metrics, partition
-from repro.matrices import suite
+from repro.experiments import (PRIMARY, ExperimentSpec, MeasurePolicy,
+                               Report, ResultStore, Runner, paper_schemes,
+                               write_csv)
+from repro.core.registry import PROFILE_REGISTRY
 
 RESULTS_DIR = os.path.join(os.path.dirname(__file__), "results")
+STORE_DIR = os.path.join(RESULTS_DIR, "store")
 
-MACHINE_PROFILES = {
-    "M1_csr_f32_p8": dict(engine="csr", dtype="float32", p=8),
-    "M2_csr_f64_p8": dict(engine="csr", dtype="float64", p=8),
-    "M3_csr_f32_p4": dict(engine="csr", dtype="float32", p=4),
-    "M4_csr_f32_p16": dict(engine="csr", dtype="float32", p=16),
-    # autotuned engine (OSKI-style selection, core/spmv/tune.py)
-    "M5_auto_f32_p8": dict(engine="auto", dtype="float32", p=8),
-}
-PRIMARY = "M1_csr_f32_p8"
+# legacy view: profile name -> dict(engine=, dtype=, p=) over the registry
+MACHINE_PROFILES = {name: dict(engine=s.engine, dtype=s.dtype, p=s.p)
+                    for name, s in PROFILE_REGISTRY.items()}
 # paper schemes + the random-permutation control (Fig. 1's shuffle)
-SCHEMES = ["baseline"] + reorder_api.PAPER_SCHEMES + ["random"]
+SCHEMES = paper_schemes()
 
 QUICK_MATRICES = [
     "banded_m16384_bw8", "banded_shuf_m16384_bw8", "stencil2d_shuf_128",
     "rmat_s14_e8", "sbm_m16384_k16", "smallworld_m16384_k6",
     "uniform_m16384_d8", "kron_b11_p4",
 ]
-# fig8 consistency subset (all four profiles measured on these)
+# fig8 consistency subset (all profiles measured on these)
 CONSISTENCY_MATRICES = QUICK_MATRICES + [
     "banded_shuf_m32768_bw63", "stencil3d_shuf_24", "sbm_m32768_k32",
     "rmat_s15_e8", "uniform_m32768_d12", "stencil2d_181",
 ]
 
 
-def _key(profile: str, matrix: str, scheme: str) -> str:
-    return f"{profile}|{matrix}|{scheme}"
+def result_store() -> ResultStore:
+    """The benchmark result store (REPRO_RESULT_STORE / the operator-cache
+    fallback override the default `benchmarks/results/store/`)."""
+    return ResultStore(results_dir=RESULTS_DIR)
 
 
-def _cache_path(tag: str) -> str:
-    os.makedirs(RESULTS_DIR, exist_ok=True)
-    return os.path.join(RESULTS_DIR, f"campaign_{tag}.json")
+def campaign_policy(iters: int = 12) -> MeasurePolicy:
+    """The standard full-protocol cell policy: IOS + YAX + modelled
+    parallel + structural metrics everywhere, instrumented CG on the
+    primary profile only (the paper's convention)."""
+    return MeasurePolicy(iters=iters, cg_profiles=(PRIMARY,))
 
 
+def locality_spec(iters: int = 12) -> ExperimentSpec:
+    from repro.matrices import suite
+
+    return ExperimentSpec(
+        name="locality", matrices=tuple(suite.locality_names()),
+        schemes=tuple(SCHEMES), profiles=(PRIMARY,),
+        policy=campaign_policy(iters))
+
+
+def consistency_spec(quick: bool = False, iters: int = 12) -> ExperimentSpec:
+    mats = CONSISTENCY_MATRICES[:6] if quick else CONSISTENCY_MATRICES
+    return ExperimentSpec(
+        name="consistency", matrices=tuple(mats), schemes=tuple(SCHEMES),
+        profiles=("*",), policy=campaign_policy(iters))
+
+
+def campaign_report(spec: ExperimentSpec, verbose: bool = True) -> Report:
+    """Measure (resumably) and return the typed report."""
+    return Runner(spec, store=result_store(), verbose=verbose).run()
+
+
+# --------------------------------------------------------------------------
+# deprecation shims (no in-repo callers)
+# --------------------------------------------------------------------------
 def measure_cell(mat, scheme: str, profile: dict, iters: int = 12,
                  with_cg: bool = True) -> dict:
-    """All measurements for one (matrix, scheme, machine profile) cell."""
-    dtype = jnp.float32 if profile["dtype"] == "float32" else jnp.float64
-    # one plan() + build() through the pipeline facade: repeat campaigns
-    # reload plan + device arrays from the plan store (plan time -> ~0)
-    pl = plan(SpmvProblem(mat, dtype=profile["dtype"]), reorder=scheme,
-              engine=profile["engine"])
-    op_full = pl.build()
-    rmat_ = pl.reordered_matrix()
-    nnz = rmat_.nnz
-    build_info = op_full.build_info
-    op = op_full.unwrap()      # measurements run in the reordered space
-    rng = np.random.default_rng(0)
-    x0 = jnp.asarray(rng.standard_normal(rmat_.n), dtype)
+    """Deprecated: use repro.experiments (ExperimentSpec + Runner)."""
+    warnings.warn(
+        "benchmarks.common.measure_cell() is deprecated; build an "
+        "ExperimentSpec and run it through repro.experiments.Runner",
+        DeprecationWarning, stacklevel=2)
+    from repro.experiments.cells import measure_spmv_cell
+    from repro.experiments.spec import Cell
 
-    seq_ios = float(np.median(ios.run_ios(op, x0, iters=iters)))
-    seq_yax = float(np.median(ios.run_yax(op, x0, iters=iters)))
-    rec = {
-        "nnz": nnz,
-        "seq_ios_ms": seq_ios,
-        "seq_yax_ms": seq_yax,
-        "seq_ios_gflops": float(ios.gflops(nnz, np.array([seq_ios]))[0]),
-        "seq_yax_gflops": float(ios.gflops(nnz, np.array([seq_yax]))[0]),
-        # plan-time accounting (paper methodology: preprocessing is
-        # reported separately from SpMV run-time, never folded in)
-        "engine": build_info["engine"],
-        "tuner_choice": pl.tune.engine,
-        "tune_ms": pl.tune_ms,
-        "format_build_ms": build_info["build_ms"],
-        "op_cache_hit": build_info["cache_hit"],
-        "op_load_ms": build_info["load_ms"],
-    }
-    if pl.engine_request == "auto":
-        rec["tuner_label"] = pl.tune.label()
-        rec["tuner_cost_bytes"] = pl.tune.cost_bytes
-    if with_cg:
-        cg_ms = float(np.median(cg.cg_measured(op, x0, iters=iters)))
-        rec["cg_ms"] = cg_ms
-        rec["cg_gflops"] = float(ios.gflops(nnz, np.array([cg_ms]))[0])
-    p = profile["p"]
-    # panels use the CONCRETE engine the tuner chose for the whole matrix
-    # (never "auto": re-tuning per panel would time the tuner, not SpMV)
-    panel_engine = build_info["engine"] if profile["engine"] == "auto" \
-        else profile["engine"]
-    for sched in ("static", "nnz_balanced"):
-        ms = parallel_model.modelled_parallel_ms(
-            rmat_, p, panel_engine, schedule=sched, iters=max(6, iters // 2))
-        rec[f"par_{sched}_ms"] = ms
-        rec[f"par_{sched}_gflops"] = float(ios.gflops(nnz, np.array([ms]))[0])
-    # structural metrics (analytic, exact)
-    panels_s = partition.static_partition(rmat_, p)
-    panels_b = partition.nnz_balanced_partition(rmat_, p)
-    rec["li_static"] = metrics.load_imbalance(rmat_, panels_s)
-    rec["li_nnz_balanced"] = metrics.load_imbalance(rmat_, panels_b)
-    rec["bandwidth"] = metrics.bandwidth(rmat_)
-    rec["avg_row_bandwidth"] = metrics.avg_row_bandwidth(rmat_)
-    rec["cut_volume"] = metrics.cut_volume(rmat_, panels_s)
-    rec["block_fill_8x128"] = metrics.block_fill_ratio(rmat_, 8, 128)
-    return rec
+    pol = MeasurePolicy(iters=iters,
+                        cg_profiles=("*",) if with_cg else ())
+    cell = Cell(kind="spmv", matrix="<adhoc>", scheme=scheme,
+                engine=profile["engine"], dtype=profile["dtype"],
+                p=int(profile["p"]), k=1, variant="",
+                policy=tuple(sorted(pol.resolve("*").items())))
+    return measure_spmv_cell(cell, mat)
 
 
 def run_campaign(matrices: Iterable[str] | None = None,
@@ -133,57 +115,46 @@ def run_campaign(matrices: Iterable[str] | None = None,
                  profiles: Iterable[str] = (PRIMARY,),
                  iters: int = 12, tag: str = "default",
                  verbose: bool = True) -> Dict[str, dict]:
-    """Measure (and cache) the grid. Returns records dict."""
-    matrices = list(matrices if matrices is not None else suite.bench_names())
-    path = _cache_path(tag)
-    records: Dict[str, dict] = {}
-    if os.path.exists(path):
-        with open(path) as f:
-            records = json.load(f)
-    dirty = False
-    for prof_name in profiles:
-        prof = MACHINE_PROFILES[prof_name]
-        for mname in matrices:
-            mat = None
-            for scheme in schemes:
-                k = _key(prof_name, mname, scheme)
-                if k in records:
-                    continue
-                if mat is None:
-                    mat = suite.get(mname)
-                t0 = time.time()
-                rec = measure_cell(mat, scheme, prof, iters=iters,
-                                   with_cg=(prof_name == PRIMARY))
-                rec["profile"] = prof_name
-                rec["matrix"] = mname
-                rec["scheme"] = scheme
-                records[k] = rec
-                dirty = True
-                if verbose:
-                    print(f"[campaign] {k}: ios={rec['seq_ios_gflops']:.2f} "
-                          f"gflops ({time.time() - t0:.1f}s)", flush=True)
-            if dirty:
-                with open(path, "w") as f:
-                    json.dump(records, f)
-                dirty = False
-    return records
+    """Deprecated: use repro.experiments (ExperimentSpec + Runner).
+
+    Returns the legacy '{profile}|{matrix}|{scheme}'-keyed records dict,
+    now backed by the content-addressed result store (the campaign_<tag>
+    JSON files are gone; re-runs hit the store instead)."""
+    warnings.warn(
+        "benchmarks.common.run_campaign() is deprecated; build an "
+        "ExperimentSpec and run it through repro.experiments.Runner",
+        DeprecationWarning, stacklevel=2)
+    from repro.matrices import suite
+
+    mats = tuple(matrices if matrices is not None else suite.bench_names())
+    spec = ExperimentSpec(name=tag, matrices=mats, schemes=tuple(schemes),
+                          profiles=tuple(profiles),
+                          policy=campaign_policy(iters))
+    rep = campaign_report(spec, verbose=verbose)
+    return {f"{r['profile']}|{r['matrix']}|{r['scheme']}": r
+            for r in rep.records}
 
 
 def grid(records: Dict[str, dict], profile: str, matrices: list[str],
          schemes: list[str], field: str) -> np.ndarray:
-    """[scheme, matrix] array of `field`."""
+    """Deprecated: use Report.grid (strict — raises MissingCellError
+    instead of silently yielding NaN)."""
+    warnings.warn(
+        "benchmarks.common.grid() is deprecated; use "
+        "repro.experiments.Report.grid (strict accessors)",
+        DeprecationWarning, stacklevel=2)
     out = np.full((len(schemes), len(matrices)), np.nan)
     for i, s in enumerate(schemes):
         for j, m in enumerate(matrices):
-            rec = records.get(_key(profile, m, s))
+            rec = records.get(f"{profile}|{m}|{s}")
             if rec is not None and field in rec:
                 out[i, j] = rec[field]
     return out
 
 
-def write_csv(path: str, header: list[str], rows: list[list]) -> None:
-    os.makedirs(os.path.dirname(path), exist_ok=True)
-    with open(path, "w") as f:
-        f.write(",".join(header) + "\n")
-        for r in rows:
-            f.write(",".join(str(v) for v in r) + "\n")
+__all__ = [
+    "CONSISTENCY_MATRICES", "MACHINE_PROFILES", "PRIMARY", "QUICK_MATRICES",
+    "RESULTS_DIR", "SCHEMES", "STORE_DIR", "campaign_policy",
+    "campaign_report", "consistency_spec", "grid", "locality_spec",
+    "measure_cell", "result_store", "run_campaign", "write_csv",
+]

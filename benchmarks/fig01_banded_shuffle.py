@@ -3,30 +3,36 @@
 The paper reports 108 vs 32 GFLOPs on a 64-core machine; here the same
 structural contrast is measured sequentially on the XLA-CPU backend (one
 physical core, DESIGN.md §7) — the claim under reproduction is the RATIO.
+
+A timing-only spec (no YAX/CG/parallel/metrics: the 1M-row pair makes the
+full protocol needlessly expensive) on the fixed csr engine.
 """
 from __future__ import annotations
 
-import jax.numpy as jnp
-import numpy as np
+from repro.experiments import ExperimentSpec, MeasurePolicy
 
-from repro.core.measure import ios
-from repro.core.spmv.ops import build_operator
-from repro.matrices import suite
-
+from . import common
 from .common import RESULTS_DIR, write_csv
+
+MATRICES = ("fig1_banded", "fig1_shuffled")
+
+
+def spec(quick: bool = False) -> ExperimentSpec:
+    return ExperimentSpec(
+        name="fig1_pair", matrices=MATRICES, schemes=("baseline",),
+        engines=("csr",),
+        policy=MeasurePolicy(iters=6 if quick else 12, with_yax=False,
+                             with_parallel=False, with_metrics=False))
 
 
 def run(quick: bool = False):
-    iters = 6 if quick else 12
+    rep = common.campaign_report(spec(quick))
     rows = []
-    for name in ("fig1_banded", "fig1_shuffled"):
-        mat = suite.get(name)
-        op = build_operator(mat, "csr")
-        x = jnp.asarray(np.random.default_rng(0).standard_normal(mat.n),
-                        jnp.float32)
-        ms = float(np.median(ios.run_ios(op, x, iters=iters)))
-        gf = float(ios.gflops(mat.nnz, np.array([ms]))[0])
-        rows.append([name, mat.m, mat.nnz, round(ms, 3), round(gf, 4)])
+    for name in MATRICES:
+        rec = rep.cell(name, "baseline")
+        rows.append([name, rec["m"], rec["nnz"],
+                     round(rec["seq_ios_ms"], 3),
+                     round(rec["seq_ios_gflops"], 4)])
     ratio = rows[0][4] / rows[1][4]
     rows.append(["ratio_banded_over_shuffled", "", "", "", round(ratio, 3)])
     write_csv(f"{RESULTS_DIR}/fig01_banded_shuffle.csv",

@@ -1,6 +1,6 @@
 """Paper Fig. 3: CDF of measured-GFLOPs ratio (X / Real-CG) for X in
 {YAX, IOS}. Claim: YAX systematically overpredicts the CG-embedded SpMV
-performance; IOS tracks it."""
+performance; IOS tracks it. A pure view over the locality campaign."""
 from __future__ import annotations
 
 import numpy as np
@@ -9,20 +9,18 @@ from repro.core.measure import profiles
 from repro.matrices import suite
 
 from . import common
-from .common import RESULTS_DIR, grid, write_csv
+from .common import RESULTS_DIR, write_csv
 
 
 def run(quick: bool = False):
     mats = suite.locality_names()
-    records = common.run_campaign(matrices=mats, schemes=common.SCHEMES,
-                                  profiles=(common.PRIMARY,), tag="locality")
+    rep = common.campaign_report(common.locality_spec())
     schemes = common.SCHEMES
-    ios_g = grid(records, common.PRIMARY, mats, schemes, "seq_ios_gflops")
-    yax_g = grid(records, common.PRIMARY, mats, schemes, "seq_yax_gflops")
-    cg_g = grid(records, common.PRIMARY, mats, schemes, "cg_gflops")
-    mask = np.isfinite(ios_g) & np.isfinite(cg_g) & np.isfinite(yax_g)
-    r_ios = (ios_g / cg_g)[mask].ravel()
-    r_yax = (yax_g / cg_g)[mask].ravel()
+    ios_g = rep.grid("seq_ios_gflops", mats, schemes)
+    yax_g = rep.grid("seq_yax_gflops", mats, schemes)
+    cg_g = rep.grid("cg_gflops", mats, schemes)
+    r_ios = (ios_g / cg_g).ravel()
+    r_yax = (yax_g / cg_g).ravel()
     rows = []
     for name, r in [("IOS", r_ios), ("YAX", r_yax)]:
         v, c = profiles.cdf(r)

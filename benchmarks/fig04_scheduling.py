@@ -2,90 +2,51 @@
 
 OpenMP dynamic/guided have no TPU analogue (static SPMD), so the reproduced
 claim is the STATIC family's ordering: default static (one maximal
-contiguous chunk) >= static,chunk for chunk in {1,16,32,64} — temporal
+contiguous chunk) >= static,chunk for chunk in {16, 64} — temporal
 locality grows with chunk size. Parallel times come from the calibrated
-panel model (modelled parallel, labelled)."""
+panel model (modelled parallel, labelled).
+
+A spec over the "schedule" cell kind: the scheduling policy is the
+variants axis (static_c<chunk> cells time each thread's strided row set
+on its own gathered submatrix — see repro/experiments/cells.py).
+"""
 from __future__ import annotations
 
-import jax.numpy as jnp
 import numpy as np
 
-from repro.core.measure import ios, parallel_model
-from repro.core.sparse import partition
-from repro.core.spmv.ops import build_operator
+from repro.core.measure import profiles
+from repro.experiments import ExperimentSpec, MeasurePolicy
 from repro.matrices import suite
 
+from . import common
 from .common import RESULTS_DIR, write_csv
 
 P = 8
+POLICIES = ("static_default", "static_c16", "static_c64", "nnz_balanced")
 
 
-def _chunked_static_ms(mat, chunk, iters):
-    """Modelled parallel time under static,chunk scheduling: each thread's
-    rows are a strided set; its time is measured on its own gathered
-    submatrix (includes the locality loss of striding). IOS semantics: the
-    panel's output refreshes x at ITS OWN row positions (x stays full-size —
-    feeding the short y back as x would silently clamp gather indices)."""
-    import time as _time
-
-    panels = partition.chunked_cyclic_panels(mat.m, P, chunk)
-    rng = np.random.default_rng(0)
-    x = jnp.asarray(rng.standard_normal(mat.n), jnp.float32)
-    rows_dev = None
-    worst = 0.0
-    for rows in panels:
-        sub = _rows_submatrix(mat, rows)
-        op = build_operator(sub, "csr", nnz_bucket=4096)
-        rows_dev = jnp.asarray(rows)
-        xi = x
-        times = []
-        for i in range(iters + 2):
-            t0 = _time.perf_counter()
-            y = op(xi)
-            y.block_until_ready()
-            if i >= 2:
-                times.append((_time.perf_counter() - t0) * 1e3)
-            xi = xi.at[rows_dev].set(y[: rows.size])
-        worst = max(worst, float(np.median(times)))
-    return worst + parallel_model.ALPHA_SYNC_MS
-
-
-def _rows_submatrix(mat, rows):
-    from repro.core.sparse.csr import CSRMatrix
-
-    rp = mat.rowptr.astype(np.int64)
-    counts = (rp[rows + 1] - rp[rows])
-    idx = np.concatenate([np.arange(rp[r], rp[r + 1]) for r in rows]) \
-        if rows.size else np.empty(0, np.int64)
-    rowptr = np.zeros(rows.size + 1, dtype=np.int64)
-    rowptr[1:] = np.cumsum(counts)
-    rowptr = rowptr.astype(np.int32)
-    return CSRMatrix(rowptr=rowptr, cols=mat.cols[idx], vals=mat.vals[idx],
-                     shape=(rows.size, mat.n))
+def spec(quick: bool = False) -> ExperimentSpec:
+    mats = suite.locality_names()[:4] if quick else suite.locality_names()
+    return ExperimentSpec(
+        name="fig4_scheduling", matrices=tuple(mats), schemes=("baseline",),
+        engines=("csr",), ps=(P,), variants=POLICIES, kind="schedule",
+        policy=MeasurePolicy(iters=4 if quick else 6))
 
 
 def run(quick: bool = False):
-    iters = 4 if quick else 6
-    mats = suite.locality_names()[:4] if quick else suite.locality_names()
-    policies = ["static_default", "static_c16", "static_c64", "nnz_balanced"]
+    sp = spec(quick)
+    rep = common.campaign_report(sp)
     rows = []
-    summary = {p: [] for p in policies}
-    for name in mats:
-        mat = suite.get(name)
-        res = {}
-        res["static_default"] = parallel_model.modelled_parallel_ms(
-            mat, P, "csr", schedule="static", iters=iters)
-        res["static_c16"] = _chunked_static_ms(mat, 16, iters)
-        res["static_c64"] = _chunked_static_ms(mat, 64, iters)
-        res["nnz_balanced"] = parallel_model.modelled_parallel_ms(
-            mat, P, "csr", schedule="nnz_balanced", iters=iters)
-        for pol in policies:
-            gf = float(ios.gflops(mat.nnz, np.array([res[pol]]))[0])
-            rows.append([name, pol, round(res[pol], 3), round(gf, 4)])
-            summary[pol].append(gf)
+    summary = {p: [] for p in POLICIES}
+    for name in sp.matrices:
+        for pol in POLICIES:
+            rec = rep.cell(name, "baseline", variant=pol)
+            rows.append([name, pol, round(rec["modelled_par_ms"], 3),
+                         round(rec["gflops"], 4)])
+            summary[pol].append(rec["gflops"])
     write_csv(f"{RESULTS_DIR}/fig04_scheduling.csv",
               ["matrix", "policy", "modelled_par_ms", "gflops"], rows)
-    geo = {p: float(np.exp(np.mean(np.log(np.maximum(v, 1e-9)))))
+    geo = {p: profiles.geomean(np.maximum(v, 1e-9))
            for p, v in summary.items()}
     return {"geomean_gflops": geo,
             "default_static_wins": geo["static_default"] >= geo["static_c16"]}

@@ -1,30 +1,27 @@
 """Paper Fig. 5: Dolan-More performance profiles of the reordering schemes,
-sequential (measured) and parallel (modelled) — IOS methodology."""
+sequential (measured) and parallel (modelled) — IOS methodology. A pure
+view over the locality campaign."""
 from __future__ import annotations
 
 import numpy as np
 
-from repro.core.measure import profiles
 from repro.matrices import suite
 
 from . import common
-from .common import RESULTS_DIR, grid, write_csv
+from .common import RESULTS_DIR, write_csv
 
 TAUS = np.array([1.0, 1.05, 1.1, 1.25, 1.5, 2.0, 3.0])
 
 
 def run(quick: bool = False):
     mats = suite.locality_names()
-    records = common.run_campaign(matrices=mats, schemes=common.SCHEMES,
-                                  profiles=(common.PRIMARY,), tag="locality")
+    rep = common.campaign_report(common.locality_spec())
     schemes = common.SCHEMES
     out = {}
     rows = []
     for mode, field in [("sequential", "seq_ios_gflops"),
                         ("parallel_modelled", "par_static_gflops")]:
-        perf = grid(records, common.PRIMARY, mats, schemes, field)
-        ok = np.isfinite(perf).all(axis=0)
-        prof = profiles.performance_profile(perf[:, ok], TAUS)
+        prof = rep.performance_profile(field, mats, schemes, TAUS)
         for i, s in enumerate(schemes):
             for t, v in zip(TAUS, prof[i]):
                 rows.append([mode, s, float(t), round(float(v), 4)])

@@ -1,28 +1,24 @@
 """Paper Fig. 6: stacked speedup-bucket counts per scheme (vs baseline),
 sequential (measured) + parallel (modelled). Key paper claim: in the
-sequential case every scheme except RCM slows down >50% of matrices."""
+sequential case every scheme except RCM slows down >50% of matrices.
+A pure view over the locality campaign."""
 from __future__ import annotations
-
-import numpy as np
 
 from repro.core.measure import profiles
 from repro.matrices import suite
 
 from . import common
-from .common import RESULTS_DIR, grid, write_csv
+from .common import RESULTS_DIR, write_csv
 
 
 def run(quick: bool = False):
     mats = suite.locality_names()
-    records = common.run_campaign(matrices=mats, schemes=common.SCHEMES,
-                                  profiles=(common.PRIMARY,), tag="locality")
+    rep = common.campaign_report(common.locality_spec())
     schemes = [s for s in common.SCHEMES if s != "baseline"]
     rows, out = [], {}
     for mode, field in [("sequential", "seq_ios_gflops"),
                         ("parallel_modelled", "par_static_gflops")]:
-        perf = grid(records, common.PRIMARY, mats, common.SCHEMES, field)
-        base = perf[common.SCHEMES.index("baseline")]
-        sp = perf[[common.SCHEMES.index(s) for s in schemes]] / base
+        sp = rep.speedup(field, mats, schemes)
         counts = profiles.speedup_buckets(sp)
         for i, s in enumerate(schemes):
             for lbl, c in zip(profiles.BUCKET_LABELS, counts[i]):

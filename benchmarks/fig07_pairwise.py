@@ -1,26 +1,22 @@
 """Paper Fig. 7: pairwise win-rate matrix across schemes (IOS GFLOPs).
-Claim: RCM beats every other scheme on most matrices."""
+Claim: RCM beats every other scheme on most matrices. A pure view over
+the locality campaign."""
 from __future__ import annotations
 
-import numpy as np
-
-from repro.core.measure import profiles
 from repro.matrices import suite
 
 from . import common
-from .common import RESULTS_DIR, grid, write_csv
+from .common import RESULTS_DIR, write_csv
 
 
 def run(quick: bool = False):
     mats = suite.locality_names()
-    records = common.run_campaign(matrices=mats, schemes=common.SCHEMES,
-                                  profiles=(common.PRIMARY,), tag="locality")
+    rep = common.campaign_report(common.locality_spec())
     schemes = common.SCHEMES
     out, rows = {}, []
     for mode, field in [("sequential", "seq_ios_gflops"),
                         ("parallel_modelled", "par_static_gflops")]:
-        perf = grid(records, common.PRIMARY, mats, schemes, field)
-        win = profiles.pairwise_win_rates(perf)
+        win = rep.pairwise_win_rates(field, mats, schemes)
         for i, si in enumerate(schemes):
             for j, sj in enumerate(schemes):
                 rows.append([mode, si, sj, round(float(win[i, j]), 3)])

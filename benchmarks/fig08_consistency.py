@@ -1,41 +1,38 @@
 """Paper Fig. 8: cross-machine consistency of reordering speedups.
 
-Machines -> measurement profiles M1..M4 (DESIGN.md §7: engine dtype and
-core-count variations on this host; documented deviation — the reproduced
-claim is the EXISTENCE of inconsistency, Consistent% < 100 at low tau).
+Machines -> the registered machine profiles M1..M5 (DESIGN.md §7: engine
+dtype and core-count variations on this host; documented deviation — the
+reproduced claim is the EXISTENCE of inconsistency, Consistent% < 100 at
+low tau). A view over the consistency campaign, which iterates EVERY
+registered profile (profiles="*") — a plugin profile joins this figure
+by calling register_profile.
 """
 from __future__ import annotations
 
-import numpy as np
+from repro.core.registry import PROFILE_REGISTRY
 
-from repro.core.measure import profiles
 from . import common
-from .common import RESULTS_DIR, grid, write_csv
+from .common import RESULTS_DIR, write_csv
 
 TAUS = [1.1, 1.25, 1.5, 2.0]
 
 
 def run(quick: bool = False):
-    mats = common.CONSISTENCY_MATRICES[:6] if quick else common.CONSISTENCY_MATRICES
-    profs = list(common.MACHINE_PROFILES)
-    records = common.run_campaign(matrices=mats, schemes=common.SCHEMES,
-                                  profiles=profs, tag="consistency")
+    sp = common.consistency_spec(quick)
+    rep = common.campaign_report(sp)
+    mats = sp.matrices
+    profs = list(PROFILE_REGISTRY)
     schemes = [s for s in common.SCHEMES if s != "baseline"]
     rows, out = [], {}
     for mode, field in [("sequential", "seq_ios_gflops"),
                         ("parallel_modelled", "par_static_gflops")]:
         for s in schemes:
-            sp_by_machine = []
-            for prof in profs:
-                perf = grid(records, prof, mats, common.SCHEMES, field)
-                base = perf[common.SCHEMES.index("baseline")]
-                sp_by_machine.append(perf[common.SCHEMES.index(s)] / base)
-            sp = np.stack(sp_by_machine)           # [machines, matrices]
-            ok = np.isfinite(sp).all(axis=0)
-            for tau in TAUS:
-                cons, n = profiles.consistency_ratio(sp[:, ok], tau)
+            # one speedup stack per (mode, scheme), swept over all taus
+            for tau, (cons, n) in zip(
+                    TAUS, rep.consistency(field, mats, s, profs, TAUS)):
                 rows.append([mode, s, tau, round(cons, 3), n])
                 out[f"{mode}_{s}_tau{tau}"] = round(cons, 3)
     write_csv(f"{RESULTS_DIR}/fig08_consistency.csv",
-              ["mode", "scheme", "tau", "consistent_pct", "n_candidates"], rows)
+              ["mode", "scheme", "tau", "consistent_pct", "n_candidates"],
+              rows)
     return out

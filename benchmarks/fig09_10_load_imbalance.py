@@ -1,12 +1,12 @@
 """Paper Figs. 9 & 10: nnz load imbalance of the static schedule under each
 reordering, absolute (Fig. 9, 64 panels) and relative to baseline (Fig. 10).
-These are exact analytic quantities (no timing)."""
+These are exact analytic quantities (no timing) — a metrics-only spec at
+p=64 (time_spmv=False cells never build an operator)."""
 from __future__ import annotations
 
 import numpy as np
 
-from repro.core.reorder import api as reorder_api
-from repro.core.sparse import metrics, partition
+from repro.experiments import ExperimentSpec, MeasurePolicy
 from repro.matrices import suite
 
 from . import common
@@ -15,33 +15,35 @@ from .common import RESULTS_DIR, write_csv
 P64 = 64
 
 
-def run(quick: bool = False):
+def spec(quick: bool = False) -> ExperimentSpec:
     # locality tier + a representative bench-tier slice (full 33-matrix
     # sweep is reorder-bound; LI is analytic so the subset is unbiased)
     mats = (suite.bench_names()[:8] if quick
             else suite.bench_names()[:12] + suite.locality_names())
-    schemes = common.SCHEMES
-    rows = []
-    li_all = {s: [] for s in schemes}
-    for name in mats:
-        mat = suite.get(name)
-        for scheme in schemes:
-            perm = reorder_api.reorder(mat, scheme)
-            rmat = mat.permute(perm) if scheme != "baseline" else mat
-            li = metrics.load_imbalance(
-                rmat, partition.static_partition(rmat, P64))
-            rows.append([name, scheme, round(li, 4)])
-            li_all[scheme].append(li)
+    return ExperimentSpec(
+        name="fig9_li", matrices=tuple(mats), schemes=tuple(common.SCHEMES),
+        engines=("csr",), ps=(P64,),
+        policy=MeasurePolicy(time_spmv=False, with_yax=False,
+                             with_parallel=False, with_metrics=True))
+
+
+def run(quick: bool = False):
+    sp = spec(quick)
+    rep = common.campaign_report(sp)
+    mats, schemes = sp.matrices, common.SCHEMES
+    li = rep.grid("li_static", mats, schemes)          # [scheme, matrix]
+    rows = [[name, s, round(float(li[i, j]), 4)]
+            for j, name in enumerate(mats) for i, s in enumerate(schemes)]
     write_csv(f"{RESULTS_DIR}/fig09_load_imbalance.csv",
               ["matrix", "scheme", "li_static_64"], rows)
 
-    base = np.array(li_all["baseline"])
+    base = li[schemes.index("baseline")]
     out = {}
     rel_rows = []
     for s in schemes:
         if s == "baseline":
             continue
-        rel = np.array(li_all[s]) / base     # <1 = improved balance
+        rel = li[schemes.index(s)] / base     # <1 = improved balance
         out[f"{s}_improved_frac"] = round(float((rel < 0.999).mean()), 3)
         out[f"{s}_geomean_rel_li"] = round(
             float(np.exp(np.mean(np.log(rel)))), 3)

@@ -1,6 +1,7 @@
 """Paper Fig. 11: nnz-balanced vs static scheduling speedups (reverse CDF)
 per scheme. Claim: balance-improving schemes (METIS/PaToH/Louvain) lose
-their edge under an nnz-balanced schedule; RCM's curves coincide."""
+their edge under an nnz-balanced schedule; RCM's curves coincide.
+A pure view over the locality campaign."""
 from __future__ import annotations
 
 import numpy as np
@@ -9,30 +10,24 @@ from repro.core.measure import profiles
 from repro.matrices import suite
 
 from . import common
-from .common import RESULTS_DIR, grid, write_csv
+from .common import RESULTS_DIR, write_csv
 
 
 def run(quick: bool = False):
     mats = suite.locality_names()
-    records = common.run_campaign(matrices=mats, schemes=common.SCHEMES,
-                                  profiles=(common.PRIMARY,), tag="locality")
+    rep = common.campaign_report(common.locality_spec())
     schemes = [s for s in common.SCHEMES if s != "baseline"]
-    perf_s = grid(records, common.PRIMARY, mats, common.SCHEMES,
-                  "par_static_gflops")
-    perf_b = grid(records, common.PRIMARY, mats, common.SCHEMES,
-                  "par_nnz_balanced_gflops")
-    base_s = perf_s[common.SCHEMES.index("baseline")]
-    base_b = perf_b[common.SCHEMES.index("baseline")]
+    sp_static = rep.speedup("par_static_gflops", mats, schemes)
+    sp_bal = rep.speedup("par_nnz_balanced_gflops", mats, schemes)
     rows, out = [], {}
-    for s in schemes:
-        i = common.SCHEMES.index(s)
-        sp_static = perf_s[i] / base_s
-        sp_bal = perf_b[i] / base_b
-        for kind, sp in [("static", sp_static), ("nnz_balanced", sp_bal)]:
-            v, c = profiles.reverse_cdf(sp[np.isfinite(sp)])
+    for i, s in enumerate(schemes):
+        for kind, sp in [("static", sp_static[i]),
+                         ("nnz_balanced", sp_bal[i])]:
+            v, c = profiles.reverse_cdf(sp)
             for vi, ci in zip(v, c):
-                rows.append([s, kind, round(float(vi), 4), round(float(ci), 4)])
-        gap = float(np.nanmedian(sp_static) - np.nanmedian(sp_bal))
+                rows.append([s, kind, round(float(vi), 4),
+                             round(float(ci), 4)])
+        gap = float(np.median(sp_static[i]) - np.median(sp_bal[i]))
         out[f"{s}_static_minus_balanced_median"] = round(gap, 4)
     write_csv(f"{RESULTS_DIR}/fig11_nnz_balanced.csv",
               ["scheme", "schedule", "speedup", "rev_cdf"], rows)

@@ -3,15 +3,21 @@
   PYTHONPATH=src python -m benchmarks.run [--quick] [--only figXX,...]
   PYTHONPATH=src python -m benchmarks.run --smoke   # CI: tiny end-to-end pass
 
---smoke runs a minimal measurement pass on the smoke-tier matrices with the
-autotuned engine (interpret-mode kernels on CPU), exercising reorder ->
-tune -> build -> operator cache -> IOS timing without the full campaign
-cost. Exit status is nonzero on any failure."""
+--smoke runs a tiny measurement CAMPAIGN (smoke-tier matrices x
+{baseline, rcm} with the autotuned engine, interpret-mode kernels on CPU)
+through the experiment harness: reorder -> tune -> build -> operator
+store -> IOS timing with a per-cell original-index-space oracle gate.
+It then re-runs the identical spec and asserts 100% result-store hits
+(the resumability invariant), writes the campaign CSV, and emits the
+top-level BENCH_spmv.json trajectory summary. Exit status is nonzero on
+any failure. --matrices restricts the smoke grid (CI's 2-matrix x
+2-scheme job)."""
 from __future__ import annotations
 
 import argparse
 import importlib
 import json
+import os
 import time
 import traceback
 
@@ -32,55 +38,76 @@ MODULES = [
     "spmm_batch",
 ]
 
+BENCH_SUMMARY_PATH = os.path.join(os.path.dirname(__file__), "..",
+                                  "BENCH_spmv.json")
 
-def smoke() -> int:
-    """Tiny end-to-end pass for CI: smoke matrices x {baseline, rcm} with
-    the autotuned engine through the pipeline facade (plan store included).
-    Returns failure count."""
-    import numpy as np
 
-    from repro.api import SpmvProblem, plan
-    from repro.core.measure import ios
+def smoke_spec(matrices=None):
+    from repro.experiments import ExperimentSpec, MeasurePolicy
     from repro.matrices import suite
 
-    import jax.numpy as jnp
+    return ExperimentSpec(
+        name="smoke", matrices=tuple(matrices or suite.smoke_names()),
+        schemes=("baseline", "rcm"), engines=("auto",),
+        # interpret-mode keeps the Pallas kernel path covered on CPU
+        # whenever the tuner picks a kernel engine; verify gates every
+        # cell on the numpy oracle in the ORIGINAL index space (this also
+        # exercises the operator's carried permutation)
+        policy=MeasurePolicy(iters=3, warmup=1, with_yax=False,
+                             with_parallel=False, with_metrics=False,
+                             verify=True, use_kernel="interpret"))
 
-    failures = 0
+
+def smoke(matrices=None) -> int:
+    """Tiny end-to-end campaign + resumability check for CI.
+    Returns failure count."""
+    from . import common
+
+    spec = smoke_spec(matrices)
+    store = common.result_store()
+    rep = common.Runner(spec, store=store, verbose=False,
+                        on_error="record").run()
     print("name,us_per_call,derived")
-    for mname in suite.smoke_names():
-        for scheme in ("baseline", "rcm"):
-            t0 = time.time()
-            try:
-                mat = suite.get(mname)
-                # interpret-mode keeps the Pallas kernel path covered on CPU
-                # whenever the tuner picks a kernel engine
-                pl = plan(SpmvProblem(mat,
-                                      hints={"use_kernel": "interpret"}),
-                          reorder=scheme, engine="auto")
-                op = pl.build()
-                x0 = jnp.asarray(
-                    np.random.default_rng(0).standard_normal(mat.n),
-                    jnp.float32)
-                ms = float(np.median(ios.run_ios(op.unwrap(), x0, iters=3,
-                                                 warmup=1)))
-                # correctness gate in the ORIGINAL index space: this also
-                # exercises the operator's carried permutation
-                want = mat.spmv(np.asarray(x0))
-                err = float(np.abs(np.asarray(op(x0)) - want).max())
-                scale = float(np.abs(want).max()) + 1e-9
-                assert err / scale < 1e-4, (mname, scheme, err / scale)
-                info = op.build_info
-                derived = {"engine": info["engine"], "ms": round(ms, 3),
-                           "cache_hit": info["cache_hit"]}
-                us = (time.time() - t0) * 1e6
-                print(f"{mname}_{scheme},{us:.0f},"
-                      f"\"{json.dumps(derived)}\"", flush=True)
-            except Exception as e:
-                failures += 1
-                us = (time.time() - t0) * 1e6
-                print(f"{mname}_{scheme},{us:.0f},"
-                      f"\"ERROR: {type(e).__name__}: {e}\"", flush=True)
-                traceback.print_exc()
+    for rec in rep.records:
+        derived = {"engine": rec.get("engine", "?"),
+                   "ms": round(rec.get("seq_ios_ms", float("nan")), 3),
+                   "store": "hit" if rec["store_reused"] else "miss+measure",
+                   "verify_rel_err": round(rec.get("verify_rel_err", -1.0),
+                                           8)}
+        print(f"{rec['matrix']}_{rec['scheme']},"
+              f"{rec['runner_wall_s'] * 1e6:.0f},"
+              f"\"{json.dumps(derived)}\"", flush=True)
+    failures = len(rep.failures)
+    for f in rep.failures:
+        print(f"{f['label']},0,\"ERROR: {f['error']}\"", flush=True)
+        print(f["traceback"], flush=True)
+
+    if not failures:
+        # the resumability invariant: an identical second invocation is
+        # served ENTIRELY from the result store
+        rep2 = common.Runner(spec, store=store, verbose=False).run()
+        if rep2.measured != 0 or rep2.reused != len(spec.cells()):
+            print(f"RESUME FAILED: second run measured={rep2.measured} "
+                  f"reused={rep2.reused} (want 0/{len(spec.cells())})",
+                  flush=True)
+            failures += 1
+        else:
+            print(f"# resume: {rep2.reused}/{len(spec.cells())} cells "
+                  f"served from the store (0 re-measured)", flush=True)
+        rep = rep2 if not failures else rep
+
+    # campaign CSV + the top-level trajectory summary
+    rows = [[r["matrix"], r["scheme"], r.get("engine", "?"),
+             r.get("plan_label", "?"), round(r.get("seq_ios_ms", -1), 4),
+             round(r.get("seq_ios_gflops", -1), 4),
+             round(r.get("verify_rel_err", -1), 8)] for r in rep.records]
+    common.write_csv(os.path.join(common.RESULTS_DIR, "smoke_campaign.csv"),
+                     ["matrix", "scheme", "engine", "plan_label",
+                      "seq_ios_ms", "seq_ios_gflops", "verify_rel_err"],
+                     rows)
+    summary = rep.write_bench_summary(os.path.abspath(BENCH_SUMMARY_PATH))
+    print(f"# BENCH_spmv.json: geomean={summary['geomean']} "
+          f"speedup={summary.get('speedup_vs_baseline', {})}", flush=True)
     return failures
 
 
@@ -88,10 +115,13 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--matrices", default="",
+                    help="comma-separated matrix names (restricts --smoke)")
     ap.add_argument("--only", default="")
     args = ap.parse_args()
     if args.smoke:
-        raise SystemExit(1 if smoke() else 0)
+        mats = [m for m in args.matrices.split(",") if m] or None
+        raise SystemExit(1 if smoke(mats) else 0)
     only = set(args.only.split(",")) if args.only else None
 
     print("name,us_per_call,derived")

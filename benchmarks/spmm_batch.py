@@ -13,6 +13,9 @@ amortized time-per-vector. Two questions:
     (the hypergraph locality models' prediction; CSV column
     `speedup_vs_baseline`).
 
+A spec with explicit engine and k axes (timing-only policy); the result
+store makes repeat sweeps free and extending the k axis incremental.
+
     PYTHONPATH=src python -m benchmarks.spmm_batch [--quick | --smoke]
 
 Writes benchmarks/results/spmm_batch.csv.
@@ -24,69 +27,66 @@ import os
 
 import numpy as np
 
-from repro.api import SpmvProblem, plan
-from repro.core.measure import ios
-from repro.matrices import suite
+from repro.experiments import ExperimentSpec, MeasurePolicy
 
+from . import common
 from .common import RESULTS_DIR, write_csv
 
-K_SWEEP = [1, 2, 4, 8, 16, 32]
-ENGINES = ["sell", "csr", "auto"]
-SCHEMES = ["baseline", "rcm"]
+K_SWEEP = (1, 2, 4, 8, 16, 32)
+ENGINES = ("sell", "csr", "auto")
+SCHEMES = ("baseline", "rcm")
 
-FULL_MATRICES = ["powerlaw_m16384_a21", "banded_shuf_m16384_bw8",
-                 "stencil2d_shuf_128", "smallworld_m16384_k6"]
-QUICK_MATRICES = ["powerlaw_m16384_a21", "banded_shuf_m16384_bw8"]
-SMOKE_MATRICES = ["smoke_powerlaw", "smoke_banded"]
-
-
-def _measure_cell(mat, scheme: str, engine: str, k: int, iters: int) -> dict:
-    """One plan() + build() per cell through the pipeline facade; the plan
-    store makes repeat sweeps free (fixed-engine entries are shared across
-    the k axis — k only specializes engine="auto" plans)."""
-    pl = plan(SpmvProblem(mat, k=k), reorder=scheme, engine=engine)
-    op = pl.build()
-    # time the bare reordered-space engine (permutation wrapper opted out)
-    ms = float(np.median(ios.run_ios_batched(op.unwrap(), mat.n, k,
-                                             iters=iters, warmup=2)))
-    return {
-        "engine": op.build_info["engine"],
-        "plan_label": pl.tune.label(),    # k-specialized label, e.g. csr@k8
-        "spmm_ms": ms,
-        "per_vector_ms": ms / k,
-        "gflops": float(ios.gflops(mat.nnz * k, np.array([ms]))[0]),
-    }
+FULL_MATRICES = ("powerlaw_m16384_a21", "banded_shuf_m16384_bw8",
+                 "stencil2d_shuf_128", "smallworld_m16384_k6")
+QUICK_MATRICES = ("powerlaw_m16384_a21", "banded_shuf_m16384_bw8")
+SMOKE_MATRICES = ("smoke_powerlaw", "smoke_banded")
 
 
-def run(quick: bool = True, smoke: bool = False, iters: int | None = None) -> dict:
+def spec(quick: bool = True, smoke: bool = False,
+         iters: int | None = None) -> ExperimentSpec:
     matrices = SMOKE_MATRICES if smoke else (
         QUICK_MATRICES if quick else FULL_MATRICES)
-    iters = iters if iters is not None else (3 if smoke else 6)
     # smoke must still span k values ABOVE the SELL k-tile floor (8), so
     # the decreasing-per-vector gate reflects real amortization, not just
     # tile padding
-    ks = [1, 2, 8, 32] if smoke else K_SWEEP
+    ks = (1, 2, 8, 32) if smoke else K_SWEEP
+    return ExperimentSpec(
+        name="spmm_batch", matrices=matrices, schemes=SCHEMES,
+        engines=ENGINES, ks=ks,
+        policy=MeasurePolicy(
+            iters=iters if iters is not None else (3 if smoke else 6),
+            warmup=2, with_yax=False, with_parallel=False,
+            with_metrics=False))
+
+
+def run(quick: bool = True, smoke: bool = False,
+        iters: int | None = None) -> dict:
+    sp = spec(quick=quick, smoke=smoke, iters=iters)
+    rep = common.campaign_report(sp)
+    matrices, ks = sp.matrices, sp.ks
 
     rows = []
     cells = {}
     for mname in matrices:
-        mat = suite.get(mname)
         for scheme in SCHEMES:
             for engine in ENGINES:
                 for k in ks:
-                    rec = _measure_cell(mat, scheme, engine, k, iters)
+                    rec = rep.cell(mname, scheme, engine=engine, k=k)
                     cells[(mname, scheme, engine, k)] = rec
+                    gflops = rec.get("spmm_gflops", rec["seq_ios_gflops"]
+                                     if k == 1 else None)
                     rows.append([mname, scheme, engine, rec["engine"],
                                  rec["plan_label"], k,
                                  f"{rec['spmm_ms']:.4f}",
                                  f"{rec['per_vector_ms']:.4f}",
-                                 f"{rec['gflops']:.3f}", ""])
+                                 f"{gflops:.3f}", ""])
     # speedup_vs_baseline: same (matrix, engine, k), scheme vs baseline
     for i, row in enumerate(rows):
         mname, scheme, engine, k = row[0], row[1], row[2], row[5]
         base = cells.get((mname, "baseline", engine, k))
         if base and scheme != "baseline":
-            rows[i][-1] = f"{base['spmm_ms'] / cells[(mname, scheme, engine, k)]['spmm_ms']:.3f}"
+            ratio = base["spmm_ms"] / cells[(mname, scheme, engine, k)]["spmm_ms"]
+            rows[i][-1] = f"{ratio:.3f}"
 
     path = os.path.join(RESULTS_DIR, "spmm_batch.csv")
     write_csv(path, ["matrix", "scheme", "engine", "resolved_engine",
@@ -97,7 +97,7 @@ def run(quick: bool = True, smoke: bool = False, iters: int | None = None) -> di
     # widest-k per-vec time, >1 means batching pays), plus the sell check
     # the acceptance criterion names
     kmax = ks[-1]
-    derived = {"csv": path, "k_sweep": ks, "matrices": matrices}
+    derived = {"csv": path, "k_sweep": list(ks), "matrices": list(matrices)}
     for engine in ENGINES:
         ratios = []
         for mname in matrices:

@@ -1,37 +1,43 @@
 """Summarize the paper-claim verdicts from the measured campaigns
-(feeds EXPERIMENTS.md §Repro). Run after `python -m benchmarks.run`."""
+(feeds EXPERIMENTS.md §Repro). Run after `python -m benchmarks.run` —
+a pure view over the locality campaign's cells in the result store."""
 from __future__ import annotations
 
 import json
-import os
 
 import numpy as np
 
 from repro.matrices import suite
 
 from . import common
-from .common import RESULTS_DIR, grid
 
 
 def run(quick=False):
     out = {}
-    path = os.path.join(RESULTS_DIR, "campaign_locality.json")
-    with open(path) as f:
-        rec = json.load(f)
-    mats = sorted({r["matrix"] for r in rec.values()})
+    mats = suite.locality_names()
+    # summarize is a VIEW: fail fast if the campaign was never measured
+    # instead of silently launching hours of measurement with no output
+    spec = common.locality_spec()
+    store = common.result_store()
+    missing = [c for c in spec.cells() if store.get(c.key()) is None]
+    if missing:
+        raise RuntimeError(
+            f"locality campaign incomplete: {len(missing)} of "
+            f"{len(spec.cells())} cells missing from {store.root} — run "
+            f"`python -m benchmarks.run` first (e.g. {missing[0].label()})")
+    rep = common.campaign_report(spec, verbose=False)
     S = common.SCHEMES
-    perf = grid(rec, common.PRIMARY, mats, S, "seq_ios_gflops")
-    yax = grid(rec, common.PRIMARY, mats, S, "seq_yax_gflops")
-    cg = grid(rec, common.PRIMARY, mats, S, "cg_gflops")
-    par = grid(rec, common.PRIMARY, mats, S, "par_static_gflops")
-    ok = np.isfinite(perf).all(axis=0)
+    perf = rep.grid("seq_ios_gflops", mats, S)
+    yax = rep.grid("seq_yax_gflops", mats, S)
+    cg = rep.grid("cg_gflops", mats, S)
+    par = rep.grid("par_static_gflops", mats, S)
     base = perf[S.index("baseline")]
 
     # claim 5: sequential slowdown fraction per scheme
     for s in S:
         if s == "baseline":
             continue
-        sp = perf[S.index(s)][ok] / base[ok]
+        sp = perf[S.index(s)] / base
         out[f"seq_slowdown_frac_{s}"] = round(float((sp < 1.0).mean()), 3)
         out[f"seq_median_speedup_{s}"] = round(float(np.median(sp)), 3)
 
@@ -40,28 +46,35 @@ def run(quick=False):
     for s in S:
         if s in ("rcm",):
             continue
-        w = float((perf[r][ok] > perf[S.index(s)][ok]).mean())
+        w = float((perf[r] > perf[S.index(s)]).mean())
         out[f"seq_rcm_beats_{s}"] = round(w, 3)
 
     # claim 2: methodology ratios
-    m_ok = np.isfinite(yax).all(0) & np.isfinite(cg).all(0) & ok
-    out["yax_over_cg_median"] = round(float(np.median((yax / cg)[:, m_ok])), 3)
-    out["ios_over_cg_median"] = round(float(np.median((perf / cg)[:, m_ok])), 3)
+    out["yax_over_cg_median"] = round(float(np.median(yax / cg)), 3)
+    out["ios_over_cg_median"] = round(float(np.median(perf / cg)), 3)
 
     # claim 9 / table 1
     for nm, g in [("IOS", perf), ("CG", cg), ("YAX", yax)]:
-        gok = np.isfinite(g).all(0)
-        w = int((g[r][gok] > g[S.index("metis")][gok]).sum())
-        l = int((g[r][gok] < g[S.index("metis")][gok]).sum())
+        w = int((g[r] > g[S.index("metis")]).sum())
+        l = int((g[r] < g[S.index("metis")]).sum())
         out[f"t1_{nm}"] = f"rcm {w}w/{l}l"
 
     # parallel (modelled): rcm vs metis magnitude story
-    p_ok = np.isfinite(par).all(axis=0)
     pbase = par[S.index("baseline")]
     for s in ("rcm", "metis"):
-        sp = par[S.index(s)][p_ok] / pbase[p_ok]
+        sp = par[S.index(s)] / pbase
         out[f"par_wins_{s}"] = round(float((sp > 1.0).mean()), 3)
         out[f"par_maxspeedup_{s}"] = round(float(sp.max()), 3)
+
+    # plan-time vs run-time amortization (paper §3 accounting): medians
+    # over the campaign's cells at the spec's amortize_iters
+    split = rep.plan_run_split()
+    if split:
+        vals = list(split.values())
+        out["median_plan_over_run"] = round(float(np.median(
+            [v["plan_over_run"] for v in vals])), 3)
+        out["median_amortized_ms"] = round(float(np.median(
+            [v["amortized_ms"] for v in vals])), 3)
     return out
 
 

@@ -1,28 +1,24 @@
 """Paper Table 1: RCM-vs-METIS win/loss counts under IOS, CG, and YAX.
-Claim: IOS and CG agree (RCM wins); YAX flips the conclusion."""
+Claim: IOS and CG agree (RCM wins); YAX flips the conclusion.
+A pure view over the locality campaign."""
 from __future__ import annotations
-
-import numpy as np
 
 from repro.matrices import suite
 
 from . import common
-from .common import RESULTS_DIR, grid, write_csv
+from .common import RESULTS_DIR, write_csv
 
 
 def run(quick: bool = False):
     mats = suite.locality_names()
-    records = common.run_campaign(matrices=mats, schemes=common.SCHEMES,
-                                  profiles=(common.PRIMARY,), tag="locality")
+    rep = common.campaign_report(common.locality_spec())
     rows, out = [], {}
     for method, field in [("IOS", "seq_ios_gflops"), ("CG", "cg_gflops"),
                           ("YAX", "seq_yax_gflops")]:
-        perf = grid(records, common.PRIMARY, mats, common.SCHEMES, field)
-        rcm = perf[common.SCHEMES.index("rcm")]
-        met = perf[common.SCHEMES.index("metis")]
-        ok = np.isfinite(rcm) & np.isfinite(met)
-        w = int((rcm[ok] > met[ok]).sum())
-        l = int((rcm[ok] < met[ok]).sum())
+        duel = rep.grid(field, mats, ["rcm", "metis"])
+        rcm, met = duel[0], duel[1]
+        w = int((rcm > met).sum())
+        l = int((rcm < met).sum())
         rows.append([method, w, l])
         out[f"{method}_rcm_w"] = w
         out[f"{method}_rcm_l"] = l

@@ -20,22 +20,35 @@ planning, including `plan(reorder="auto", engine="auto")` joint selection.
 Importing this module registers every built-in (core.reorder.api schemes,
 core.spmv.ops engines), so the registries are populated as a side effect.
 
+Measurement is the same shape one level up: `repro.experiments` turns a
+declarative ExperimentSpec (matrices x schemes x machine profiles x k)
+into a resumable campaign over a content-addressed ResultStore; its key
+types are re-exported here.
+
 Legacy entry points (`core.spmv.ops.build_operator`,
-`core.reorder.api.apply_scheme`) remain as deprecation shims; see the
-README migration table.
+`core.reorder.api.apply_scheme`, `benchmarks.common.run_campaign/grid`)
+remain as deprecation shims; see the README migration table.
 """
 from __future__ import annotations
 
-from .core.registry import (ENGINE_REGISTRY, SCHEME_REGISTRY, EngineSpec,
-                            SchemeSpec, get_engine, get_scheme,
-                            register_engine, register_scheme)
+from .core.registry import (ENGINE_REGISTRY, PROFILE_REGISTRY,
+                            SCHEME_REGISTRY, EngineSpec, ProfileSpec,
+                            SchemeSpec, get_engine, get_profile, get_scheme,
+                            register_engine, register_profile,
+                            register_scheme)
 # importing these populates the registries with every built-in
 from .core.reorder import api as _reorder_api  # noqa: F401
 from .core.spmv import ops as _ops  # noqa: F401
 from .core.spmv.plan import Operator, Plan, SpmvProblem, plan, plan_key
+from .experiments import (ExperimentSpec, MeasurePolicy, MissingCellError,
+                          Report, ResultStore, Runner)
 
 __all__ = [
     "SpmvProblem", "plan", "Plan", "Operator", "plan_key",
-    "register_scheme", "register_engine", "get_scheme", "get_engine",
-    "SchemeSpec", "EngineSpec", "SCHEME_REGISTRY", "ENGINE_REGISTRY",
+    "register_scheme", "register_engine", "register_profile",
+    "get_scheme", "get_engine", "get_profile",
+    "SchemeSpec", "EngineSpec", "ProfileSpec",
+    "SCHEME_REGISTRY", "ENGINE_REGISTRY", "PROFILE_REGISTRY",
+    "ExperimentSpec", "MeasurePolicy", "MissingCellError", "Report",
+    "ResultStore", "Runner",
 ]

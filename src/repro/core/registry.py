@@ -1,4 +1,4 @@
-"""Plugin registries for reordering schemes and SpMV engines.
+"""Plugin registries for reordering schemes, SpMV engines and machine profiles.
 
 The pipeline facade (repro.api) plans over *whatever is registered*, not a
 hardcoded list: a reordering scheme is a function `(mat, seed) -> perm`
@@ -16,10 +16,17 @@ importing them:
   * EngineSpec.device          — "any" (pure XLA) or "tpu" (Pallas kernel
                                  with interpret/ref fallback elsewhere)
 
-Built-ins register at import of core.reorder.api / core.spmv.ops (both are
-imported by repro.api, so `import repro.api` is the one-line way to get a
-fully populated registry). Third-party schemes/engines register the same
-way and immediately participate in plan(reorder="auto", engine="auto").
+Machine profiles are the measurement counterpart: a named (engine, dtype,
+p) bundle standing in for one of the paper's hosts. The experiment harness
+(repro.experiments) builds campaign axes from PROFILE_REGISTRY, so a
+plugin profile joins every campaign that iterates `profiles="*"` the
+moment it calls register_profile.
+
+Built-ins register at import of core.reorder.api / core.spmv.ops /
+repro.experiments (all imported by repro.api, so `import repro.api` is
+the one-line way to get fully populated registries). Third-party
+schemes/engines/profiles register the same way and immediately
+participate in plan(reorder="auto", engine="auto") and in campaigns.
 
 This module must stay jax-free: it is imported by plan-time code that runs
 before XLA_FLAGS are pinned (see core/sparse/csr.py's rule).
@@ -54,8 +61,28 @@ class EngineSpec:
     description: str = ""
 
 
+@dataclasses.dataclass(frozen=True)
+class ProfileSpec:
+    """A registered machine/measurement profile: one point on the paper's
+    'machines' axis — the engine family, compute dtype and core count a
+    campaign cell is measured under (DESIGN.md §7)."""
+
+    name: str
+    engine: str = "csr"
+    dtype: str = "float32"
+    p: int = 8
+    primary: bool = False
+    description: str = ""
+
+    def physical(self) -> tuple:
+        """The (engine, dtype, p) coordinates a cell key is built from —
+        the profile NAME is presentation, not measurement identity."""
+        return (self.engine, self.dtype, int(self.p))
+
+
 SCHEME_REGISTRY: Dict[str, SchemeSpec] = {}
 ENGINE_REGISTRY: Dict[str, EngineSpec] = {}
+PROFILE_REGISTRY: Dict[str, ProfileSpec] = {}
 
 
 def register_scheme(name: str, *, paper: bool = False,
@@ -100,6 +127,20 @@ def register_engine(name: str, *, supports_spmm: bool = True,
     return deco
 
 
+def register_profile(name: str, *, engine: str = "csr",
+                     dtype: str = "float32", p: int = 8,
+                     primary: bool = False, description: str = "",
+                     override: bool = False) -> ProfileSpec:
+    """Register a machine/measurement profile (plain data, no decorator)."""
+    if name in PROFILE_REGISTRY and not override:
+        raise ValueError(f"profile {name!r} already registered "
+                         f"(pass override=True to replace)")
+    spec = ProfileSpec(name=name, engine=engine, dtype=dtype, p=int(p),
+                       primary=primary, description=description)
+    PROFILE_REGISTRY[name] = spec
+    return spec
+
+
 def get_scheme(name: str) -> SchemeSpec:
     try:
         return SCHEME_REGISTRY[name]
@@ -114,3 +155,23 @@ def get_engine(name: str) -> EngineSpec:
     except KeyError:
         raise KeyError(f"unknown engine {name!r}; known: "
                        f"{sorted(ENGINE_REGISTRY)}") from None
+
+
+def get_profile(name: str) -> ProfileSpec:
+    try:
+        return PROFILE_REGISTRY[name]
+    except KeyError:
+        raise KeyError(f"unknown profile {name!r}; known: "
+                       f"{sorted(PROFILE_REGISTRY)}") from None
+
+
+def primary_profile() -> str:
+    """Name of the primary profile (the one the paper's single-machine
+    figures are measured on). Falls back to the first registered."""
+    for spec in PROFILE_REGISTRY.values():
+        if spec.primary:
+            return spec.name
+    if PROFILE_REGISTRY:
+        return next(iter(PROFILE_REGISTRY))
+    raise KeyError("no machine profiles registered "
+                   "(import repro.experiments to get the built-ins)")

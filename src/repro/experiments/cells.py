@@ -1,0 +1,277 @@
+"""Cell measurement kinds — what the Runner executes on a store miss.
+
+A kind is a function `(cell, mat) -> record` registered in CELL_KINDS.
+Built-ins:
+
+  * "spmv"     — the paper's full per-cell protocol through the
+                 Problem→Plan→Operator facade: plan (reorder + tune) once,
+                 then any subset of {IOS, YAX, instrumented CG,
+                 modelled-parallel static/nnz-balanced, analytic structural
+                 metrics} per the cell's resolved policy. k > 1 times the
+                 SpMM path (`op.matmul`) and reports amortized per-vector
+                 time. Plan-time fields (reorder_ms/tune_ms/build_ms) are
+                 recorded separately from run-time fields — the paper's
+                 §3 accounting rule.
+  * "schedule" — the scheduling-policy sweep (paper Fig. 4 adapted):
+                 variant names pick the policy — "static_default",
+                 "static_c<chunk>" (strided chunked-cyclic panels, each
+                 timed on its own gathered submatrix), "nnz_balanced".
+
+Third-party kinds register with @register_cell_kind and become one spec
+line (`ExperimentSpec(kind=...)`) like everything else.
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict
+
+import numpy as np
+
+CELL_KINDS: Dict[str, Callable] = {}
+
+
+def register_cell_kind(name: str, override: bool = False) -> Callable:
+    def deco(fn: Callable) -> Callable:
+        if name in CELL_KINDS and not override:
+            raise ValueError(f"cell kind {name!r} already registered")
+        CELL_KINDS[name] = fn
+        return fn
+
+    return deco
+
+
+def get_cell_kind(name: str) -> Callable:
+    try:
+        return CELL_KINDS[name]
+    except KeyError:
+        raise KeyError(f"unknown cell kind {name!r}; known: "
+                       f"{sorted(CELL_KINDS)}") from None
+
+
+def _median_ios(op, x0, k, n, dtype, pol) -> float:
+    """Median IOS milliseconds over `repeats` independent runs."""
+    from ..core.measure import ios
+
+    samples = []
+    for r in range(int(pol["repeats"])):
+        if k <= 1:
+            t = ios.run_ios(op, x0, iters=pol["iters"], warmup=pol["warmup"])
+        else:
+            t = ios.run_ios_batched(op, n, k, iters=pol["iters"],
+                                    warmup=pol["warmup"], dtype=dtype,
+                                    seed=pol["seed"] + r)
+        samples.append(np.asarray(t))
+    return float(np.median(np.concatenate(samples)))
+
+
+def _verify_original_space(op_full, mat, k, dtype, tol, seed) -> float:
+    """Max relative error of the permutation-carrying operator against the
+    numpy oracle in the ORIGINAL index space (exercises perm/iperm)."""
+    import jax.numpy as jnp
+
+    rng = np.random.default_rng(seed)
+    if k <= 1:
+        x = rng.standard_normal(mat.n)
+        got = np.asarray(op_full(jnp.asarray(x, dtype)))
+        want = mat.spmv(x)
+    else:
+        x = rng.standard_normal((mat.n, k))
+        got = np.asarray(op_full.matmul(jnp.asarray(x, dtype)))
+        want = np.stack([mat.spmv(x[:, j]) for j in range(k)], axis=1)
+    scale = float(np.abs(want).max()) + 1e-9
+    err = float(np.abs(got - want).max()) / scale
+    if err > tol:
+        raise AssertionError(
+            f"verify failed: rel_err={err:.3e} > {tol:.1e} "
+            f"({mat.m}x{mat.n} matrix, k={k})")
+    return err
+
+
+@register_cell_kind("spmv")
+def measure_spmv_cell(cell, mat) -> dict:
+    """All measurements for one (matrix, scheme, machine point, k) cell."""
+    import jax.numpy as jnp
+
+    from ..api import SpmvProblem, plan
+    from ..core.measure import cg, ios, parallel_model
+    from ..core.sparse import metrics, partition
+
+    pol = cell.policy_dict()
+    dtype = jnp.dtype(cell.dtype)
+    hints = {"seed": pol["seed"]}
+    if pol["use_kernel"] != "auto":
+        hints["use_kernel"] = pol["use_kernel"]
+    # one plan() + build() through the pipeline facade: repeat campaigns
+    # reload plan + device arrays from the plan store (plan time -> ~0)
+    pl = plan(SpmvProblem(mat, k=cell.k, dtype=cell.dtype, hints=hints),
+              reorder=cell.scheme, engine=cell.engine, probe=pol["probe"])
+    rmat = pl.reordered_matrix()
+    rec = {
+        "m": int(mat.m), "n": int(mat.n), "nnz": int(rmat.nnz),
+        # plan-time accounting (paper methodology: preprocessing is
+        # reported separately from SpMV run-time, never folded in)
+        "resolved_scheme": pl.scheme,
+        "tuner_choice": pl.tune.engine,
+        "plan_label": pl.tune.label(),
+        "reorder_ms": pl.reorder_ms,
+        "tune_ms": pl.tune_ms,
+        "plan_ms": pl.plan_ms,
+        "plan_store_hit": bool(pl.cache_hit),
+    }
+    if cell.engine == "auto":
+        rec["tuner_label"] = pl.tune.label()
+        rec["tuner_cost_bytes"] = pl.tune.cost_bytes
+
+    need_op = pol["time_spmv"] or pol["with_yax"] or pol["with_cg"] \
+        or pol["verify"]
+    panel_engine = cell.engine
+    if need_op:
+        op_full = pl.build()
+        build_info = op_full.build_info
+        op = op_full.unwrap()     # measurements run in the reordered space
+        rec.update({
+            "engine": build_info["engine"],
+            "format_build_ms": build_info["build_ms"],
+            "op_cache_hit": build_info["cache_hit"],
+            "op_load_ms": build_info["load_ms"],
+        })
+        # panels use the CONCRETE engine the tuner chose for the whole
+        # matrix (never "auto": re-tuning per panel would time the tuner)
+        panel_engine = build_info["engine"] if cell.engine == "auto" \
+            else cell.engine
+        if pol["verify"]:
+            rec["verify_rel_err"] = _verify_original_space(
+                op_full, mat, cell.k, dtype, pol.get("verify_tol", 1e-4),
+                pol["seed"])
+        rng = np.random.default_rng(pol["seed"])
+        x0 = jnp.asarray(rng.standard_normal(rmat.n), dtype)
+        if pol["time_spmv"]:
+            ms = _median_ios(op, x0, cell.k, rmat.n, dtype, pol)
+            if cell.k <= 1:
+                rec["seq_ios_ms"] = ms
+                rec["seq_ios_gflops"] = float(
+                    ios.gflops(rmat.nnz, np.array([ms]))[0])
+                # aliases so k is a uniform axis in SpMM-shaped reports
+                rec["spmm_ms"] = ms
+                rec["per_vector_ms"] = ms
+            else:
+                rec["spmm_ms"] = ms
+                rec["per_vector_ms"] = ms / cell.k
+                rec["spmm_gflops"] = float(
+                    ios.gflops(rmat.nnz * cell.k, np.array([ms]))[0])
+        if pol["with_yax"] and cell.k <= 1:
+            yax = float(np.median(ios.run_yax(
+                op, x0, iters=pol["iters"], warmup=pol["warmup"])))
+            rec["seq_yax_ms"] = yax
+            rec["seq_yax_gflops"] = float(
+                ios.gflops(rmat.nnz, np.array([yax]))[0])
+        if pol["with_cg"] and cell.k <= 1:
+            cg_ms = float(np.median(cg.cg_measured(
+                op, x0, iters=pol["iters"], warmup=pol["warmup"])))
+            rec["cg_ms"] = cg_ms
+            rec["cg_gflops"] = float(
+                ios.gflops(rmat.nnz, np.array([cg_ms]))[0])
+
+    if pol["with_parallel"]:
+        for sched in ("static", "nnz_balanced"):
+            ms = parallel_model.modelled_parallel_ms(
+                rmat, cell.p, panel_engine, schedule=sched,
+                iters=max(6, pol["iters"] // 2))
+            rec[f"par_{sched}_ms"] = ms
+            rec[f"par_{sched}_gflops"] = float(
+                ios.gflops(rmat.nnz, np.array([ms]))[0])
+    if pol["with_metrics"]:
+        # structural metrics (analytic, exact) at this cell's p
+        panels_s = partition.static_partition(rmat, cell.p)
+        panels_b = partition.nnz_balanced_partition(rmat, cell.p)
+        rec["li_static"] = metrics.load_imbalance(rmat, panels_s)
+        rec["li_nnz_balanced"] = metrics.load_imbalance(rmat, panels_b)
+        rec["bandwidth"] = metrics.bandwidth(rmat)
+        rec["avg_row_bandwidth"] = metrics.avg_row_bandwidth(rmat)
+        rec["cut_volume"] = metrics.cut_volume(rmat, panels_s)
+        rec["block_fill_8x128"] = metrics.block_fill_ratio(rmat, 8, 128)
+    return rec
+
+
+# --------------------------------------------------------------------------
+# scheduling-policy cells (paper Fig. 4 adapted)
+# --------------------------------------------------------------------------
+def _rows_submatrix(mat, rows: np.ndarray):
+    from ..core.sparse.csr import CSRMatrix
+
+    rp = mat.rowptr.astype(np.int64)
+    counts = rp[rows + 1] - rp[rows]
+    idx = np.concatenate([np.arange(rp[r], rp[r + 1]) for r in rows]) \
+        if rows.size else np.empty(0, np.int64)
+    rowptr = np.zeros(rows.size + 1, dtype=np.int64)
+    rowptr[1:] = np.cumsum(counts)
+    return CSRMatrix(rowptr=rowptr.astype(np.int32), cols=mat.cols[idx],
+                     vals=mat.vals[idx], shape=(rows.size, mat.n))
+
+
+def _chunked_static_ms(mat, p: int, chunk: int, iters: int,
+                       seed: int) -> float:
+    """Modelled parallel time under static,chunk scheduling: each thread's
+    rows are a strided set; its time is measured on its own gathered
+    submatrix (includes the locality loss of striding). IOS semantics: the
+    panel's output refreshes x at ITS OWN row positions (x stays full-size —
+    feeding the short y back as x would silently clamp gather indices)."""
+    import time as _time
+
+    import jax.numpy as jnp
+
+    from ..core.measure import parallel_model
+    from ..core.sparse import partition
+    from ..core.spmv.ops import make_engine
+
+    panels = partition.chunked_cyclic_panels(mat.m, p, chunk)
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal(mat.n), jnp.float32)
+    worst = 0.0
+    for rows in panels:
+        sub = _rows_submatrix(mat, rows)
+        op = make_engine(sub, "csr", nnz_bucket=4096)
+        rows_dev = jnp.asarray(rows)
+        xi = x
+        times = []
+        for i in range(iters + 2):
+            t0 = _time.perf_counter()
+            y = op(xi)
+            y.block_until_ready()
+            if i >= 2:
+                times.append((_time.perf_counter() - t0) * 1e3)
+            xi = xi.at[rows_dev].set(y[: rows.size])
+        worst = max(worst, float(np.median(times)))
+    return worst + parallel_model.ALPHA_SYNC_MS
+
+
+@register_cell_kind("schedule")
+def measure_schedule_cell(cell, mat) -> dict:
+    """One (matrix, scheme, scheduling-policy) point; the policy is the
+    variant. The scheme axis is honored like everywhere else (the matrix
+    is permuted before panels are cut), so a schemes x variants schedule
+    spec measures what it claims."""
+    from ..core.measure import ios, parallel_model
+    from ..core.reorder import api as reorder_api
+
+    pol = cell.policy_dict()
+    if cell.scheme != "baseline":
+        mat = mat.permute(reorder_api.reorder(mat, cell.scheme,
+                                              pol["seed"]))
+    var = cell.variant
+    if var == "static_default":
+        ms = parallel_model.modelled_parallel_ms(
+            mat, cell.p, cell.engine, schedule="static", iters=pol["iters"])
+    elif var == "nnz_balanced":
+        ms = parallel_model.modelled_parallel_ms(
+            mat, cell.p, cell.engine, schedule="nnz_balanced",
+            iters=pol["iters"])
+    elif var.startswith("static_c"):
+        ms = _chunked_static_ms(mat, cell.p, int(var[len("static_c"):]),
+                                pol["iters"], pol["seed"])
+    else:
+        raise ValueError(f"unknown scheduling variant {var!r}")
+    return {
+        "m": int(mat.m), "n": int(mat.n), "nnz": int(mat.nnz),
+        "modelled_par_ms": ms,
+        "gflops": float(ios.gflops(mat.nnz, np.array([ms]))[0]),
+    }

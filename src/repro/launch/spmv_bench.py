@@ -136,15 +136,19 @@ def lower_halo(mesh: Mesh, halo: int = 128):
 
 def run_single(matrix: str, scheme: str = "baseline", engine: str = "auto",
                iters: int = 12, probe: bool = False,
-               write_results: bool = True, k: int = 1) -> dict:
+               write_results: bool = True, k: int = 1,
+               use_store: bool = True) -> dict:
     """Single-node tuned SpMV/SpMM benchmark for one (matrix, scheme) cell.
 
-    One plan() + build() through the pipeline facade (repro.api): the first
-    invocation pays reorder + tune + format conversion and persists the
-    plan; repeat invocations reload the plan AND the device arrays from the
-    plan store and only time the SpMV. Plan-time and run-time are reported
-    separately (paper §3 methodology — preprocessing is never folded into
-    SpMV time).
+    One one-cell ExperimentSpec through the experiment harness
+    (repro.experiments), measured into the SAME content-addressed result
+    store the benchmark campaigns use: the first invocation pays reorder +
+    tune + format conversion (the plan store persists those) and the
+    measurement itself; a repeat invocation is served entirely from the
+    result store (`store_hit=true`, zero new measurement). `--fresh`
+    (use_store=False) forces a re-measure. Plan-time and run-time are
+    reported separately (paper §3 methodology — preprocessing is never
+    folded into SpMV time).
 
     scheme may be "auto": the planner jointly selects (scheme, engine);
     the resolved choice is reported as `resolved_scheme`.
@@ -152,42 +156,44 @@ def run_single(matrix: str, scheme: str = "baseline", engine: str = "auto",
     k > 1 (--spmm) times the k-RHS SpMM path `op.matmul(X[n, k])` with a
     k-specialized tuning plan and reports amortized per-vector time.
     """
-    from ..api import SpmvProblem, plan as make_plan
-    from ..core.measure import ios
-    from ..matrices import suite
+    from ..experiments import (ExperimentSpec, MeasurePolicy, ResultStore,
+                               Runner)
 
     if k < 1:
         raise ValueError(f"--spmm batch width must be >= 1, got {k}")
-    mat = suite.get(matrix)
-    pl = make_plan(SpmvProblem(mat, k=k), reorder=scheme, engine=engine,
-                   probe=probe)
-    op = pl.build()
-    info = op.build_info
-    # measurement opts out of the original-index-space wrapper: time the
-    # bare reordered-space engine, exactly like the legacy path
-    med = float(np.median(ios.run_ios_batched(op.unwrap(), mat.n, k,
-                                              iters=iters)))
+    spec = ExperimentSpec(
+        name="spmv_single", matrices=(matrix,), schemes=(scheme,),
+        engines=(engine,), ks=(k,),
+        policy=MeasurePolicy(iters=iters, probe=probe, with_yax=False,
+                             with_parallel=False, with_metrics=False))
+    store = ResultStore(results_dir=RESULTS)
+    if not use_store:                       # --fresh: force a re-measure
+        store.delete(spec.cells()[0].key())
+    rep = Runner(spec, store=store, verbose=False).run()
+    cr = rep.records[0]
+    store_hit = cr["store_reused"]
+    med = cr["spmm_ms"]
     rec = {
         "matrix": matrix,
         "scheme": scheme,
-        "resolved_scheme": pl.scheme,
-        "engine": info["engine"],
-        "plan": info["plan"],
-        "plan_label": pl.label(),
-        "cache_hit": info["cache_hit"],
+        "resolved_scheme": cr["resolved_scheme"],
+        "engine": cr["engine"],
+        "plan_label": cr["plan_label"],
+        "cache_hit": cr["op_cache_hit"],
+        "store_hit": store_hit,
+        "cell_key": cr["cell_key"],
         "k": k,
-        "reorder_ms": pl.reorder_ms,
-        "tune_ms": pl.tune_ms,
-        "build_ms": info["build_ms"],
-        "load_ms": info["load_ms"],
+        "reorder_ms": cr["reorder_ms"],
+        "tune_ms": cr["tune_ms"],
+        "build_ms": cr["format_build_ms"],
+        "load_ms": cr["op_load_ms"],
         "spmv_ios_ms": med,
-        "per_vector_ms": med / k,
-        "spmv_ios_gflops": float(ios.gflops(mat.nnz * k,
-                                            np.array([med]))[0]),
+        "per_vector_ms": cr["per_vector_ms"],
+        "spmv_ios_gflops": cr.get("spmm_gflops", cr.get("seq_ios_gflops")),
     }
     tag = "spmm" if k > 1 else "spmv"
     print(f"[{tag}-single] {matrix}/{scheme} engine={rec['engine']} k={k} "
-          f"cache_hit={rec['cache_hit']} plan_ms="
+          f"store_hit={store_hit} cache_hit={rec['cache_hit']} plan_ms="
           f"{rec['tune_ms'] + rec['build_ms'] + rec['load_ms']:.1f} "
           f"{tag}_ms={med:.3f} per_vec_ms={rec['per_vector_ms']:.3f}",
           flush=True)
@@ -277,6 +283,8 @@ def main():
     ap.add_argument("--iters", type=int, default=12)
     ap.add_argument("--spmm", type=int, default=1, metavar="K",
                     help="batch width: time K-RHS SpMM instead of SpMV")
+    ap.add_argument("--fresh", action="store_true",
+                    help="bypass the result store and re-measure the cell")
     ap.add_argument("--serve-sim", action="store_true",
                     help="micro-batching service simulation over smoke "
                          "matrices")
@@ -301,7 +309,8 @@ def main():
         return
     if args.matrix:
         run_single(args.matrix, args.scheme, args.engine, iters=args.iters,
-                   probe=args.probe, k=args.spmm)
+                   probe=args.probe, k=args.spmm,
+                   use_store=not args.fresh)
         return
     if args.spmm != 1 or args.probe:
         ap.error("--spmm/--probe require --matrix (single-cell mode)")

@@ -1,0 +1,400 @@
+"""Experiment harness: spec enumeration, content-addressed store,
+resumable runner, strict report accessors, deprecation shims."""
+from __future__ import annotations
+
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro.core import registry
+from repro.experiments import (PRIMARY, Cell, ExperimentSpec, MeasurePolicy,
+                               MissingCellError, Report, ResultStore, Runner,
+                               paper_schemes)
+from repro.matrices import generators as G
+
+FAST = MeasurePolicy(iters=1, warmup=0, with_yax=False, with_parallel=False,
+                     with_metrics=False)
+
+
+@pytest.fixture()
+def stores(tmp_path, monkeypatch):
+    monkeypatch.setenv("REPRO_RESULT_STORE", str(tmp_path / "results"))
+    monkeypatch.setenv("REPRO_PLAN_CACHE", str(tmp_path / "plans"))
+    monkeypatch.setenv("REPRO_REORDER_CACHE", str(tmp_path / "reorder"))
+    monkeypatch.setenv("REPRO_OPERATOR_CACHE", str(tmp_path / "opcache"))
+    return tmp_path
+
+
+_MATS = {}
+
+
+def _get_matrix(name):
+    if name not in _MATS:
+        gen = {"tiny_banded": lambda: G.banded(192, 3, seed=0),
+               "tiny_stencil": lambda: G.stencil_2d(14, seed=1),
+               "tiny_powerlaw": lambda: G.power_law(256, alpha=1.9, seed=2)}
+        _MATS[name] = gen[name]()
+    return _MATS[name]
+
+
+def _runner(spec, **kw):
+    kw.setdefault("verbose", False)
+    kw.setdefault("get_matrix", _get_matrix)
+    return Runner(spec, **kw)
+
+
+# -- spec / cell identity ---------------------------------------------------
+
+class TestSpec:
+    def test_axis_cross_product(self):
+        spec = ExperimentSpec(name="t", matrices=("a", "b"),
+                              schemes=("baseline", "rcm"),
+                              engines=("csr", "ell"), ks=(1, 4),
+                              variants=("x", "y"))
+        assert len(spec.cells()) == 2 * 2 * 2 * 2 * 2
+
+    def test_profile_expansion(self):
+        spec = ExperimentSpec(name="t", matrices=("a",),
+                              profiles=(PRIMARY, "M2_csr_f64_p8"))
+        cells = spec.cells()
+        assert len(cells) == 2
+        assert {c.profile for c in cells} == {PRIMARY, "M2_csr_f64_p8"}
+        m2 = next(c for c in cells if c.profile == "M2_csr_f64_p8")
+        assert (m2.engine, m2.dtype, m2.p) == ("csr", "float64", 8)
+
+    def test_star_profiles_include_plugins(self):
+        registry.register_profile("Mtest_plugin", engine="csr", p=2)
+        try:
+            spec = ExperimentSpec(name="t", matrices=("a",), profiles="*")
+            assert "Mtest_plugin" in {c.profile for c in spec.cells()}
+        finally:
+            registry.PROFILE_REGISTRY.pop("Mtest_plugin")
+
+    def test_profiles_and_physical_axes_exclusive(self):
+        with pytest.raises(ValueError):
+            ExperimentSpec(name="t", matrices=("a",), profiles=(PRIMARY,),
+                           engines=("csr",))
+        # dtypes/ps would be silently ignored next to a profile — reject
+        with pytest.raises(ValueError):
+            ExperimentSpec(name="t", matrices=("a",), profiles=(PRIMARY,),
+                           dtypes=("float64",))
+        with pytest.raises(ValueError):
+            ExperimentSpec(name="t", matrices=("a",), profiles=(PRIMARY,),
+                           ps=(16,))
+
+    def test_key_is_content_addressed_not_named(self):
+        """A profile is presentation: the same physical point under a
+        profile name and under explicit axes shares one cell key."""
+        by_prof = ExperimentSpec(name="p", matrices=("a",),
+                                 profiles=(PRIMARY,)).cells()[0]
+        by_axes = ExperimentSpec(name="q", matrices=("a",),
+                                 engines=("csr",), dtypes=("float32",),
+                                 ps=(8,)).cells()[0]
+        assert by_prof.key() == by_axes.key()
+
+    def test_key_tracks_policy_but_not_reporting_knobs(self):
+        base = ExperimentSpec(name="t", matrices=("a",), engines=("csr",))
+        warm = ExperimentSpec(name="t", matrices=("a",), engines=("csr",),
+                              policy=MeasurePolicy(warmup=0))
+        amort = ExperimentSpec(name="t", matrices=("a",), engines=("csr",),
+                               policy=MeasurePolicy(amortize_iters=7))
+        assert base.cells()[0].key() != warm.cells()[0].key()
+        assert base.cells()[0].key() == amort.cells()[0].key()
+
+    def test_cg_profile_resolution_shares_non_cg_cells(self):
+        """Campaigns differing only in OTHER profiles' CG policy share
+        this profile's cells."""
+        a = ExperimentSpec(name="a", matrices=("m",), profiles=(PRIMARY,),
+                           policy=MeasurePolicy(cg_profiles=()))
+        b = ExperimentSpec(name="b", matrices=("m",),
+                           profiles=("M3_csr_f32_p4",),
+                           policy=MeasurePolicy(cg_profiles=(PRIMARY,)))
+        assert not b.cells()[0].policy_dict()["with_cg"]
+        c = ExperimentSpec(name="c", matrices=("m",),
+                           profiles=("M3_csr_f32_p4",),
+                           policy=MeasurePolicy(cg_profiles=()))
+        assert b.cells()[0].key() == c.cells()[0].key()
+        assert a.cells()[0].key() != b.cells()[0].key()  # different point
+
+    def test_paper_schemes_from_registry(self):
+        s = paper_schemes()
+        assert s[0] == "baseline" and s[-1] == "random"
+        assert {"rcm", "metis", "louvain", "patoh"} <= set(s)
+
+
+# -- store ------------------------------------------------------------------
+
+class TestStore:
+    def test_roundtrip_and_atomic_naming(self, tmp_path):
+        store = ResultStore(str(tmp_path))
+        store.put("k1", {"matrix": "a"}, {"v": 1.5})
+        entry = store.get("k1")
+        assert entry["record"] == {"v": 1.5} and entry["cell"]["matrix"] == "a"
+        # no tmp leftovers after the rename
+        assert [f for f in os.listdir(tmp_path)] == ["k1.json"]
+
+    def test_corrupt_truncated_and_alien_entries_read_as_missing(self, tmp_path):
+        store = ResultStore(str(tmp_path))
+        store.put("k1", {}, {"v": 1})
+        # truncated
+        with open(store.path("k1"), "w") as f:
+            f.write('{"schema": 1, "record": {"v"')
+        assert store.get("k1") is None
+        # valid json, alien schema
+        with open(store.path("k1"), "w") as f:
+            json.dump({"schema": 99, "record": {}}, f)
+        assert store.get("k1") is None
+        # not a dict
+        with open(store.path("k1"), "w") as f:
+            json.dump([1, 2], f)
+        assert store.get("k1") is None
+        # binary garbage
+        with open(store.path("k1"), "wb") as f:
+            f.write(b"\x00\xff\x00garbage")
+        assert store.get("k1") is None
+        assert store.get("never_written") is None
+
+
+# -- runner -----------------------------------------------------------------
+
+class TestRunner:
+    def test_resumable_and_partial_grid_delta(self, stores):
+        spec = ExperimentSpec(name="t", matrices=("tiny_banded",),
+                              schemes=("baseline", "rcm"),
+                              engines=("csr",), policy=FAST)
+        r1 = _runner(spec).run()
+        assert (r1.measured, r1.reused) == (2, 0)
+        r2 = _runner(spec).run()
+        assert (r2.measured, r2.reused) == (0, 2)
+        # adding an axis value measures ONLY the delta
+        wider = ExperimentSpec(name="t", matrices=("tiny_banded",
+                                                   "tiny_stencil"),
+                               schemes=("baseline", "rcm"),
+                               engines=("csr",), policy=FAST)
+        r3 = _runner(wider).run()
+        assert (r3.measured, r3.reused) == (2, 2)
+
+    def test_corrupt_cell_remeasured_not_fatal(self, stores):
+        spec = ExperimentSpec(name="t", matrices=("tiny_banded",),
+                              schemes=("baseline",), engines=("csr",),
+                              policy=FAST)
+        store = ResultStore()
+        r1 = _runner(spec, store=store).run()
+        assert r1.measured == 1
+        key = spec.cells()[0].key()
+        with open(store.path(key), "w") as f:
+            f.write("{torn")
+        r2 = _runner(spec, store=store).run()
+        assert (r2.measured, r2.reused) == (1, 0)
+        assert store.get(key) is not None     # healed in place
+
+    def test_on_error_record_continues_and_does_not_persist(self, stores):
+        spec = ExperimentSpec(name="t", matrices=("tiny_banded",),
+                              schemes=("baseline", "nonexistent_scheme"),
+                              engines=("csr",), policy=FAST)
+        rep = _runner(spec, on_error="record").run()
+        assert rep.measured == 1 and len(rep.failures) == 1
+        assert "nonexistent_scheme" in rep.failures[0]["error"]
+        # failures are retried on re-run (nothing bogus persisted)
+        rep2 = _runner(spec, on_error="record").run()
+        assert rep2.reused == 1 and len(rep2.failures) == 1
+        with pytest.raises(KeyError):
+            _runner(spec).run()               # default on_error="raise"
+
+    def test_spmm_cells_and_verify(self, stores):
+        spec = ExperimentSpec(
+            name="t", matrices=("tiny_powerlaw",), schemes=("rcm",),
+            engines=("csr",), ks=(4,),
+            policy=MeasurePolicy(iters=1, warmup=0, with_yax=False,
+                                 with_parallel=False, with_metrics=False,
+                                 verify=True))
+        rep = _runner(spec).run()
+        rec = rep.cell("tiny_powerlaw", "rcm")
+        assert rec["per_vector_ms"] == pytest.approx(rec["spmm_ms"] / 4)
+        assert rec["verify_rel_err"] < 1e-4
+
+    def test_schedule_kind(self, stores):
+        spec = ExperimentSpec(
+            name="t", matrices=("tiny_stencil",),
+            schemes=("baseline", "random"),
+            engines=("csr",), ps=(2,), kind="schedule",
+            variants=("static_default", "static_c16", "nnz_balanced"),
+            policy=MeasurePolicy(iters=2, warmup=0))
+        rep = _runner(spec).run()
+        for scheme in spec.schemes:
+            for var in spec.variants:
+                rec = rep.cell("tiny_stencil", scheme, variant=var)
+                assert rec["modelled_par_ms"] > 0 and rec["gflops"] > 0
+
+    def test_schedule_kind_applies_scheme(self, stores, monkeypatch):
+        """The scheme axis permutes the matrix before panels are cut —
+        a non-identity scheme must reach the measurement reordered."""
+        from repro.core.reorder import api as reorder_api
+        from repro.experiments import cells as cells_mod
+        from repro.experiments.spec import Cell
+
+        calls = []
+        real = reorder_api.reorder
+        monkeypatch.setattr(
+            reorder_api, "reorder",
+            lambda mat, scheme, *a, **kw: calls.append(scheme)
+            or real(mat, scheme, *a, **kw))
+        pol = tuple(sorted(MeasurePolicy(iters=1, warmup=0)
+                           .resolve("").items()))
+        mat = _get_matrix("tiny_powerlaw")
+        for scheme in ("baseline", "random"):
+            cells_mod.measure_schedule_cell(
+                Cell(kind="schedule", matrix="m", scheme=scheme,
+                     engine="csr", dtype="float32", p=2, k=1,
+                     variant="nnz_balanced", policy=pol), mat)
+        assert calls == ["random"]   # baseline untouched, random permuted
+
+    def test_full_protocol_fields(self, stores):
+        spec = ExperimentSpec(
+            name="t", matrices=("tiny_banded",), schemes=("baseline",),
+            profiles=(PRIMARY,),
+            policy=MeasurePolicy(iters=2, warmup=1,
+                                 cg_profiles=(PRIMARY,)))
+        rec = _runner(spec).run().cell("tiny_banded", "baseline")
+        for f in ("seq_ios_ms", "seq_yax_ms", "cg_ms", "par_static_ms",
+                  "par_nnz_balanced_ms", "li_static", "bandwidth",
+                  "block_fill_8x128", "tune_ms", "format_build_ms"):
+            assert f in rec, f
+
+
+# -- report -----------------------------------------------------------------
+
+def _fake_report(values):
+    """Report over synthetic records: values[scheme][matrix] -> gflops."""
+    schemes = tuple(values)
+    matrices = tuple(next(iter(values.values())))
+    spec = ExperimentSpec(name="fake", matrices=matrices, schemes=schemes,
+                          engines=("csr",))
+    entries = [(c, {"seq_ios_gflops": values[c.scheme][c.matrix]})
+               for c in spec.cells()]
+    return spec, Report(spec, entries)
+
+
+class TestReport:
+    def test_grid_and_speedup(self):
+        _, rep = _fake_report({"baseline": {"a": 1.0, "b": 2.0},
+                               "rcm": {"a": 2.0, "b": 1.0}})
+        g = rep.grid("seq_ios_gflops", ["a", "b"], ["baseline", "rcm"])
+        assert np.allclose(g, [[1, 2], [2, 1]])
+        sp = rep.speedup("seq_ios_gflops", ["a", "b"], ["rcm"])
+        assert np.allclose(sp, [[2.0, 0.5]])
+
+    def test_missing_cell_raises_with_coords(self):
+        _, rep = _fake_report({"baseline": {"a": 1.0}})
+        with pytest.raises(MissingCellError) as ei:
+            rep.grid("seq_ios_gflops", ["a"], ["baseline", "rcm"])
+        assert "rcm" in str(ei.value) and "'a'" in str(ei.value)
+
+    def test_missing_field_raises_naming_field(self):
+        _, rep = _fake_report({"baseline": {"a": 1.0}})
+        with pytest.raises(MissingCellError) as ei:
+            rep.value("cg_gflops", "a", "baseline")
+        assert "cg_gflops" in str(ei.value)
+
+    def test_no_silent_nan(self):
+        """The failure mode the redesign kills: absent cells must never
+        turn into NaN speedups that skew consistency stats."""
+        _, rep = _fake_report({"baseline": {"a": 1.0}, "rcm": {"a": 0.0}})
+        g = rep.grid("seq_ios_gflops", ["a"], ["baseline", "rcm"])
+        assert np.isfinite(g).all()
+        with pytest.raises(MissingCellError):
+            rep.speedup("seq_ios_gflops", ["a", "ghost"], ["rcm"])
+
+    def test_stats_wrappers(self):
+        _, rep = _fake_report({"baseline": {"a": 1.0, "b": 1.0},
+                               "rcm": {"a": 2.0, "b": 0.5}})
+        prof = rep.performance_profile("seq_ios_gflops", ["a", "b"],
+                                       ["baseline", "rcm"],
+                                       np.array([1.0, 4.0]))
+        assert prof.shape == (2, 2) and np.allclose(prof[:, 1], 1.0)
+        counts = rep.speedup_buckets("seq_ios_gflops", ["a", "b"], ["rcm"])
+        assert counts.sum() == 2
+        win = rep.pairwise_win_rates("seq_ios_gflops", ["a", "b"],
+                                     ["baseline", "rcm"])
+        assert win[1, 0] == 0.5
+
+    def test_bench_summary_written_atomically(self, tmp_path):
+        _, rep = _fake_report({"baseline": {"a": 1.0, "b": 1.0},
+                               "rcm": {"a": 2.0, "b": 2.0}})
+        path = str(tmp_path / "BENCH_spmv.json")
+        rep.write_bench_summary(path)
+        with open(path) as f:
+            summary = json.load(f)
+        assert summary["schema"] == 1
+        assert summary["speedup_vs_baseline"]["rcm"] == pytest.approx(2.0)
+        assert not [p for p in os.listdir(tmp_path) if p.endswith(".tmp")]
+
+    def test_break_even(self, stores):
+        spec = ExperimentSpec(name="t", matrices=("tiny_banded",),
+                              schemes=("baseline", "rcm"),
+                              engines=("csr",), policy=FAST)
+        rep = _runner(spec).run()
+        be = rep.break_even("seq_ios_ms")
+        assert len(be) == 1                     # one non-baseline cell
+        item = be[0]
+        assert (item["matrix"], item["scheme"]) == ("tiny_banded", "rcm")
+        assert item["break_even_iters"] > 0     # inf allowed (no saving)
+
+    def test_break_even_one_entry_per_machine_point(self):
+        """Multi-profile campaigns must not collapse per-machine entries."""
+        spec = ExperimentSpec(name="fake", matrices=("a",),
+                              schemes=("baseline", "rcm"),
+                              profiles=(PRIMARY, "M3_csr_f32_p4"))
+        entries = [(c, {"seq_ios_ms": 1.0 if c.scheme == "baseline"
+                        else 0.5}) for c in spec.cells()]
+        be = Report(spec, entries).break_even("seq_ios_ms")
+        assert len(be) == 2
+        assert {e["profile"] for e in be} == {PRIMARY, "M3_csr_f32_p4"}
+
+
+# -- machine-profile registry ----------------------------------------------
+
+class TestProfiles:
+    def test_builtins_registered(self):
+        assert PRIMARY == "M1_csr_f32_p8"
+        assert registry.get_profile(PRIMARY).primary
+        assert registry.get_profile("M5_auto_f32_p8").engine == "auto"
+
+    def test_duplicate_rejected_unless_override(self):
+        with pytest.raises(ValueError):
+            registry.register_profile(PRIMARY)
+        registry.register_profile(PRIMARY, primary=True, override=True)
+        assert registry.primary_profile() == PRIMARY
+
+    def test_unknown_profile_message(self):
+        with pytest.raises(KeyError, match="unknown profile"):
+            registry.get_profile("M99_nope")
+
+
+# -- deprecation shims ------------------------------------------------------
+
+class TestLegacyShims:
+    def test_run_campaign_and_grid_shims(self, stores):
+        from benchmarks import common
+
+        with pytest.warns(DeprecationWarning):
+            recs = common.run_campaign(matrices=["smoke_banded"],
+                                       schemes=["baseline"], iters=2,
+                                       verbose=False)
+        key = f"{common.PRIMARY}|smoke_banded|baseline"
+        assert key in recs and recs[key]["seq_ios_ms"] > 0
+        with pytest.warns(DeprecationWarning):
+            g = common.grid(recs, common.PRIMARY, ["smoke_banded", "ghost"],
+                            ["baseline"], "seq_ios_gflops")
+        assert np.isfinite(g[0, 0]) and np.isnan(g[0, 1])
+
+    def test_measure_cell_shim(self, stores):
+        from benchmarks import common
+
+        with pytest.warns(DeprecationWarning):
+            rec = common.measure_cell(_get_matrix("tiny_banded"), "baseline",
+                                      dict(engine="csr", dtype="float32",
+                                           p=2), iters=1, with_cg=False)
+        assert rec["seq_ios_ms"] > 0 and "li_static" in rec

@@ -1,0 +1,139 @@
+"""Property tests for the paper-statistics kernels in measure/profiles.py
+(Dolan-Moré profiles, speedup buckets, cross-machine consistency).
+
+Runs under real hypothesis when installed, else the deterministic stub in
+conftest.py."""
+from __future__ import annotations
+
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.measure import profiles
+
+SEEDS = st.integers(min_value=0, max_value=2**31 - 1)
+
+
+def _perf(seed, s, m, low=0.1, high=10.0):
+    rng = np.random.default_rng(seed)
+    return low + (high - low) * rng.random((s, m))
+
+
+# -- performance_profile ----------------------------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(SEEDS, st.integers(min_value=1, max_value=6),
+       st.integers(min_value=1, max_value=12))
+def test_profile_bounds_monotone_and_best_covers(seed, s, m):
+    perf = _perf(seed, s, m)
+    taus = np.array([1.0, 1.1, 1.5, 2.0, 1e9])
+    prof = profiles.performance_profile(perf, taus)
+    assert prof.shape == (s, len(taus))
+    assert ((prof >= 0) & (prof <= 1)).all()
+    # nondecreasing in tau, and every scheme reaches 1 at tau -> inf
+    assert (np.diff(prof, axis=1) >= -1e-12).all()
+    assert np.allclose(prof[:, -1], 1.0)
+    # at tau=1 every matrix has at least one winning scheme
+    assert prof[:, 0].sum() >= 1.0 - 1e-12
+
+
+@settings(max_examples=15, deadline=None)
+@given(SEEDS, st.integers(min_value=1, max_value=6),
+       st.integers(min_value=1, max_value=12))
+def test_profile_all_schemes_tied(seed, s, m):
+    """Ties: when every scheme performs identically, each is 'within tau
+    of the best' everywhere — the profile is 1.0 for all schemes at every
+    tau >= 1 (no winner is crowned arbitrarily)."""
+    row = _perf(seed, 1, m)
+    perf = np.repeat(row, s, axis=0)
+    prof = profiles.performance_profile(perf, np.array([1.0, 2.0]))
+    assert np.allclose(prof, 1.0)
+
+
+@settings(max_examples=15, deadline=None)
+@given(SEEDS, st.integers(min_value=1, max_value=12))
+def test_profile_single_scheme_is_identically_one(seed, m):
+    """A single scheme is trivially the best on every matrix."""
+    perf = _perf(seed, 1, m)
+    prof = profiles.performance_profile(perf, np.array([1.0, 1.5]))
+    assert np.allclose(prof, 1.0)
+
+
+# -- consistency_ratio ------------------------------------------------------
+
+def test_consistency_empty_candidate_set_is_vacuously_consistent():
+    # no matrix exceeds tau on any machine -> |CCS| = 0, Consistent% = 1
+    s = np.array([[1.0, 0.9], [1.05, 1.0]])
+    cons, n = profiles.consistency_ratio(s, tau=1.5)
+    assert (cons, n) == (1.0, 0)
+    # degenerate shapes
+    cons, n = profiles.consistency_ratio(np.ones((1, 0)), tau=1.1)
+    assert (cons, n) == (1.0, 0)
+
+
+@settings(max_examples=25, deadline=None)
+@given(SEEDS, st.integers(min_value=1, max_value=5),
+       st.integers(min_value=1, max_value=15))
+def test_consistency_ccs_monotone_in_tau(seed, machines, m):
+    """tau ordering: raising tau can only SHRINK the candidate set
+    (speedup > tau is a stricter filter), and Consistent% stays in
+    [0, 1] throughout."""
+    rng = np.random.default_rng(seed)
+    sp = 0.25 + 3.0 * rng.random((machines, m))
+    last_n = None
+    for tau in (1.05, 1.1, 1.25, 1.5, 2.0, 3.0):
+        cons, n = profiles.consistency_ratio(sp, tau)
+        assert 0.0 <= cons <= 1.0
+        if last_n is not None:
+            assert n <= last_n
+        last_n = n
+
+
+@settings(max_examples=25, deadline=None)
+@given(SEEDS, st.integers(min_value=1, max_value=5),
+       st.integers(min_value=1, max_value=15),
+       st.sampled_from([1.1, 1.25, 1.5, 2.0]))
+def test_consistency_matches_definition(seed, machines, m, tau):
+    """Eq. 1 re-derived independently: IS ⊆ CCS and
+    Consistent% = 1 - |IS|/|CCS|."""
+    rng = np.random.default_rng(seed)
+    sp = 0.25 + 3.0 * rng.random((machines, m))
+    cons, n = profiles.consistency_ratio(sp, tau)
+    ccs = [j for j in range(m) if (sp[:, j] > tau).any()]
+    is_ = [j for j in ccs if (sp[:, j] < 1.0).any()]
+    assert n == len(ccs)
+    if ccs:
+        assert np.isclose(cons, 1.0 - len(is_) / len(ccs))
+    else:
+        assert cons == 1.0
+
+
+# -- speedup_buckets --------------------------------------------------------
+
+def test_bucket_boundary_values_land_left_inclusive():
+    """Each boundary belongs to the bucket it opens (histogram bins are
+    left-inclusive): 1.0 is '1-1.1', 1.1 is '1.1-1.25', ..., 2.0 is '>=2'."""
+    boundaries = [1.0, 1.1, 1.25, 1.5, 2.0]
+    counts = profiles.speedup_buckets(np.array([boundaries]))
+    # bucket 0 is '<1': empty; each boundary value fills exactly the
+    # bucket it opens
+    assert counts[0].tolist() == [0, 1, 1, 1, 1, 1]
+    assert counts.sum() == len(boundaries)
+    # just below each boundary falls one bucket lower
+    eps = 1e-9
+    below = [b - eps for b in boundaries]
+    counts2 = profiles.speedup_buckets(np.array([below]))
+    assert counts2[0].tolist() == [1, 1, 1, 1, 1, 0]
+
+
+@settings(max_examples=25, deadline=None)
+@given(SEEDS, st.integers(min_value=1, max_value=6),
+       st.integers(min_value=1, max_value=20))
+def test_buckets_partition_all_matrices(seed, s, m):
+    """Buckets partition the speedup axis: every matrix lands in exactly
+    one bucket per scheme."""
+    rng = np.random.default_rng(seed)
+    sp = 0.1 + 4.0 * rng.random((s, m))
+    counts = profiles.speedup_buckets(sp)
+    assert counts.shape == (s, len(profiles.BUCKET_LABELS))
+    assert (counts.sum(axis=1) == m).all()

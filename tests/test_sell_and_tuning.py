@@ -130,20 +130,31 @@ def test_tuner_prefers_ell_on_uniform_rows_and_not_on_skew():
 
 def test_operator_cache_hit(tmp_path, monkeypatch):
     """Acceptance: second spmv_bench invocation on the same (matrix, scheme)
-    reloads the tuned operator — no reconversion, no re-tune."""
+    reloads the tuned operator — no reconversion, no re-tune. use_store=False
+    (--fresh) forces the re-MEASURE so the plan-store reload is what's
+    exercised; with the result store on, the second invocation skips even
+    the measurement (store_hit)."""
     monkeypatch.setenv("REPRO_OPERATOR_CACHE", str(tmp_path / "opcache"))
     monkeypatch.setenv("REPRO_REORDER_CACHE", str(tmp_path / "reorder"))
     from repro.launch.spmv_bench import run_single
 
-    r1 = run_single("smoke_powerlaw", "rcm", iters=2, write_results=False)
-    r2 = run_single("smoke_powerlaw", "rcm", iters=2, write_results=False)
+    r1 = run_single("smoke_powerlaw", "rcm", iters=2, write_results=False,
+                    use_store=False)
+    r2 = run_single("smoke_powerlaw", "rcm", iters=2, write_results=False,
+                    use_store=False)
     assert not r1["cache_hit"]
     assert r2["cache_hit"]
     assert r2["tune_ms"] == 0.0 and r2["build_ms"] == 0.0
     assert r2["engine"] == r1["engine"]
     # a different scheme is a different cache entry
-    r3 = run_single("smoke_powerlaw", "baseline", iters=2, write_results=False)
+    r3 = run_single("smoke_powerlaw", "baseline", iters=2,
+                    write_results=False, use_store=False)
     assert not r3["cache_hit"]
+    # result-store layer: the same cell measured above is now served
+    # without any new measurement
+    r4 = run_single("smoke_powerlaw", "rcm", iters=2, write_results=False)
+    assert r4["store_hit"] and not r2["store_hit"]
+    assert r4["spmv_ios_ms"] == r2["spmv_ios_ms"]
 
 
 def test_operator_cache_roundtrip_all_engines(tmp_path, monkeypatch):
