@@ -6,9 +6,11 @@ contiguous chunk) >= static,chunk for chunk in {16, 64} — temporal
 locality grows with chunk size. Parallel times come from the calibrated
 panel model (modelled parallel, labelled).
 
-A spec over the "schedule" cell kind: the scheduling policy is the
-variants axis (static_c<chunk> cells time each thread's strided row set
-on its own gathered submatrix — see repro/experiments/cells.py).
+Since PR 5 the policies are PARTITIONERS of an 8-device 1d_rows topology
+("parallel" cell kind): static, chunked_cyclic_c16/c64 (whose grouping
+permutation makes each thread's strided row set a contiguous panel —
+including its striding locality loss), and nnz_balanced. Same store, same
+CSV schema as before.
 """
 from __future__ import annotations
 
@@ -16,21 +18,32 @@ import numpy as np
 
 from repro.core.measure import profiles
 from repro.experiments import ExperimentSpec, MeasurePolicy
+from repro.experiments.cells import parallel_variant
 from repro.matrices import suite
 
 from . import common
 from .common import RESULTS_DIR, write_csv
 
 P = 8
-POLICIES = ("static_default", "static_c16", "static_c64", "nnz_balanced")
+# CSV policy label -> partitioner (the legacy fig-4 naming is the schema)
+POLICY_PARTITIONERS = {
+    "static_default": "static",
+    "static_c16": "chunked_cyclic_c16",
+    "static_c64": "chunked_cyclic_c64",
+    "nnz_balanced": "nnz_balanced",
+}
+POLICIES = tuple(POLICY_PARTITIONERS)
 
 
 def spec(quick: bool = False) -> ExperimentSpec:
     mats = suite.locality_names()[:4] if quick else suite.locality_names()
     return ExperimentSpec(
         name="fig4_scheduling", matrices=tuple(mats), schemes=("baseline",),
-        engines=("csr",), ps=(P,), variants=POLICIES, kind="schedule",
-        policy=MeasurePolicy(iters=4 if quick else 6))
+        engines=("csr",), ps=(P,), kind="parallel",
+        variants=tuple(parallel_variant("1d_rows", p)
+                       for p in POLICY_PARTITIONERS.values()),
+        policy=MeasurePolicy(iters=4 if quick else 6, with_yax=False,
+                             with_parallel=False, with_metrics=False))
 
 
 def run(quick: bool = False):
@@ -40,7 +53,8 @@ def run(quick: bool = False):
     summary = {p: [] for p in POLICIES}
     for name in sp.matrices:
         for pol in POLICIES:
-            rec = rep.cell(name, "baseline", variant=pol)
+            var = parallel_variant("1d_rows", POLICY_PARTITIONERS[pol])
+            rec = rep.cell(name, "baseline", variant=var)
             rows.append([name, pol, round(rec["modelled_par_ms"], 3),
                          round(rec["gflops"], 4)])
             summary[pol].append(rec["gflops"])

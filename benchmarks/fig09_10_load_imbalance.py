@@ -1,18 +1,24 @@
 """Paper Figs. 9 & 10: nnz load imbalance of the static schedule under each
 reordering, absolute (Fig. 9, 64 panels) and relative to baseline (Fig. 10).
-These are exact analytic quantities (no timing) — a metrics-only spec at
-p=64 (time_spmv=False cells never build an operator)."""
+These are exact analytic quantities (no timing) — since PR 5 a "parallel"
+campaign over the topology-aware facade: each cell plans a 64-device
+1d_rows topology with the static partitioner and records the partition-
+quality metrics (LI, cut volume, halo width) alongside the modelled
+collective bytes, all in the shared result store (time_spmv=False cells
+never build an operator)."""
 from __future__ import annotations
 
 import numpy as np
 
 from repro.experiments import ExperimentSpec, MeasurePolicy
+from repro.experiments.cells import parallel_variant
 from repro.matrices import suite
 
 from . import common
 from .common import RESULTS_DIR, write_csv
 
 P64 = 64
+VARIANT = parallel_variant("1d_rows", "static")
 
 
 def spec(quick: bool = False) -> ExperimentSpec:
@@ -22,16 +28,16 @@ def spec(quick: bool = False) -> ExperimentSpec:
             else suite.bench_names()[:12] + suite.locality_names())
     return ExperimentSpec(
         name="fig9_li", matrices=tuple(mats), schemes=tuple(common.SCHEMES),
-        engines=("csr",), ps=(P64,),
+        engines=("csr",), ps=(P64,), variants=(VARIANT,), kind="parallel",
         policy=MeasurePolicy(time_spmv=False, with_yax=False,
-                             with_parallel=False, with_metrics=True))
+                             with_parallel=False, with_metrics=False))
 
 
 def run(quick: bool = False):
     sp = spec(quick)
     rep = common.campaign_report(sp)
     mats, schemes = sp.matrices, common.SCHEMES
-    li = rep.grid("li_static", mats, schemes)          # [scheme, matrix]
+    li = rep.grid("li", mats, schemes)                 # [scheme, matrix]
     rows = [[name, s, round(float(li[i, j]), 4)]
             for j, name in enumerate(mats) for i, s in enumerate(schemes)]
     write_csv(f"{RESULTS_DIR}/fig09_load_imbalance.csv",

@@ -1,33 +1,54 @@
 """Paper Fig. 11: nnz-balanced vs static scheduling speedups (reverse CDF)
 per scheme. Claim: balance-improving schemes (METIS/PaToH/Louvain) lose
 their edge under an nnz-balanced schedule; RCM's curves coincide.
-A pure view over the locality campaign."""
+Since PR 5 a "parallel" campaign over the topology-aware facade: the two
+schedules are the static / nnz_balanced PARTITIONERS of an 8-device
+1d_rows topology, each cell timing the plan's own panels with the
+calibrated modelled-parallel protocol (same store as figs 4/9/10)."""
 from __future__ import annotations
 
 import numpy as np
 
 from repro.core.measure import profiles
+from repro.experiments import ExperimentSpec, MeasurePolicy
+from repro.experiments.cells import parallel_variant
 from repro.matrices import suite
 
 from . import common
 from .common import RESULTS_DIR, write_csv
 
+P = 8
+SCHEDULES = ("static", "nnz_balanced")
+
+
+def spec(iters: int = 12) -> ExperimentSpec:
+    return ExperimentSpec(
+        name="fig11_nnz_balanced", matrices=tuple(suite.locality_names()),
+        schemes=tuple(common.SCHEMES), engines=("csr",), ps=(P,),
+        variants=tuple(parallel_variant("1d_rows", s) for s in SCHEDULES),
+        kind="parallel",
+        policy=MeasurePolicy(iters=iters, with_yax=False,
+                             with_parallel=False, with_metrics=False))
+
 
 def run(quick: bool = False):
-    mats = suite.locality_names()
-    rep = common.campaign_report(common.locality_spec())
+    sp = spec(iters=8 if quick else 12)
+    mats = sp.matrices
+    rep = common.campaign_report(sp)
     schemes = [s for s in common.SCHEMES if s != "baseline"]
-    sp_static = rep.speedup("par_static_gflops", mats, schemes)
-    sp_bal = rep.speedup("par_nnz_balanced_gflops", mats, schemes)
+    sp_by_sched = {
+        sched: rep.speedup("gflops", mats, schemes,
+                           variant=parallel_variant("1d_rows", sched))
+        for sched in SCHEDULES}
     rows, out = [], {}
     for i, s in enumerate(schemes):
-        for kind, sp in [("static", sp_static[i]),
-                         ("nnz_balanced", sp_bal[i])]:
-            v, c = profiles.reverse_cdf(sp)
+        for kind in SCHEDULES:
+            v, c = profiles.reverse_cdf(sp_by_sched[kind][i])
             for vi, ci in zip(v, c):
                 rows.append([s, kind, round(float(vi), 4),
                              round(float(ci), 4)])
-        gap = float(np.median(sp_static[i]) - np.median(sp_bal[i]))
+        gap = float(np.median(sp_by_sched["static"][i])
+                    - np.median(sp_by_sched["nnz_balanced"][i]))
         out[f"{s}_static_minus_balanced_median"] = round(gap, 4)
     write_csv(f"{RESULTS_DIR}/fig11_nnz_balanced.csv",
               ["scheme", "schedule", "speedup", "rev_cdf"], rows)

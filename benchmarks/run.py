@@ -111,14 +111,105 @@ def smoke(matrices=None) -> int:
     return failures
 
 
+def smoke_parallel_spec(matrices=None, devices: int = 8):
+    from repro.experiments import ExperimentSpec, MeasurePolicy
+    from repro.experiments.cells import parallel_variant
+
+    if devices < 2:
+        raise SystemExit(f"--smoke-parallel needs --devices >= 2, "
+                         f"got {devices}")
+    return ExperimentSpec(
+        name="smoke_parallel",
+        matrices=tuple(matrices or ("smoke_banded", "smoke_powerlaw")),
+        schemes=("baseline", "rcm"), engines=("auto",), ps=(devices,),
+        kind="parallel",
+        variants=(parallel_variant("1d_rows", "nnz_balanced"),
+                  parallel_variant("2d_panels", "nnz_balanced")),
+        # verify gates every cell on the ShardedOperator's original-
+        # index-space oracle; on an 8-device host (XLA_FLAGS in CI) this
+        # exercises the real shard_map collectives, not the simulation
+        policy=MeasurePolicy(iters=3, warmup=1, verify=True,
+                             with_yax=False, with_parallel=False,
+                             with_metrics=False))
+
+
+def smoke_parallel(matrices=None, devices: int = 8) -> int:
+    """Distributed-smoke campaign + resumability check for CI.
+    Returns failure count."""
+    from . import common
+
+    spec = smoke_parallel_spec(matrices, devices)
+    store = common.result_store()
+    rep = common.Runner(spec, store=store, verbose=False,
+                        on_error="record").run()
+    print("name,us_per_call,derived")
+    for rec in rep.records:
+        derived = {"layout": rec["layout"], "engine": rec.get("engine", "?"),
+                   "sched": rec.get("comm_schedule", "?"),
+                   "comm_B": rec.get("comm_bytes_per_spmv"),
+                   "par_ms": round(rec.get("modelled_par_ms",
+                                           float("nan")), 3),
+                   "sim": rec.get("simulated"),
+                   "store": "hit" if rec["store_reused"] else "miss+measure",
+                   "verify_rel_err": round(rec.get("verify_rel_err", -1.0),
+                                           8)}
+        print(f"{rec['matrix']}_{rec['scheme']}_{rec['layout']}"
+              f"_{rec['partitioner']},"
+              f"{rec['runner_wall_s'] * 1e6:.0f},"
+              f"\"{json.dumps(derived)}\"", flush=True)
+    failures = len(rep.failures)
+    for f in rep.failures:
+        print(f"{f['label']},0,\"ERROR: {f['error']}\"", flush=True)
+        print(f["traceback"], flush=True)
+
+    if not failures:
+        # resumability: an identical second invocation is served ENTIRELY
+        # from the result store (the sharded plan store makes even a
+        # --fresh re-measure reload its operators, but this asserts the
+        # stronger cell-level invariant)
+        rep2 = common.Runner(spec, store=store, verbose=False).run()
+        if rep2.measured != 0 or rep2.reused != len(spec.cells()):
+            print(f"RESUME FAILED: second run measured={rep2.measured} "
+                  f"reused={rep2.reused} (want 0/{len(spec.cells())})",
+                  flush=True)
+            failures += 1
+        else:
+            print(f"# resume: {rep2.reused}/{len(spec.cells())} cells "
+                  f"served from the store (0 re-measured)", flush=True)
+        rep = rep2 if not failures else rep
+
+    rows = [[r["matrix"], r["scheme"], r["layout"], r["partitioner"],
+             r.get("engine", "?"), r.get("comm_schedule", "?"),
+             r.get("comm_bytes_per_spmv", -1),
+             round(r.get("li", -1.0), 4),
+             round(r.get("modelled_par_ms", -1.0), 4),
+             round(r.get("verify_rel_err", -1.0), 8)]
+            for r in rep.records]
+    common.write_csv(os.path.join(common.RESULTS_DIR,
+                                  "smoke_parallel_campaign.csv"),
+                     ["matrix", "scheme", "layout", "partitioner", "engine",
+                      "comm_schedule", "comm_bytes_per_spmv", "li",
+                      "modelled_par_ms", "verify_rel_err"],
+                     rows)
+    return failures
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--smoke-parallel", action="store_true",
+                    help="distributed-smoke campaign over the 'parallel' "
+                         "cell kind (topology-aware plans)")
+    ap.add_argument("--devices", type=int, default=8,
+                    help="device count for --smoke-parallel")
     ap.add_argument("--matrices", default="",
                     help="comma-separated matrix names (restricts --smoke)")
     ap.add_argument("--only", default="")
     args = ap.parse_args()
+    if args.smoke_parallel:
+        mats = [m for m in args.matrices.split(",") if m] or None
+        raise SystemExit(1 if smoke_parallel(mats, args.devices) else 0)
     if args.smoke:
         mats = [m for m in args.matrices.split(",") if m] or None
         raise SystemExit(1 if smoke(mats) else 0)

@@ -14,11 +14,21 @@ measure loop (DESIGN.md "Pipeline API"):
     pl2 = Plan.load(pl.key, mat=mat)             # store: plan + perm + op
     op2 = pl2.build()                            # arrays — no re-tune
 
-Schemes and engines are plugins: anything registered through
-@register_scheme / @register_engine (core/registry.py) participates in
-planning, including `plan(reorder="auto", engine="auto")` joint selection.
-Importing this module registers every built-in (core.reorder.api schemes,
-core.spmv.ops engines), so the registries are populated as a side effect.
+Schemes, engines and row partitioners are plugins: anything registered
+through @register_scheme / @register_engine / @register_partitioner
+(core/registry.py) participates in planning, including
+`plan(reorder="auto", engine="auto")` joint selection. Importing this
+module registers every built-in (core.reorder.api schemes, core.spmv.ops
+engines, core.sparse.partition partitioners), so the registries are
+populated as a side effect.
+
+The same facade covers one device through a full mesh: pass
+`topology=Topology(devices=8, layout="1d_rows" | "2d_panels")` and
+plan() jointly selects (partition x scheme x engine x shape x k) with
+the communication-volume cost model, while `Plan.build()` returns a
+`ShardedOperator` carrying perm + panel starts + collective schedule —
+still fed ORIGINAL-index-space vectors, still round-tripping through the
+content-addressed plan store (DESIGN.md "Topology-aware planning").
 
 Measurement is the same shape one level up: `repro.experiments` turns a
 declarative ExperimentSpec (matrices x schemes x machine profiles x k)
@@ -31,24 +41,32 @@ remain as deprecation shims; see the README migration table.
 """
 from __future__ import annotations
 
-from .core.registry import (ENGINE_REGISTRY, PROFILE_REGISTRY,
-                            SCHEME_REGISTRY, EngineSpec, ProfileSpec,
-                            SchemeSpec, get_engine, get_profile, get_scheme,
-                            register_engine, register_profile,
+from .core.registry import (ENGINE_REGISTRY, PARTITIONER_REGISTRY,
+                            PROFILE_REGISTRY, SCHEME_REGISTRY, EngineSpec,
+                            PartitionerSpec, ProfileSpec, SchemeSpec,
+                            get_engine, get_partitioner, get_profile,
+                            get_scheme, register_engine,
+                            register_partitioner, register_profile,
                             register_scheme)
 # importing these populates the registries with every built-in
 from .core.reorder import api as _reorder_api  # noqa: F401
+from .core.sparse import partition as _partition  # noqa: F401
 from .core.spmv import ops as _ops  # noqa: F401
+from .core.spmv.distributed import ShardedOperator
 from .core.spmv.plan import Operator, Plan, SpmvProblem, plan, plan_key
+from .core.spmv.topology import Topology
 from .experiments import (ExperimentSpec, MeasurePolicy, MissingCellError,
                           Report, ResultStore, Runner)
 
 __all__ = [
-    "SpmvProblem", "plan", "Plan", "Operator", "plan_key",
-    "register_scheme", "register_engine", "register_profile",
-    "get_scheme", "get_engine", "get_profile",
-    "SchemeSpec", "EngineSpec", "ProfileSpec",
-    "SCHEME_REGISTRY", "ENGINE_REGISTRY", "PROFILE_REGISTRY",
+    "SpmvProblem", "plan", "Plan", "Operator", "plan_key", "Topology",
+    "ShardedOperator",
+    "register_scheme", "register_engine", "register_partitioner",
+    "register_profile",
+    "get_scheme", "get_engine", "get_partitioner", "get_profile",
+    "SchemeSpec", "EngineSpec", "PartitionerSpec", "ProfileSpec",
+    "SCHEME_REGISTRY", "ENGINE_REGISTRY", "PARTITIONER_REGISTRY",
+    "PROFILE_REGISTRY",
     "ExperimentSpec", "MeasurePolicy", "MissingCellError", "Report",
     "ResultStore", "Runner",
 ]

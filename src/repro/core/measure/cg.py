@@ -102,7 +102,7 @@ def block_cg_solve(matmul: Callable, b: jax.Array, max_iter: int = 100,
 def solve_problem(problem, b: jax.Array, reorder: str = "auto",
                   engine: str = "auto", max_iter: int = 100,
                   tol: float = 1e-8, probe: bool = False,
-                  cache: bool = True):
+                  cache: bool = True, topology=None, partition="auto"):
     """Plan, build, and CG-solve A x = b through the pipeline facade.
 
     `problem` is an SpmvProblem or a bare CSRMatrix. b of shape [n] runs
@@ -112,8 +112,12 @@ def solve_problem(problem, b: jax.Array, reorder: str = "auto",
     locality) happens inside the permutation-carrying operator, so there
     is no hand-carried permutation between caller and solver.
 
+    topology/partition (core/spmv/topology.py) run the same solve on a
+    sharded plan: every per-iteration SpMV is the ShardedOperator's
+    collective step, b and x still in the original index space.
+
     Returns (CGResult, Operator); the operator's `.plan` records what the
-    pipeline decided (scheme, engine, costs).
+    pipeline decided (scheme, engine, partition, costs).
     """
     from ...api import SpmvProblem, plan as make_plan
 
@@ -121,7 +125,7 @@ def solve_problem(problem, b: jax.Array, reorder: str = "auto",
     if not isinstance(problem, SpmvProblem):
         problem = SpmvProblem(problem, k=k)
     pl = make_plan(problem, reorder=reorder, engine=engine, probe=probe,
-                   cache=cache)
+                   cache=cache, topology=topology, partition=partition)
     op = pl.build(cache=cache)
     if k > 1:
         res = block_cg_solve(op.matmul, b, max_iter=max_iter, tol=tol)

@@ -44,10 +44,20 @@ def panel_submatrix(mat: CSRMatrix, r0: int, r1: int, m_pad: int = 0) -> CSRMatr
 
 def modelled_parallel_ms(mat: CSRMatrix, p: int, engine: str = "csr",
                          schedule: str = "static", iters: int = 8,
-                         rng_seed: int = 0) -> float:
-    """Median modelled parallel SpMV time for P cores."""
-    starts = (static_partition(mat, p) if schedule == "static"
-              else nnz_balanced_partition(mat, p))
+                         rng_seed: int = 0, panels=None) -> float:
+    """Median modelled parallel SpMV time for P cores.
+
+    panels — explicit int[P+1] contiguous row split (e.g. a topology-aware
+    plan's panel_starts, whose partitioner permutation is already folded
+    into `mat`); overrides the schedule name."""
+    if panels is not None:
+        starts = np.asarray(panels, np.int64)
+        if starts.size != p + 1:
+            raise ValueError(f"panels has {starts.size - 1} panels, "
+                             f"expected {p}")
+    else:
+        starts = (static_partition(mat, p) if schedule == "static"
+                  else nnz_balanced_partition(mat, p))
     rng = np.random.default_rng(rng_seed)
     x = jnp.asarray(rng.standard_normal(mat.n), jnp.float32)
     panel_ms = []

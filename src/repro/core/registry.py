@@ -1,12 +1,15 @@
-"""Plugin registries for reordering schemes, SpMV engines and machine profiles.
+"""Plugin registries for reordering schemes, SpMV engines, row partitioners
+and machine profiles.
 
 The pipeline facade (repro.api) plans over *whatever is registered*, not a
 hardcoded list: a reordering scheme is a function `(mat, seed) -> perm`
-registered with @register_scheme, and an engine is a builder
+registered with @register_scheme, an engine is a builder
 `(mat, dtype=..., block_shape=..., sell_sigma=..., use_kernel=...,
-nnz_bucket=...) -> operator` registered with @register_engine. Capability
-metadata rides on the spec so planners can reason about candidates without
-importing them:
+nnz_bucket=...) -> operator` registered with @register_engine, and a
+partitioner is a function `(mat, p, seed=0, **kw) -> (perm | None,
+panel_starts)` registered with @register_partitioner (the topology-aware
+planning axis — see core/spmv/topology.py). Capability metadata rides on
+the spec so planners can reason about candidates without importing them:
 
   * SchemeSpec.paper           — one of the paper's §2.1 schemes
   * SchemeSpec.auto_candidate  — plan(reorder="auto") tries it by default
@@ -62,6 +65,27 @@ class EngineSpec:
 
 
 @dataclasses.dataclass(frozen=True)
+class PartitionerSpec:
+    """A registered row partitioner for topology-aware (sharded) plans.
+
+    fn(mat, p, seed=0, **kw) -> (perm | None, panel_starts[p + 1]):
+    `perm` is an optional row permutation (perm[i] = old row at new
+    position i) applied BEFORE the contiguous split — a partitioner that
+    only splits (static, nnz_balanced) returns None; one that regroups
+    rows (chunked_cyclic, the cut-minimizing metis_cut) returns the
+    grouping permutation. `panel_starts` indexes the (permuted) matrix
+    and must cover [0, m] monotonically — the same invariants as
+    core/sparse/partition.nnz_balanced_partition.
+    """
+
+    name: str
+    fn: Callable
+    auto_candidate: bool = False
+    reorders: bool = False            # may return a non-None perm
+    description: str = ""
+
+
+@dataclasses.dataclass(frozen=True)
 class ProfileSpec:
     """A registered machine/measurement profile: one point on the paper's
     'machines' axis — the engine family, compute dtype and core count a
@@ -83,6 +107,7 @@ class ProfileSpec:
 SCHEME_REGISTRY: Dict[str, SchemeSpec] = {}
 ENGINE_REGISTRY: Dict[str, EngineSpec] = {}
 PROFILE_REGISTRY: Dict[str, ProfileSpec] = {}
+PARTITIONER_REGISTRY: Dict[str, PartitionerSpec] = {}
 
 
 def register_scheme(name: str, *, paper: bool = False,
@@ -127,6 +152,25 @@ def register_engine(name: str, *, supports_spmm: bool = True,
     return deco
 
 
+def register_partitioner(name: str, *, auto_candidate: bool = False,
+                         reorders: bool = False, description: str = "",
+                         override: bool = False) -> Callable:
+    """Decorator: register `fn(mat, p, seed=0, **kw) -> (perm | None,
+    panel_starts)` under `name`. auto_candidate partitioners join
+    plan(partition="auto") for every sharded topology."""
+
+    def deco(fn: Callable) -> Callable:
+        if name in PARTITIONER_REGISTRY and not override:
+            raise ValueError(f"partitioner {name!r} already registered "
+                             f"(pass override=True to replace)")
+        PARTITIONER_REGISTRY[name] = PartitionerSpec(
+            name=name, fn=fn, auto_candidate=auto_candidate,
+            reorders=reorders, description=description)
+        return fn
+
+    return deco
+
+
 def register_profile(name: str, *, engine: str = "csr",
                      dtype: str = "float32", p: int = 8,
                      primary: bool = False, description: str = "",
@@ -155,6 +199,14 @@ def get_engine(name: str) -> EngineSpec:
     except KeyError:
         raise KeyError(f"unknown engine {name!r}; known: "
                        f"{sorted(ENGINE_REGISTRY)}") from None
+
+
+def get_partitioner(name: str) -> PartitionerSpec:
+    try:
+        return PARTITIONER_REGISTRY[name]
+    except KeyError:
+        raise KeyError(f"unknown partitioner {name!r}; known: "
+                       f"{sorted(PARTITIONER_REGISTRY)}") from None
 
 
 def get_profile(name: str) -> ProfileSpec:

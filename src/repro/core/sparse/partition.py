@@ -1,4 +1,5 @@
-"""Row-panel partitioning — the paper's two scheduling strategies.
+"""Row-panel partitioning — the paper's two scheduling strategies, plus
+the partitioner plugin registry the topology-aware planner searches.
 
 * static_partition      — default OpenMP static schedule: equal ROW counts
                           (paper §3.2, the winner of the scheduling study).
@@ -7,13 +8,30 @@
                           load-balance effects from data-movement effects.
 * chunked_cyclic_panels — static,chunk round-robin (for the Fig. 4 sweep).
 
+Each strategy is also registered as a PARTITIONER plugin
+(@register_partitioner, core/registry.py) with the uniform contract
+
+    fn(mat, p, seed=0, **kw) -> (perm | None, panel_starts[p + 1])
+
+so `repro.api.plan(problem, topology=...)` selects the partition jointly
+with scheme/engine/shape. Partitioners that regroup rows (chunked_cyclic,
+the cut-minimizing metis_cut) return the grouping permutation instead of
+emitting non-contiguous panels — contiguous panels of the permuted matrix
+ARE the strided/cut-minimized assignment, which is what lets one sharded
+layout builder serve every strategy.
+
 On TPU these produce the per-device row panels for the shard_map SpMV and
 the per-grid-step panels inside the Pallas kernel.
 """
 from __future__ import annotations
 
+import functools
+import re
+
 import numpy as np
 
+from ..registry import PARTITIONER_REGISTRY, get_partitioner, \
+    register_partitioner
 from .csr import CSRMatrix
 from .metrics import static_block_panels
 
@@ -78,6 +96,78 @@ def partition_to_owner(panel_starts: np.ndarray, m: int) -> np.ndarray:
                          f"{starts[:1]}..{starts[-1:]}")
     return np.repeat(np.arange(starts.size - 1, dtype=np.int32),
                      np.diff(starts))
+
+
+# --------------------------------------------------------------------------
+# Partitioner plugins (the topology-aware planning axis)
+# --------------------------------------------------------------------------
+@register_partitioner("static", auto_candidate=True,
+                      description="equal contiguous row panels "
+                                  "(default static schedule)")
+def static_partitioner(mat: CSRMatrix, p: int, seed: int = 0):
+    return None, static_partition(mat, p)
+
+
+@register_partitioner("nnz_balanced", auto_candidate=True,
+                      description="~equal-nnz contiguous panels "
+                                  "(paper Listing 5)")
+def nnz_balanced_partitioner(mat: CSRMatrix, p: int, seed: int = 0):
+    return None, nnz_balanced_partition(mat, p)
+
+
+@register_partitioner("chunked_cyclic", reorders=True,
+                      description="static,chunk round-robin; panels made "
+                                  "contiguous by a grouping permutation")
+def chunked_cyclic_partitioner(mat: CSRMatrix, p: int, seed: int = 0,
+                               chunk: int = 16):
+    """Thread t owns rows {t*chunk.., (t+p)*chunk.., ...}; the returned
+    permutation concatenates each thread's strided row set so panel t of
+    the permuted matrix IS thread t's assignment (including its striding
+    locality loss)."""
+    if chunk < 1:
+        raise ValueError(f"chunk must be >= 1, got {chunk}")
+    panels = chunked_cyclic_panels(mat.m, p, chunk)
+    sizes = np.array([ids.size for ids in panels], dtype=np.int64)
+    perm = (np.concatenate(panels).astype(np.int64) if mat.m
+            else np.empty(0, np.int64))
+    starts = np.concatenate([[0], np.cumsum(sizes)]).astype(np.int64)
+    return perm, starts
+
+
+@register_partitioner("metis_cut", reorders=True,
+                      description="cut-minimizing: METIS k-way labels group "
+                                  "rows, nnz-balanced contiguous split")
+def metis_cut_partitioner(mat: CSRMatrix, p: int, seed: int = 0):
+    """Communication-volume-minimizing partition via the reorder/metis
+    machinery (Akbudak/Kayaaslan/Aykanat's co-optimization direction):
+    rows are grouped by their METIS k-way partition label, then the
+    grouped matrix is split into p nnz-balanced contiguous panels — label
+    groups minimize the cut, the balanced split bounds load imbalance."""
+    from ..reorder.metis import metis_partition
+
+    labels = metis_partition(mat, p, seed)
+    perm = np.argsort(labels, kind="stable").astype(np.int64)
+    starts = nnz_balanced_partition(mat.permute(perm), p)
+    return perm, starts
+
+
+def resolve_partitioner(name: str):
+    """(canonical_name, fn) for a registered partitioner name, supporting
+    the parameterized `<base>_c<chunk>` form (e.g. chunked_cyclic_c16)."""
+    if name in PARTITIONER_REGISTRY:
+        return name, get_partitioner(name).fn
+    m = re.match(r"^(.+)_c(\d+)$", name)
+    if m and m.group(1) in PARTITIONER_REGISTRY:
+        return name, functools.partial(get_partitioner(m.group(1)).fn,
+                                       chunk=int(m.group(2)))
+    raise KeyError(f"unknown partitioner {name!r}; known: "
+                   f"{sorted(PARTITIONER_REGISTRY)} "
+                   f"(+ parameterized <name>_c<chunk>)")
+
+
+def auto_partitioners() -> list:
+    """Names plan(partition='auto') searches for a sharded topology."""
+    return [s.name for s in PARTITIONER_REGISTRY.values() if s.auto_candidate]
 
 
 def pad_panels_to_uniform(mat: CSRMatrix, panel_starts: np.ndarray):

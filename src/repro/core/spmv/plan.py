@@ -29,6 +29,15 @@ index space (internally x is gathered through perm and y scattered back
 through iperm), eliminating the hand-carried permutation footgun. The
 measurement harness opts out with `op(x, permuted=True)` (or times
 `op.unwrap()`), which runs in the reordered space like the legacy path.
+
+The same facade covers a device mesh: `plan(problem,
+topology=Topology(...), partition=...)` widens the joint selection to
+(partition x scheme x engine x shape x k) with the communication-volume
+cost model (topology.py), and `build()` returns a ShardedOperator
+(distributed.py) carrying perm + panel starts + collective schedule —
+same store, same original-index-space contract. Topology/partition join
+the content key ONLY when non-trivial, so single-device caches never
+fork.
 """
 from __future__ import annotations
 
@@ -43,8 +52,11 @@ from typing import Any, Optional
 import numpy as np
 
 from .. import registry
+from ..sparse import partition as partition_mod
 from ..sparse.csr import CSRMatrix
 from . import tune as tune_mod
+from . import topology as topology_mod
+from .topology import Topology
 from .tune import TunePlan
 
 _OFF = ("off", "0", "none", "")
@@ -102,17 +114,29 @@ def _mat_key(mat: CSRMatrix) -> str:
 
 
 def plan_key(problem: SpmvProblem, reorder: str, engine: str,
-             probe: bool, seed: int, schemes=None) -> str:
+             probe: bool, seed: int, schemes=None, topology=None,
+             partition: str = "auto", partitioners=None) -> str:
     """sha1 over matrix content + the full plan request.
 
     k steers the auto-engine choice AND (through the per-scheme cost
     deltas) the auto-scheme choice, so it is normalized out only when
     BOTH axes are fixed (a k-sweep over one engine+scheme is a single
-    entry — opcache.py's rule). `schemes` is the resolved candidate set
-    for reorder="auto": two requests searching different scheme sets are
-    different plans, even on the same matrix.
+    entry — opcache.py's rule); a sharded topology keeps k too (the
+    compute/collective trade-off moves with the batch width). `schemes`
+    is the resolved candidate set for reorder="auto": two requests
+    searching different scheme sets are different plans, even on the
+    same matrix.
+
+    Topology joins the key ONLY when non-trivial: a Topology(devices=1)
+    request hashes identically to no topology at all, so single-device
+    caches never fork (asserted in tests/test_topology_plans.py).
+    Sharded plans are model-based, so `probe` is normalized out of their
+    keys (a probe=True request builds the identical plan — one entry).
     """
-    k = problem.k if (engine == "auto" or reorder == "auto") else 1
+    topo = topology_mod.normalize(topology)
+    k = problem.k if (engine == "auto" or reorder == "auto"
+                      or topo is not None) else 1
+    probe = probe and topo is None
     hints = problem.hints
     h = hashlib.sha1()
     h.update(_mat_key(problem.mat).encode())
@@ -121,6 +145,9 @@ def plan_key(problem: SpmvProblem, reorder: str, engine: str,
              f"{tuple(hints.get('block_shape', (8, 128)))}:"
              f"{hints.get('sell_sigma')}:{int(hints.get('nnz_bucket', 0))}:"
              f"{probe}:{int(k)}".encode())
+    if topo is not None:
+        h.update(json.dumps(topo.key_dict(), sort_keys=True).encode())
+        h.update(f":{partition}:{tuple(partitioners or ())}".encode())
     return h.hexdigest()[:20]
 
 
@@ -225,6 +252,12 @@ class Plan:
     plan_ms: float = 0.0
     cache_hit: bool = False           # this plan was loaded, not computed
     perm: Optional[np.ndarray] = None  # None = identity
+    # -- topology-aware (sharded) plans ------------------------------------
+    topology: Optional[Topology] = None          # None = single device
+    partitioner: str = ""                        # resolved partitioner name
+    panel_starts: Optional[np.ndarray] = None    # [P+1] reordered-row split
+    comm: dict = dataclasses.field(default_factory=dict)   # collective model
+    partition_costs: dict = dataclasses.field(default_factory=dict)
     _mat: Optional[CSRMatrix] = dataclasses.field(
         default=None, repr=False, compare=False)
     _rmat: Optional[CSRMatrix] = dataclasses.field(
@@ -233,7 +266,11 @@ class Plan:
         default=None, repr=False, compare=False)
 
     def label(self) -> str:
-        return f"{self.scheme}+{self.tune.label()}"
+        base = f"{self.scheme}+{self.tune.label()}"
+        if self.topology is None:
+            return base
+        return (f"{base}+{self.partitioner}@{self.topology.layout}"
+                f"p{self.topology.devices}")
 
     # -- serialization -----------------------------------------------------
     def to_json(self) -> dict:
@@ -247,11 +284,16 @@ class Plan:
             "key": self.key, "scheme_costs": self.scheme_costs,
             "reorder_ms": self.reorder_ms, "tune_ms": self.tune_ms,
             "plan_ms": self.plan_ms,
+            "topology": None if self.topology is None
+            else self.topology.to_json(),
+            "partitioner": self.partitioner, "comm": self.comm,
+            "partition_costs": self.partition_costs,
         }
 
     @staticmethod
     def from_json(d: dict, perm: Optional[np.ndarray] = None,
-                  mat: Optional[CSRMatrix] = None) -> "Plan":
+                  mat: Optional[CSRMatrix] = None,
+                  panel_starts: Optional[np.ndarray] = None) -> "Plan":
         return Plan(scheme=d["scheme"], seed=d["seed"],
                     engine_request=d["engine_request"],
                     tune=TunePlan.from_json(d["tune"]), k=d["k"],
@@ -262,6 +304,11 @@ class Plan:
                     reorder_ms=d.get("reorder_ms", 0.0),
                     tune_ms=d.get("tune_ms", 0.0),
                     plan_ms=d.get("plan_ms", 0.0),
+                    topology=Topology.from_json(d.get("topology")),
+                    partitioner=d.get("partitioner", ""),
+                    panel_starts=panel_starts,
+                    comm=d.get("comm", {}),
+                    partition_costs=d.get("partition_costs", {}),
                     perm=perm, _mat=mat)
 
     def save(self, op=None, path: Optional[str] = None) -> str:
@@ -274,6 +321,8 @@ class Plan:
         arrays: dict = {}
         if self.perm is not None:
             arrays["perm"] = np.asarray(self.perm, np.int64)
+        if self.panel_starts is not None:
+            arrays["panel_starts"] = np.asarray(self.panel_starts, np.int64)
         rec = {"plan": self.to_json(), "op": None}
         if op is None and self._op_state is not None:
             # _op_state arrays were de-prefixed at load time; re-prefix so
@@ -318,7 +367,10 @@ class Plan:
                 rec = json.load(f)
             z = np.load(zpath)
             perm = z["perm"] if "perm" in z.files else None
-            pl = Plan.from_json(rec["plan"], perm=perm, mat=mat)
+            starts = (z["panel_starts"] if "panel_starts" in z.files
+                      else None)
+            pl = Plan.from_json(rec["plan"], perm=perm, mat=mat,
+                                panel_starts=starts)
             if rec.get("op"):
                 op_arrays = {k[len("op__"):]: z[k] for k in z.files
                              if k.startswith("op__")}
@@ -367,11 +419,13 @@ class Plan:
         op.plan = self.tune
         return op
 
-    def build(self, cache: bool = True) -> Operator:
-        """Materialize the permutation-carrying operator this plan
-        describes. Store hit -> device arrays reload (load_ms); miss ->
-        permute + format conversion (build_ms) and the complete entry
-        (plan + perm + operator payload) is persisted. Never re-tunes."""
+    def build(self, cache: bool = True):
+        """Materialize the operator this plan describes: a permutation-
+        carrying Operator for single-device plans, a ShardedOperator for
+        topology-aware plans (perm + panel starts + collective schedule).
+        Store hit -> device arrays reload (load_ms); miss -> permute +
+        format conversion (build_ms) and the complete entry (plan + perm
+        + operator payload) is persisted. Never re-tunes."""
         import jax.numpy as jnp
 
         dt = jnp.dtype(self.dtype_name)
@@ -379,6 +433,8 @@ class Plan:
                 "tune_ms": self.tune_ms, "build_ms": 0.0, "load_ms": 0.0,
                 "engine": self.tune.engine, "plan": self.tune.to_json()}
         use_store = cache and store_enabled()
+        if self.topology is not None:
+            return self._build_sharded(dt, info, use_store)
         inner = None
         if use_store:
             t0 = time.perf_counter()
@@ -403,6 +459,45 @@ class Plan:
                 self.save(op=inner)
         return Operator(inner, self.perm, self, build_info=info)
 
+    def _build_sharded(self, dt, info: dict, use_store: bool):
+        """Topology-aware build: restore the ShardedOperator's layout
+        arrays from the plan store when possible, otherwise chop the
+        reordered matrix into per-device arrays and persist the entry."""
+        from . import distributed
+
+        info["comm"] = dict(self.comm)
+        info["partitioner"] = self.partitioner
+        if use_store:
+            t0 = time.perf_counter()
+            if self._op_state is None and self.cache_hit:
+                stored = Plan.load(self.key, mat=self._mat)
+                if stored is not None and stored._op_state is not None:
+                    self._op_state = stored._op_state
+            if self._op_state is not None:
+                op_rec, arrays = self._op_state
+                if op_rec.get("cls") == "ShardedOperator":
+                    try:
+                        op = distributed.ShardedOperator.from_state(
+                            op_rec["meta"], arrays, perm=self.perm,
+                            plan=self, build_info=info)
+                        info["load_ms"] = (time.perf_counter() - t0) * 1e3
+                        info["cache_hit"] = True
+                        return op
+                    except Exception:
+                        pass            # unreadable payload -> rebuild
+        t0 = time.perf_counter()
+        layout = distributed.build_sharded_layout(
+            self.reordered_matrix(), self.topology, self.panel_starts,
+            engine=self.tune.engine, block_shape=self.tune.block_shape,
+            schedule=self.comm.get("schedule", "all_gather"),
+            halo=int(self.comm.get("halo", 0)))
+        op = distributed.ShardedOperator(layout, self.perm, plan=self,
+                                         build_info=info)
+        info["build_ms"] = (time.perf_counter() - t0) * 1e3
+        if use_store:
+            self.save(op=op)
+        return op
+
 
 def _operator_registry() -> dict:
     """Operator classes speaking the state()/from_state() protocol
@@ -425,22 +520,48 @@ def _auto_schemes(hints: dict) -> list:
     return list(names)
 
 
-def plan(problem: SpmvProblem, reorder: str = "auto", engine: str = "auto",
-         probe: bool = False, cache: bool = True) -> Plan:
-    """Stage 1+2 of the pipeline: decide (scheme, engine, shape) for the
-    problem and return the serializable Plan.
+def _partition_candidates(partition) -> list:
+    """Resolve the partition request to a candidate-name list."""
+    if partition == "auto":
+        names = partition_mod.auto_partitioners()
+        if not names:
+            raise ValueError("no registered partitioner is auto_candidate")
+        return names
+    if isinstance(partition, str):
+        return [partition]
+    return list(partition)
 
-    reorder — a registered scheme name, or "auto" to jointly search the
+
+def plan(problem: SpmvProblem, reorder: str = "auto", engine: str = "auto",
+         probe: bool = False, cache: bool = True, topology=None,
+         partition="auto") -> Plan:
+    """Stage 1+2 of the pipeline: decide (scheme, engine, shape) — and,
+    given a topology, the row partition — for the problem and return the
+    serializable Plan.
+
+    reorder   — a registered scheme name, or "auto" to jointly search the
               auto-candidate schemes (hints["schemes"] overrides the set):
               each candidate is permuted, its structural features recomputed,
               and every engine candidate re-scored on them, so the winner is
               the (scheme, engine, shape) argmin of modelled bytes at the
               problem's k.
-    engine  — a registered engine name, or "auto" for the OSKI-style tuner.
-    probe   — empirically time the top engine candidates (auto-scheme
+    engine    — a registered engine name, or "auto" for the OSKI-style
+              tuner. Sharded plans execute per-device "bell" or "csr"
+              panels; "auto" picks between them.
+    probe     — empirically time the top engine candidates (auto-scheme
               selection stays model-based; the winning scheme is re-tuned
-              with probing).
-    cache   — consult/populate the persistent plan store.
+              with probing). Sharded plans are model-based only.
+    cache     — consult/populate the persistent plan store.
+    topology  — a Topology (core/spmv/topology.py); devices=1/None plans
+              single-device. Non-trivial topologies extend the joint
+              search to (partition x scheme x engine x shape x k) with
+              the communication-volume cost model: per candidate the
+              modelled wall cost is max-device compute bytes (engine cost
+              x load imbalance / devices) + collective bytes (all-gather
+              vs halo exchange vs 2-D reduce — topology.comm_model).
+    partition — a registered partitioner name (incl. the parameterized
+              chunked_cyclic_c<chunk> form), a list of names, or "auto"
+              to search the auto-candidate partitioners.
     """
     from . import ops  # noqa: F401 — ensure built-in engines are registered
     from ..reorder import api as reorder_api
@@ -454,6 +575,7 @@ def plan(problem: SpmvProblem, reorder: str = "auto", engine: str = "auto",
     block_shape = tuple(hints.get("block_shape", (8, 128)))
     sell_sigma = hints.get("sell_sigma")
     k = max(int(problem.k), 1)
+    topo = topology_mod.normalize(topology)
 
     # validate names up front (KeyError with the known set)
     if engine != "auto":
@@ -464,9 +586,22 @@ def plan(problem: SpmvProblem, reorder: str = "auto", engine: str = "auto",
                          "and no registered scheme is auto_candidate")
     for s in schemes:
         registry.get_scheme(s)
+    partitioners = None
+    if topo is not None:
+        if mat.m != mat.n:
+            raise ValueError(f"sharded plans need a square matrix "
+                             f"(conformal x partition), got {mat.shape}")
+        if engine not in ("auto", "bell", "csr"):
+            raise ValueError(f"sharded plans execute 'bell' or 'csr' "
+                             f"panel engines (or 'auto'), got {engine!r}")
+        partitioners = _partition_candidates(partition)
+        for name in partitioners:
+            partition_mod.resolve_partitioner(name)
 
     key = plan_key(problem, reorder, engine, probe, seed,
-                   schemes=schemes if reorder == "auto" else None)
+                   schemes=schemes if reorder == "auto" else None,
+                   topology=topo, partition=str(partition),
+                   partitioners=partitioners)
     if cache and store_enabled():
         hit = Plan.load(key, mat=mat)
         if hit is not None:
@@ -476,6 +611,11 @@ def plan(problem: SpmvProblem, reorder: str = "auto", engine: str = "auto",
             # an interpret-mode CI run must not pin later runs to it)
             hit.use_kernel = use_kernel
             return hit
+
+    if topo is not None:
+        return _plan_sharded(problem, reorder, engine, cache, topo,
+                             partitioners, schemes, key, seed, use_kernel,
+                             nnz_bucket, block_shape, t_start)
 
     dtype_name = problem.dtype_name()
     reorder_ms = tune_ms = 0.0
@@ -527,6 +667,91 @@ def plan(problem: SpmvProblem, reorder: str = "auto", engine: str = "auto",
               plan_ms=(time.perf_counter() - t_start) * 1e3,
               perm=None if perm is None else np.asarray(perm, np.int64),
               _mat=mat, _rmat=rmat)
+    if cache and store_enabled():
+        pl.save()
+    return pl
+
+
+def _plan_sharded(problem: SpmvProblem, reorder: str, engine: str,
+                  cache: bool, topo: Topology, partitioners: list,
+                  schemes: list, key: str, seed: int, use_kernel: str,
+                  nnz_bucket: int, block_shape: tuple,
+                  t_start: float) -> Plan:
+    """The topology-aware joint search: (partition x scheme x engine) argmin
+    of modelled wall bytes = max-device compute (engine cost x load
+    imbalance / devices) + collective bytes (topology.comm_model). The
+    winner's composed permutation (scheme ∘ partitioner grouping) and
+    panel split ride on the Plan, so build() needs no re-decision."""
+    from ..reorder import api as reorder_api
+
+    mat = problem.mat
+    k = max(int(problem.k), 1)
+    dtype_name = problem.dtype_name()
+    dsize = int(np.dtype(dtype_name).itemsize)
+    engines = ("bell", "csr") if engine == "auto" else (engine,)
+    reorder_ms = tune_ms = 0.0
+    best = None        # (cost, scheme, perm, rmat2, starts, pname, eng, comm)
+    scheme_costs: dict = {}
+    partition_costs: dict = {}
+    for s in schemes:
+        t0 = time.perf_counter()
+        perm = (None if s == "baseline"
+                else reorder_api.reorder(mat, s, seed, cache=cache))
+        rmat = mat if perm is None else mat.permute(perm)
+        reorder_ms += (time.perf_counter() - t0) * 1e3
+        best_s = None
+        feat_rmat = None     # non-reordering partitioners all score the
+        # scheme's own rmat: one feature scan serves them all
+        for pname in partitioners:
+            cname, pfn = partition_mod.resolve_partitioner(pname)
+            t0 = time.perf_counter()
+            perm2, starts = pfn(rmat, topo.row_devices, seed)
+            rmat2 = rmat if perm2 is None else rmat.permute(perm2)
+            if perm2 is None:
+                perm_total = perm
+            else:
+                perm_total = (np.asarray(perm2, np.int64) if perm is None
+                              else np.asarray(perm, np.int64)[perm2])
+            reorder_ms += (time.perf_counter() - t0) * 1e3
+            t0 = time.perf_counter()
+            if rmat2 is rmat:
+                if feat_rmat is None:
+                    feat_rmat = tune_mod.matrix_features(rmat)
+                feat = feat_rmat
+            else:
+                feat = tune_mod.matrix_features(rmat2)
+            comm = topology_mod.comm_model(rmat2, starts, topo, dsize, k,
+                                           block_shape)
+            for eng in engines:
+                compute = tune_mod.candidate_cost(feat, eng, block_shape,
+                                                  None, None, k=k)
+                cost = (compute * comm["li"] / topo.devices
+                        + comm["bytes_per_spmv"])
+                partition_costs[f"{s}+{cname}+{eng}"] = float(cost)
+                if best is None or cost < best[0]:
+                    best = (cost, s, perm_total, rmat2, starts, cname, eng,
+                            float(compute), comm)
+                if best_s is None or cost < best_s:
+                    best_s = float(cost)
+            tune_ms += (time.perf_counter() - t0) * 1e3
+        scheme_costs[s] = best_s
+    _, scheme, perm_total, rmat2, starts, pname, eng, compute, comm = best
+    tp = TunePlan(engine=eng, block_shape=tuple(block_shape),
+                  sell_sigma=None, cost_bytes=compute, costs={},
+                  features={}, source="model", k=k)
+    pl = Plan(scheme=scheme, seed=seed, engine_request=engine, tune=tp,
+              k=k, dtype_name=dtype_name, probe=False,
+              use_kernel=use_kernel, nnz_bucket=nnz_bucket,
+              mat_shape=tuple(mat.shape), mat_nnz=mat.nnz, key=key,
+              scheme_costs=scheme_costs, reorder_ms=reorder_ms,
+              tune_ms=tune_ms,
+              plan_ms=(time.perf_counter() - t_start) * 1e3,
+              topology=topo, partitioner=pname,
+              panel_starts=np.asarray(starts, np.int64), comm=comm,
+              partition_costs=partition_costs,
+              perm=(None if perm_total is None
+                    else np.asarray(perm_total, np.int64)),
+              _mat=mat, _rmat=rmat2)
     if cache and store_enabled():
         pl.save()
     return pl

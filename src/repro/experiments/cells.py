@@ -16,6 +16,16 @@ Built-ins:
                  variant names pick the policy — "static_default",
                  "static_c<chunk>" (strided chunked-cyclic panels, each
                  timed on its own gathered submatrix), "nnz_balanced".
+  * "parallel" — topology-aware cells (figs 4, 9–11 as campaigns): the
+                 variant is "<layout>:<partitioner>" (e.g.
+                 "1d_rows:nnz_balanced", "1d_rows:chunked_cyclic_c16",
+                 "2d_panels:metis_cut"); the cell plans through
+                 plan(topology=Topology(devices=p, layout=...)) and
+                 records the partition-quality metrics (LI, cut volume,
+                 halo width), the modelled collective bytes/schedule, the
+                 calibrated modelled-parallel timing on the plan's
+                 panels, and (verify=True) the ShardedOperator's
+                 original-index-space oracle check.
 
 Third-party kinds register with @register_cell_kind and become one spec
 line (`ExperimentSpec(kind=...)`) like everything else.
@@ -189,6 +199,94 @@ def measure_spmv_cell(cell, mat) -> dict:
         rec["avg_row_bandwidth"] = metrics.avg_row_bandwidth(rmat)
         rec["cut_volume"] = metrics.cut_volume(rmat, panels_s)
         rec["block_fill_8x128"] = metrics.block_fill_ratio(rmat, 8, 128)
+    return rec
+
+
+# --------------------------------------------------------------------------
+# topology-aware cells (figs 4, 9-11 as campaigns over sharded plans)
+# --------------------------------------------------------------------------
+def parallel_variant(layout: str, partitioner: str) -> str:
+    """The variants-axis encoding of one (layout, partitioner) point."""
+    return f"{layout}:{partitioner}"
+
+
+def _parse_parallel_variant(variant: str):
+    from ..core.spmv.topology import LAYOUTS
+
+    layout, _, part = (variant or "").partition(":")
+    if not part:
+        if layout in LAYOUTS:            # bare layout -> default partition
+            part = "nnz_balanced"
+        else:                            # bare partitioner -> default layout
+            layout, part = "1d_rows", layout or "nnz_balanced"
+    return layout, part
+
+
+@register_cell_kind("parallel")
+def measure_parallel_cell(cell, mat) -> dict:
+    """One (matrix, scheme, machine point, layout x partitioner) cell of a
+    distributed campaign, through the topology-aware facade."""
+    import jax.numpy as jnp
+
+    from ..api import SpmvProblem, Topology, plan
+    from ..core.measure import ios, parallel_model
+
+    pol = cell.policy_dict()
+    if cell.p < 2:
+        raise ValueError(
+            f"'parallel' cells need p >= 2 devices, got p={cell.p} "
+            f"(a 1-device topology is the single-device pipeline — "
+            f"use the 'spmv' kind)")
+    layout, part = _parse_parallel_variant(cell.variant)
+    topo = Topology(devices=cell.p, layout=layout)
+    dtype = jnp.dtype(cell.dtype)
+    hints = {"seed": pol["seed"]}
+    pl = plan(SpmvProblem(mat, k=cell.k, dtype=cell.dtype, hints=hints),
+              reorder=cell.scheme, engine=cell.engine, topology=topo,
+              partition=part)
+    rmat = pl.reordered_matrix()
+    comm = pl.comm
+    rec = {
+        "m": int(mat.m), "n": int(mat.n), "nnz": int(rmat.nnz),
+        "devices": int(cell.p), "layout": layout,
+        "partitioner": pl.partitioner,
+        "resolved_scheme": pl.scheme,
+        "engine": pl.tune.engine,
+        "plan_label": pl.label(),
+        "reorder_ms": pl.reorder_ms,
+        "tune_ms": pl.tune_ms,
+        "plan_ms": pl.plan_ms,
+        "plan_store_hit": bool(pl.cache_hit),
+        # partition quality (the paper's parallel-execution story):
+        "li": comm.get("li"),
+        "cut_volume": comm.get("cut_volume"),
+        "halo_width": comm.get("halo_width"),
+        "comm_schedule": comm.get("schedule"),
+        "comm_bytes_per_spmv": comm.get("bytes_per_spmv"),
+        "gather_bytes": comm.get("gather_bytes"),
+        "halo_bytes": comm.get("halo_bytes"),
+        "h_pad": comm.get("h_pad"),
+    }
+    if pol["verify"]:
+        op = pl.build()
+        rec.update({
+            "op_cache_hit": op.build_info.get("cache_hit", False),
+            "op_load_ms": op.build_info.get("load_ms", 0.0),
+            "format_build_ms": op.build_info.get("build_ms", 0.0),
+            "simulated": bool(op.simulated),
+        })
+        rec["verify_rel_err"] = _verify_original_space(
+            op, mat, cell.k, dtype, pol.get("verify_tol", 1e-4),
+            pol["seed"])
+    if pol["time_spmv"]:
+        # calibrated per-panel model on the plan's own panels — the same
+        # protocol as the "schedule" kind, so figs 4/11 stay comparable
+        ms = parallel_model.modelled_parallel_ms(
+            rmat, topo.row_devices, pl.tune.engine,
+            panels=pl.panel_starts, iters=pol["iters"],
+            rng_seed=pol["seed"])
+        rec["modelled_par_ms"] = ms
+        rec["gflops"] = float(ios.gflops(rmat.nnz, np.array([ms]))[0])
     return rec
 
 

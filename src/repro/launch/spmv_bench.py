@@ -134,6 +134,73 @@ def lower_halo(mesh: Mesh, halo: int = 128):
     return jax.jit(step).lower(blocks, cols, x)
 
 
+def run_parallel(matrix: str, scheme: str = "baseline", engine: str = "auto",
+                 devices: int = 8, layout: str = "1d_rows",
+                 partition: str = "nnz_balanced", iters: int = 6,
+                 write_results: bool = True, k: int = 1,
+                 use_store: bool = True) -> dict:
+    """Sharded-SpMV benchmark for one (matrix, scheme, topology) cell.
+
+    One one-cell "parallel"-kind ExperimentSpec through the experiment
+    harness — the same content-addressed result store as the fig09-11
+    campaigns, so a repeat invocation is a pure store hit. The cell plans
+    through the topology-aware facade (partition x scheme x engine joint
+    selection when either is "auto"), verifies the ShardedOperator
+    against the numpy oracle in the ORIGINAL index space, and reports the
+    modelled collective bytes of the chosen schedule next to the
+    modelled-parallel timing."""
+    from ..experiments import ExperimentSpec, MeasurePolicy, ResultStore, \
+        Runner
+    from ..experiments.cells import parallel_variant
+
+    if devices < 2:
+        raise ValueError(f"--devices must be >= 2 in parallel mode, "
+                         f"got {devices}")
+    spec = ExperimentSpec(
+        name="spmv_parallel_single", matrices=(matrix,), schemes=(scheme,),
+        engines=(engine,), ps=(devices,), ks=(k,), kind="parallel",
+        variants=(parallel_variant(layout, partition),),
+        policy=MeasurePolicy(iters=iters, verify=True, with_yax=False,
+                             with_parallel=False, with_metrics=False))
+    store = ResultStore(results_dir=RESULTS)
+    if not use_store:                       # --fresh: force a re-measure
+        store.delete(spec.cells()[0].key())
+    rep = Runner(spec, store=store, verbose=False).run()
+    cr = rep.records[0]
+    rec = {
+        "matrix": matrix, "scheme": scheme,
+        "resolved_scheme": cr["resolved_scheme"],
+        "engine": cr["engine"], "plan_label": cr["plan_label"],
+        "devices": devices, "layout": layout,
+        "partitioner": cr["partitioner"],
+        "store_hit": cr["store_reused"], "cell_key": cr["cell_key"],
+        "comm_schedule": cr["comm_schedule"],
+        "comm_bytes_per_spmv": cr["comm_bytes_per_spmv"],
+        "li": cr["li"], "cut_volume": cr["cut_volume"],
+        "halo_width": cr["halo_width"],
+        "reorder_ms": cr["reorder_ms"], "tune_ms": cr["tune_ms"],
+        "modelled_par_ms": cr["modelled_par_ms"],
+        "gflops": cr["gflops"],
+        "verify_rel_err": cr["verify_rel_err"],
+        "simulated": cr["simulated"],
+    }
+    print(f"[spmv-parallel] {matrix}/{scheme} {layout} p={devices} "
+          f"partition={rec['partitioner']} engine={rec['engine']} "
+          f"sched={rec['comm_schedule']} "
+          f"comm={rec['comm_bytes_per_spmv']:.0f}B li={rec['li']:.3f} "
+          f"par_ms={rec['modelled_par_ms']:.3f} "
+          f"store_hit={rec['store_hit']} sim={rec['simulated']} "
+          f"err={rec['verify_rel_err']:.2e}", flush=True)
+    if write_results:
+        os.makedirs(RESULTS, exist_ok=True)
+        out = os.path.join(
+            RESULTS, f"spmv_parallel_{matrix}_{scheme}_{layout}"
+                     f"_p{devices}.json")
+        with open(out, "w") as f:
+            json.dump(rec, f, indent=1)
+    return rec
+
+
 def run_single(matrix: str, scheme: str = "baseline", engine: str = "auto",
                iters: int = 12, probe: bool = False,
                write_results: bool = True, k: int = 1,
@@ -285,6 +352,15 @@ def main():
                     help="batch width: time K-RHS SpMM instead of SpMV")
     ap.add_argument("--fresh", action="store_true",
                     help="bypass the result store and re-measure the cell")
+    ap.add_argument("--devices", type=int, default=1,
+                    help="sharded mode: plan a Topology over N devices "
+                         "(simulated when the host has fewer)")
+    ap.add_argument("--layout", default=None,
+                    choices=["1d_rows", "2d_panels"],
+                    help="sharded layout (with --devices; default 1d_rows)")
+    ap.add_argument("--partition", default=None,
+                    help="partitioner name or 'auto' (with --devices; "
+                         "default nnz_balanced)")
     ap.add_argument("--serve-sim", action="store_true",
                     help="micro-batching service simulation over smoke "
                          "matrices")
@@ -306,6 +382,22 @@ def main():
             raise SystemExit(
                 f"serve-sim verification FAILED: max_rel_err="
                 f"{rec['max_rel_err']:.2e}")
+        return
+    if args.devices <= 1 and (args.layout or args.partition):
+        ap.error("--layout/--partition require --devices > 1 "
+                 "(sharded single-cell mode)")
+    if args.devices > 1 and not args.matrix:
+        ap.error("--devices requires --matrix (sharded single-cell mode)")
+    if args.matrix and args.devices > 1:
+        if args.probe:
+            ap.error("--devices does not combine with --probe "
+                     "(sharded plans are model-based)")
+        run_parallel(args.matrix, args.scheme, args.engine,
+                     devices=args.devices,
+                     layout=args.layout or "1d_rows",
+                     partition=args.partition or "nnz_balanced",
+                     iters=args.iters, k=args.spmm,
+                     use_store=not args.fresh)
         return
     if args.matrix:
         run_single(args.matrix, args.scheme, args.engine, iters=args.iters,

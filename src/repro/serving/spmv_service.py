@@ -68,13 +68,16 @@ class SpmvService:
     def __init__(self, engine: str = "auto", max_batch: int = 32,
                  window_ms: float = 2.0, use_kernel: str = "auto",
                  dtype=None, cache: bool = True, probe: bool = False,
-                 max_queue: int = 1024, reorder: str = "baseline"):
+                 max_queue: int = 1024, reorder: str = "baseline",
+                 topology=None, partition: str = "auto"):
         if max_batch < 1:
             raise ValueError(f"max_batch must be >= 1, got {max_batch}")
         if max_queue < 1:
             raise ValueError(f"max_queue must be >= 1, got {max_queue}")
         self.engine = engine
         self.reorder = reorder
+        self.topology = topology
+        self.partition = partition
         self.max_batch = int(max_batch)
         self.max_queue = int(max_queue)
         self.window_s = float(window_ms) * 1e-3
@@ -84,6 +87,7 @@ class SpmvService:
         self._dtype = dtype
         self._matrices: Dict[str, CSRMatrix] = {}
         self._schemes: Dict[str, str] = {}
+        self._topologies: Dict[str, object] = {}
         self._gen: collections.Counter = collections.Counter()
         self._ops: Dict[str, tuple] = {}          # key -> (gen, operator)
         self._build_info: Dict[str, dict] = {}
@@ -104,12 +108,16 @@ class SpmvService:
 
     # -- registry ----------------------------------------------------------
     def register(self, key: str, mat: CSRMatrix,
-                 reorder: Optional[str] = None) -> None:
+                 reorder: Optional[str] = None, topology=None) -> None:
         """Make `key` servable. Operator build is lazy (first batch).
 
-        reorder overrides the service-wide scheme for this key; requests
-        stay in the original index space either way (the operator carries
-        its permutation).
+        reorder overrides the service-wide scheme for this key, and
+        topology (a repro.api.Topology) overrides the service-wide
+        topology — a SHARDED key: its operator is the topology-aware
+        plan's ShardedOperator, dispatching each coalesced SpMM across
+        the device mesh (or its single-device simulation). Requests stay
+        in the original index space either way (the operator carries its
+        permutation and panel maps).
 
         Re-registering a key drops its memoized operator, and is REFUSED
         while the key has queued or in-flight requests — a request
@@ -123,6 +131,8 @@ class SpmvService:
                     f"flush() first")
             self._matrices[key] = mat
             self._schemes[key] = self.reorder if reorder is None else reorder
+            self._topologies[key] = (self.topology if topology is None
+                                     else topology)
             # bumping the generation under _cv invalidates any memoized
             # operator atomically with the matrix swap — operator() only
             # trusts an entry whose generation matches the matrix it read
@@ -137,6 +147,7 @@ class SpmvService:
         with self._cv:
             mat = self._matrices[key]
             scheme = self._schemes[key]
+            topology = self._topologies.get(key)
             gen = self._gen[key]
         with self._op_lock:
             ent = self._ops.get(key)
@@ -148,7 +159,8 @@ class SpmvService:
                 SpmvProblem(mat, k=self.max_batch, dtype=self._dtype,
                             hints={"use_kernel": self.use_kernel}),
                 reorder=scheme, engine=self.engine, probe=self.probe,
-                cache=self.cache)
+                cache=self.cache, topology=topology,
+                partition=self.partition)
             op = pl.build(cache=self.cache)
             self._ops[key] = (gen, op)
             self._build_info[key] = op.build_info

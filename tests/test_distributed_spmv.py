@@ -1,134 +1,240 @@
-"""Distributed shard_map SpMV vs numpy oracle, on 8 fake CPU devices.
+"""Distributed SpMV through the topology-aware facade, on 8 fake CPU
+devices (XLA_FLAGS host-device simulation), plus one bitwise legacy-parity
+test for the pre-PR-5 shims.
 
-Runs in a subprocess because xla_force_host_platform_device_count must be
-set before jax initializes (the main pytest process keeps 1 device).
+The facade test runs in a subprocess because
+xla_force_host_platform_device_count must be set before jax initializes
+(the main pytest process keeps 1 device). It pins the PR's acceptance
+criterion: a sharded plan (p=8, nnz_balanced, reordered) saved via
+Plan.save reloads with ZERO re-tune and ShardedOperator(x) matches the
+dense oracle in the ORIGINAL index space to fp64 tolerance for both
+1d_rows and 2d_panels layouts.
 """
 import subprocess
 import sys
 import textwrap
+import warnings
 
-SCRIPT = textwrap.dedent("""
+import numpy as np
+import pytest
+
+
+def _run(script: str, tmp_path) -> subprocess.CompletedProcess:
+    return subprocess.run(
+        [sys.executable, "-c", script], capture_output=True, text=True,
+        timeout=600,
+        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
+             "JAX_PLATFORMS": "cpu", "HOME": "/root",
+             "JAX_ENABLE_X64": "1",
+             "REPRO_OPERATOR_CACHE": str(tmp_path / "opcache"),
+             "REPRO_PLAN_CACHE": str(tmp_path / "plans"),
+             "REPRO_REORDER_CACHE": str(tmp_path / "reorder")})
+
+
+SCRIPT_FACADE = textwrap.dedent("""
     import os
     os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
     import numpy as np
-    import jax, jax.numpy as jnp
-    from jax.sharding import Mesh
-    from repro.core.spmv import distributed as D
+    from repro.api import Plan, ShardedOperator, SpmvProblem, Topology, plan
     from repro.matrices import generators as G
 
     mat = G.rmat(9, 6, seed=0)   # 512 rows, skewed
     rng = np.random.default_rng(1)
     x = rng.standard_normal(mat.n)
-    want = mat.spmv(x)
+    want = mat.to_dense() @ x    # fp64 dense oracle
+    X = rng.standard_normal((mat.n, 3))
+    wantX = mat.to_dense() @ X
 
-    # ---- 1-D layout (8 panels over a flat mesh) ----
-    devs = np.array(jax.devices()).reshape(8)
-    mesh = Mesh(devs, ("data",))
-    plan = D.plan_1d(mat, 8, bm=4, bn=16, balanced=True)
-    f = D.spmv_1d(mesh, ("data",))
-    # x panels: pad x to 8 * panel_n segments aligned with row panels
-    pm = plan.panel_rows
-    xp = np.zeros((8, pm))
-    for p in range(8):
-        r0 = plan.row_offset[p]
-        r1 = plan.row_offset[p + 1] if p < 7 else mat.m
-        xp[p, : r1 - r0] = x[r0:r1]
-    n_pad = 8 * pm
-    assert n_pad >= mat.n or True
-    # all_gather(tiled) of panels gives a vector in PANEL layout; the plan's
-    # block_cols refer to ORIGINAL column ids. For the test keep layout
-    # consistent: run with x in panel-padded layout by rebuilding the matrix
-    # in that layout (columns remapped to padded positions).
-    colmap = np.zeros(mat.n, dtype=np.int64)
-    for p in range(8):
-        r0 = plan.row_offset[p]
-        r1 = plan.row_offset[p + 1] if p < 7 else mat.m
-        colmap[r0:r1] = p * pm + np.arange(r1 - r0)
+    for layout in ("1d_rows", "2d_panels"):
+        topo = Topology(devices=8, layout=layout)
+        pl = plan(SpmvProblem(mat, dtype=np.float64), reorder="rcm",
+                  topology=topo, partition="nnz_balanced")
+        assert pl.partitioner == "nnz_balanced" and pl.scheme == "rcm"
+        assert pl.panel_starts is not None and pl.panel_starts.size == \\
+            topo.row_devices + 1
+        op = pl.build()
+        assert isinstance(op, ShardedOperator) and not op.simulated
+        got = np.asarray(op(x))
+        err = np.abs(got - want).max() / (np.abs(want).max() + 1e-300)
+        assert err < 1e-12, (layout, err)
+        gotX = np.asarray(op.matmul(X))
+        errX = np.abs(gotX - wantX).max() / (np.abs(wantX).max() + 1e-300)
+        assert errX < 1e-12, (layout, errX)
+
+        # store round-trip: reload pays zero plan time, operator arrays
+        # restore from the entry (no re-partition, no re-conversion)
+        pl2 = Plan.load(pl.key, mat=mat)
+        assert pl2 is not None and pl2.cache_hit
+        assert pl2.plan_ms == 0.0 and pl2.tune_ms == 0.0
+        assert pl2.partitioner == pl.partitioner
+        assert np.array_equal(pl2.panel_starts, pl.panel_starts)
+        assert pl2.topology == pl.topology
+        op2 = pl2.build()
+        assert op2.build_info["cache_hit"], layout
+        assert np.array_equal(np.asarray(op2(x)), got)
+        print(f"{layout} OK", err)
+
+    # CG through the sharded operator, original index space end-to-end
+    from repro.core.measure import cg
+    spd = G.banded(512, 4, seed=2)     # diagonally-dominant SPD-ish band
+    d = spd.to_dense(); d = (d + d.T) / 2 + 8.0 * np.eye(512)
+    r, c = np.nonzero(d)
     from repro.core.sparse.csr import CSRMatrix
-    src = np.repeat(np.arange(mat.m), mat.row_nnz())
-    rows_padded = colmap[src]
-    cols_padded = colmap[mat.cols]
-    mat_p = CSRMatrix.from_coo(rows_padded, cols_padded, mat.vals, (n_pad, n_pad))
-    plan_p = D.plan_1d(mat_p, 8, bm=4, bn=16, balanced=False)
-    xp_flat = np.zeros(n_pad); xp_flat[colmap] = x
-    y = f(jnp.asarray(plan_p.blocks, jnp.float32),
-          jnp.asarray(plan_p.block_cols),
-          jnp.asarray(xp_flat.reshape(8, pm), jnp.float32))
-    got = np.asarray(y).reshape(-1)[colmap]
-    err = np.abs(got - want).max() / (np.abs(want).max() + 1e-9)
-    assert err < 1e-4, ("1d", err)
-    print("1D OK", err)
-
-    # ---- 2-D layout (4 x 2 mesh) ----
-    mesh2 = Mesh(np.array(jax.devices()).reshape(4, 2), ("data", "model"))
-    blocks, bcols, seg_n, h_pad, starts = D.plan_2d(mat_p, 4, 2, bm=4, bn=16,
-                                                    balanced=False)
-    f2 = D.spmv_2d(mesh2)
-    xs = xp_flat.copy()
-    xs = np.pad(xs, (0, max(0, 2 * seg_n - xs.size))).reshape(2, seg_n)
-    y2 = f2(jnp.asarray(blocks, jnp.float32), jnp.asarray(bcols),
-            jnp.asarray(xs, jnp.float32))
-    got2 = np.asarray(y2).reshape(-1)
-    # rows: 4 panels each h_pad tall, starts gives true offsets
-    out = np.zeros(n_pad)
-    for p in range(4):
-        r0, r1 = starts[p], starts[p + 1]
-        out[r0:r1] = got2[p * h_pad : p * h_pad + (r1 - r0)]
-    got2 = out[colmap]
-    err2 = np.abs(got2 - want).max() / (np.abs(want).max() + 1e-9)
-    assert err2 < 1e-4, ("2d", err2)
-    print("2D OK", err2)
+    spd = CSRMatrix.from_coo(r, c, d[r, c], (512, 512))
+    b = rng.standard_normal(512)
+    res, op = cg.solve_problem(SpmvProblem(spd, dtype=np.float64), b,
+                               reorder="rcm", engine="auto", max_iter=200,
+                               tol=1e-10,
+                               topology=Topology(devices=8),
+                               partition="nnz_balanced")
+    xsol = np.asarray(res.x)
+    assert np.abs(spd.spmv(xsol) - b).max() < 1e-6, float(res.residual)
+    print("CG OK", float(res.residual))
 """)
 
 
-def test_distributed_spmv_8dev():
-    r = subprocess.run([sys.executable, "-c", SCRIPT], capture_output=True,
-                       text=True, timeout=600,
-                       env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
-                            "JAX_PLATFORMS": "cpu",
-                            "HOME": "/root"})
+def test_sharded_facade_8dev(tmp_path):
+    r = _run(SCRIPT_FACADE, tmp_path)
     assert r.returncode == 0, r.stdout + r.stderr
-    assert "1D OK" in r.stdout and "2D OK" in r.stdout
+    assert "1d_rows OK" in r.stdout and "2d_panels OK" in r.stdout
+    assert "CG OK" in r.stdout
 
 
 SCRIPT_HALO = textwrap.dedent("""
     import os
     os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
     import numpy as np
-    import jax, jax.numpy as jnp
-    from jax.sharding import Mesh
-    from repro.core.spmv import distributed as D
-    from repro.core.reorder import api as reorder_api
+    from repro.api import SpmvProblem, Topology, plan
     from repro.matrices import generators as G
 
-    # shuffled banded matrix; RCM recovers small bandwidth -> halo legal
-    raw = G.shuffle(G.banded(1024, 6, seed=0), seed=1)
-    perm = reorder_api.reorder(raw, "rcm", cache=False)
-    mat = raw.permute(perm)
-
+    # shuffled banded matrix; RCM recovers small bandwidth, so the comm
+    # model switches the 1-D collective from all-gather to halo exchange
+    raw = G.shuffle(G.banded(2048, 6, seed=0), seed=1)
+    pl = plan(SpmvProblem(raw, dtype=np.float64), reorder="rcm",
+              topology=Topology(devices=8), partition="static")
+    assert pl.comm["schedule"] == "halo", pl.comm
+    assert pl.comm["bytes_per_spmv"] < pl.comm["gather_bytes"] / 4, pl.comm
+    op = pl.build()
+    assert not op.simulated
     rng = np.random.default_rng(1)
-    x = rng.standard_normal(mat.n)
-    want = mat.spmv(x)
-
-    blocks, bcols, halo, panel_n = D.plan_halo_1d(mat, 8, bm=4, bn=16)
-    mesh = Mesh(np.array(jax.devices()).reshape(8), ("data",))
-    f = D.spmv_halo_1d(mesh, ("data",), halo)
-    y = f(jnp.asarray(blocks, jnp.float32), jnp.asarray(bcols),
-          jnp.asarray(x.reshape(8, panel_n), jnp.float32))
-    got = np.asarray(y).reshape(-1)[: mat.m]
-    err = np.abs(got - want).max() / (np.abs(want).max() + 1e-9)
-    assert err < 1e-4, err
-    # comm accounting: halo exchange is 2*halo floats vs n*(P-1)/P all-gather
-    assert 2 * halo < mat.n * 7 / 8 / 10, (halo, mat.n)
-    print("HALO OK", err, "halo =", halo, "vs gather", mat.n * 7 // 8)
+    x = rng.standard_normal(raw.n)
+    want = raw.to_dense() @ x
+    got = np.asarray(op(x))
+    err = np.abs(got - want).max() / (np.abs(want).max() + 1e-300)
+    assert err < 1e-12, err
+    print("HALO OK", err, pl.comm["halo"], "vs gather",
+          pl.comm["gather_bytes"])
 """)
 
 
-def test_halo_exchange_spmv():
-    r = subprocess.run([sys.executable, "-c", SCRIPT_HALO],
-                       capture_output=True, text=True, timeout=600,
-                       env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
-                            "JAX_PLATFORMS": "cpu",
-                            "HOME": "/root"})
+def test_halo_schedule_8dev(tmp_path):
+    r = _run(SCRIPT_HALO, tmp_path)
     assert r.returncode == 0, r.stdout + r.stderr
     assert "HALO OK" in r.stdout
+
+
+# -- legacy parity (the pre-PR-5 shims) ------------------------------------
+
+def _bell_panels_to_dense(blocks, bcols, bm, bn, n):
+    """Reassemble a [P, nbr, K, bm, bn] panel stack into dense rows."""
+    p_, nbr, k = blocks.shape[:3]
+    out = np.zeros((p_ * nbr * bm, n))
+    for p in range(p_):
+        for r in range(nbr):
+            for j in range(k):
+                c0 = int(bcols[p, r, j]) * bn
+                r0 = (p * nbr + r) * bm
+                out[r0:r0 + bm, c0:c0 + bn] += blocks[p, r, j]
+    return out
+
+
+def test_legacy_shims_bitwise_parity():
+    """The deprecated plan_1d / plan_2d / plan_halo_1d shims still emit
+    bitwise-exact layouts: reassembling their bricks reproduces the dense
+    matrix EXACTLY (pure data movement, no arithmetic), and they warn."""
+    from repro.core.reorder import api as reorder_api
+    from repro.core.spmv import distributed as D
+    from repro.matrices import generators as G
+
+    mat = G.rmat(7, 5, seed=0)          # 128 rows
+    with pytest.warns(DeprecationWarning):
+        p1 = D.plan_1d(mat, 4, bm=4, bn=16, balanced=True)
+    dense = np.zeros(mat.shape)
+    h = p1.panel_rows
+    rebuilt = _bell_panels_to_dense(p1.blocks, p1.block_cols, 4, 16, h * 4)
+    for p in range(4):
+        r0 = int(p1.row_offset[p])
+        r1 = int(p1.row_offset[p + 1]) if p < 3 else mat.m
+        dense[r0:r1] = rebuilt[p * h: p * h + (r1 - r0), :mat.n]
+    assert np.array_equal(dense, mat.to_dense())
+
+    with pytest.warns(DeprecationWarning):
+        blocks, bcols, seg_n, h_pad, starts = D.plan_2d(
+            mat, 2, 2, bm=4, bn=16, balanced=False)
+    dense2 = np.zeros((2 * h_pad, 2 * seg_n))
+    for q in range(2):
+        seg = _bell_panels_to_dense(blocks[:, q], bcols[:, q], 4, 16, seg_n)
+        dense2[:, q * seg_n:(q + 1) * seg_n] = seg
+    want = np.zeros((2 * h_pad, 2 * seg_n))
+    d = mat.to_dense()
+    for p in range(2):
+        r0, r1 = int(starts[p]), int(starts[p + 1])
+        want[p * h_pad: p * h_pad + (r1 - r0), :mat.n] = d[r0:r1]
+    assert np.array_equal(dense2, want)
+
+    banded = G.shuffle(G.banded(256, 3, seed=0), seed=1)
+    rmat = banded.permute(reorder_api.reorder(banded, "rcm", cache=False))
+    with pytest.warns(DeprecationWarning):
+        hblocks, hbcols, halo, panel_n = D.plan_halo_1d(rmat, 4, bm=4, bn=16)
+    win = panel_n + 2 * halo
+    dense3 = np.zeros((rmat.m, win))
+    reb = _bell_panels_to_dense(hblocks, hbcols, 4, 16, win)
+    nbr = (panel_n + 3) // 4
+    for p in range(4):
+        dense3[p * panel_n:(p + 1) * panel_n] = \
+            reb[p * nbr * 4: p * nbr * 4 + panel_n]
+    d3 = rmat.to_dense()
+    for p in range(4):
+        for i in range(panel_n):
+            row = d3[p * panel_n + i]
+            lo = p * panel_n - halo
+            wrow = np.zeros(win)
+            for c in np.nonzero(row)[0]:
+                wrow[c - lo] = row[c]
+            assert np.array_equal(dense3[p * panel_n + i], wrow)
+
+
+def test_shim_step_builders_warn():
+    """The mesh-step shims warn without needing a mesh to be built."""
+    from unittest import mock
+
+    from repro.core.spmv import distributed as D
+
+    with pytest.warns(DeprecationWarning):
+        with mock.patch.object(D, "_legacy_spmv_1d", return_value=None):
+            D.spmv_1d(None, ("data",))
+    with pytest.warns(DeprecationWarning):
+        with mock.patch.object(D, "_legacy_spmv_2d", return_value=None):
+            D.spmv_2d(None)
+    with pytest.warns(DeprecationWarning):
+        with mock.patch.object(D, "_legacy_spmv_halo_1d", return_value=None):
+            D.spmv_halo_1d(None, ("data",), 16)
+
+
+def test_no_in_src_shim_callers():
+    """src/ never calls the deprecated distributed entry points (the
+    facade path runs clean with DeprecationWarning promoted to error)."""
+    import jax.numpy as jnp
+
+    from repro.api import SpmvProblem, Topology, plan
+    from repro.matrices import generators as G
+
+    mat = G.banded(128, 3, seed=0)
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", DeprecationWarning)
+        pl = plan(SpmvProblem(mat), reorder="baseline", engine="csr",
+                  topology=Topology(devices=2), partition="static",
+                  cache=False)
+        op = pl.build(cache=False)
+        op(jnp.ones(mat.n, jnp.float32))
+        op.matmul(jnp.ones((mat.n, 2), jnp.float32))

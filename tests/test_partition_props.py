@@ -1,9 +1,17 @@
-"""Property tests: nnz_balanced_partition edge cases + vectorized metrics.
+"""Property tests: partitioning invariants + vectorized metrics.
 
-Satellites of the SpMM PR:
+Satellites of the SpMM and topology PRs:
   * nnz_balanced_partition must survive p > m, a single giant row that
     swallows several nnz targets, and empty trailing panels — always
     returning monotone offsets that cover every row exactly once.
+  * chunked_cyclic_panels must assign every row to exactly one thread
+    (coverage + disjointness), each thread's row list strictly
+    increasing, with clean degeneration when m < p * chunk.
+  * partition_to_owner must be the exact inverse view of a covering
+    partition: nondecreasing owners, counts == panel heights, loud
+    rejection of non-covering input.
+  * Every registered PARTITIONER plugin honors the (perm, starts)
+    contract on arbitrary skewed matrices.
   * The vectorized metrics (profile / distinct_col_blocks / cut_volume /
     halo_width) must be BIT-identical to the straightforward per-row /
     per-panel loops they replaced.
@@ -12,10 +20,13 @@ import numpy as np
 import pytest
 from hypothesis import given, settings, strategies as st
 
+from repro.core.registry import PARTITIONER_REGISTRY
 from repro.core.sparse import metrics
 from repro.core.sparse.csr import CSRMatrix
-from repro.core.sparse.partition import (nnz_balanced_partition,
+from repro.core.sparse.partition import (chunked_cyclic_panels,
+                                         nnz_balanced_partition,
                                          partition_to_owner,
+                                         resolve_partitioner,
                                          static_partition)
 from repro.matrices import generators as G
 
@@ -83,6 +94,101 @@ def test_nnz_balanced_degenerate_inputs():
                           np.zeros(4, np.int64))
     with pytest.raises(ValueError):
         nnz_balanced_partition(empty, 0)
+
+
+# --------------------------------------------------------------------------
+# chunked_cyclic_panels: coverage / disjointness / monotone threads
+# --------------------------------------------------------------------------
+@given(st.integers(0, 300), st.integers(1, 16), st.integers(1, 64))
+@settings(max_examples=40, deadline=None)
+def test_property_chunked_cyclic_cover_disjoint(m, p, chunk):
+    panels = chunked_cyclic_panels(m, p, chunk)
+    assert len(panels) == p
+    allids = np.concatenate(panels) if panels else np.empty(0, np.int64)
+    # coverage + disjointness: the union is exactly [0, m), each once
+    assert allids.size == m
+    assert np.array_equal(np.sort(allids), np.arange(m))
+    for ids in panels:
+        # each thread's row set is strictly increasing (stride order)
+        assert np.all(np.diff(ids) > 0) if ids.size > 1 else True
+        # and is a union of <=chunk-length runs starting at multiples of
+        # chunk owned by this thread
+        if ids.size:
+            assert ids.min() >= 0 and ids.max() < m
+
+
+def test_chunked_cyclic_degenerate_small_m():
+    """m < p * chunk: the leading threads each get (at most) one partial
+    chunk, trailing threads come out EMPTY — never an index error."""
+    panels = chunked_cyclic_panels(10, 4, 16)     # one chunk covers all
+    assert [len(x) for x in panels] == [10, 0, 0, 0]
+    panels = chunked_cyclic_panels(20, 4, 16)
+    assert [len(x) for x in panels] == [16, 4, 0, 0]
+    assert np.array_equal(panels[1], np.arange(16, 20))
+    panels = chunked_cyclic_panels(0, 3, 8)
+    assert [len(x) for x in panels] == [0, 0, 0]
+
+
+def test_chunked_cyclic_round_robin_order():
+    panels = chunked_cyclic_panels(64, 2, 16)
+    assert np.array_equal(panels[0],
+                          np.r_[np.arange(0, 16), np.arange(32, 48)])
+    assert np.array_equal(panels[1],
+                          np.r_[np.arange(16, 32), np.arange(48, 64)])
+
+
+# --------------------------------------------------------------------------
+# partition_to_owner: inverse-view invariants
+# --------------------------------------------------------------------------
+@given(st.integers(8, 200), st.integers(1, 64), st.integers(0, 5))
+@settings(max_examples=25, deadline=None)
+def test_property_partition_to_owner(m, p, seed):
+    mat = _skewed(m, seed)
+    starts = nnz_balanced_partition(mat, p)
+    owner = partition_to_owner(starts, mat.m)
+    assert owner.shape == (mat.m,)
+    # owner-monotonicity: contiguous panels => nondecreasing owner ids
+    assert np.all(np.diff(owner) >= 0)
+    assert owner.min() >= 0 and owner.max() <= p - 1
+    # counts are exactly the panel heights
+    assert np.array_equal(np.bincount(owner, minlength=p),
+                          np.diff(starts))
+
+
+def test_partition_to_owner_rejects_non_covering():
+    with pytest.raises(ValueError):
+        partition_to_owner(np.array([1, 4, 8]), 8)     # doesn't start at 0
+    with pytest.raises(ValueError):
+        partition_to_owner(np.array([0, 4]), 8)        # doesn't reach m
+    with pytest.raises(ValueError):
+        partition_to_owner(np.empty(0, np.int64), 8)
+
+
+# --------------------------------------------------------------------------
+# partitioner plugin contract (what plan(topology=...) relies on)
+# --------------------------------------------------------------------------
+@pytest.mark.parametrize("name", sorted(PARTITIONER_REGISTRY)
+                         + ["chunked_cyclic_c4"])
+def test_partitioner_contract(name):
+    """(perm, starts) from every registered partitioner: perm is a valid
+    permutation (or None), starts covers [0, m] monotonically with
+    exactly p panels."""
+    mat = _skewed(100, 3)
+    for p in (1, 4, 7):
+        _, fn = resolve_partitioner(name)
+        perm, starts = fn(mat, p, 0)
+        assert starts.shape == (p + 1,)
+        assert starts[0] == 0 and starts[-1] == mat.m
+        assert np.all(np.diff(starts) >= 0)
+        if perm is not None:
+            assert np.array_equal(np.sort(perm), np.arange(mat.m))
+
+
+def test_resolve_partitioner_unknown():
+    with pytest.raises(KeyError):
+        resolve_partitioner("nope")
+    with pytest.raises(KeyError):
+        resolve_partitioner("nope_c16")
 
 
 def test_partition_to_owner_matches_loop():

@@ -1,8 +1,11 @@
-"""SPMD correctness: the sharded (mesh) forward/loss equals the
-single-device one — including the MoE shard_map path (sorted dispatch +
-all_to_all) and the sharding-constraint hints.
+"""SPMD correctness: the sharded (mesh) execution equals the single-device
+one — the model forward/loss (MoE shard_map path: sorted dispatch +
+all_to_all, sharding-constraint hints) AND the SpMV facade (a topology-
+aware plan's ShardedOperator vs the same scheme's single-device Operator
+vs the simulated fallback — the paper's cross-machine consistency story
+applied to our own execution paths).
 
-Runs in a subprocess (needs 8 fake devices before jax init)."""
+Runs in subprocesses (needs 8 fake devices before jax init)."""
 import subprocess
 import sys
 import textwrap
@@ -59,3 +62,54 @@ def test_spmd_matches_single_device():
                             "HOME": "/root"})
     assert r.returncode == 0, r.stdout[-3000:] + r.stderr[-3000:]
     assert r.stdout.count("EQ_OK") == 4, r.stdout
+
+
+SCRIPT_SPMV_FACADE = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import numpy as np
+    from repro.api import SpmvProblem, Topology, plan
+    from repro.matrices import generators as G
+
+    mat = G.shuffle(G.sbm(512, 8, 0.08, 0.002, seed=4), seed=5)
+    rng = np.random.default_rng(0)
+    x = rng.standard_normal(mat.n).astype(np.float64)
+
+    # single-device reference through the same facade, same scheme
+    ref_op = plan(SpmvProblem(mat, dtype=np.float64), reorder="rcm",
+                  engine="csr", cache=False).build(cache=False)
+    want = np.asarray(ref_op(x))
+
+    for layout, shape in (("1d_rows", ()), ("2d_panels", (4, 2))):
+        for eng in ("bell", "csr"):
+            topo = Topology(devices=8, layout=layout, mesh_shape=shape)
+            pl = plan(SpmvProblem(mat, dtype=np.float64), reorder="rcm",
+                      engine=eng, topology=topo, partition="nnz_balanced",
+                      cache=False)
+            op = pl.build(cache=False)
+            assert not op.simulated
+            got_mesh = np.asarray(op(x))
+            err = np.abs(got_mesh - want).max() / np.abs(want).max()
+            assert err < 1e-12, (layout, eng, "mesh", err)
+            # the simulated fallback must agree with the mesh execution
+            op.force_simulated = True
+            got_sim = np.asarray(op(x))
+            op.force_simulated = False
+            errs = np.abs(got_sim - got_mesh).max() / np.abs(want).max()
+            assert errs < 1e-12, (layout, eng, "sim", errs)
+            print(f"SPMV_EQ_OK {layout} {eng} {err:.2e} {errs:.2e}")
+""")
+
+
+def test_sharded_spmv_facade_matches_single_device():
+    """ShardedOperator (both layouts x both panel engines, mesh AND
+    simulated paths) == the single-device facade operator to fp64
+    tolerance on the same reordered problem."""
+    r = subprocess.run([sys.executable, "-c", SCRIPT_SPMV_FACADE],
+                       capture_output=True, text=True, timeout=900,
+                       env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
+                            "JAX_PLATFORMS": "cpu", "JAX_ENABLE_X64": "1",
+                            "REPRO_REORDER_CACHE": "/tmp/spmd_eq_reorder",
+                            "HOME": "/root"})
+    assert r.returncode == 0, r.stdout[-3000:] + r.stderr[-3000:]
+    assert r.stdout.count("SPMV_EQ_OK") == 4, r.stdout
