@@ -194,6 +194,147 @@ def smoke_parallel(matrices=None, devices: int = 8) -> int:
     return failures
 
 
+def smoke_serve_spec(matrices=None):
+    from repro.experiments import ExperimentSpec, MeasurePolicy
+    from repro.experiments.cells import serve_variant
+
+    # three overload scenarios, all rate >> capacity with Zipf-skewed
+    # keys and an operator footprint past the memory budget (the ISSUE 6
+    # soak shape): one per shedding policy, the degrade one with a
+    # value-update mix on bursty arrivals
+    variants = (
+        serve_variant(rate_rps=4000, requests=160, n_keys=5, zipf_s=1.1,
+                      budget_mb=0.02, max_queue=8, window_ms=1.0,
+                      overload="reject"),
+        serve_variant(rate_rps=4000, requests=160, n_keys=5, zipf_s=1.1,
+                      budget_mb=0.02, max_queue=8, window_ms=1.0,
+                      overload="shed-oldest"),
+        serve_variant(arrival="bursty", rate_rps=2000, requests=120,
+                      n_keys=3, update_frac=0.25, budget_mb=0.02,
+                      max_queue=16, window_ms=1.0,
+                      overload="degrade-to-k1"),
+    )
+    return ExperimentSpec(
+        name="smoke_serve", matrices=tuple(matrices or ("smoke_banded",)),
+        schemes=("baseline",), engines=("auto",), ks=(8,), kind="serve",
+        variants=variants,
+        policy=MeasurePolicy(iters=1, warmup=0, with_yax=False,
+                             with_parallel=False, with_metrics=False,
+                             use_kernel="interpret"))
+
+
+SERVE_SLO_PATH = os.path.join(os.path.dirname(__file__), "results",
+                              "serve_slo.json")
+
+
+def smoke_serve(matrices=None) -> int:
+    """Traffic-sim soak campaign for CI: three overload scenarios through
+    the 'serve' cell kind, hard-asserting the hardening invariants —
+    every future resolves, resident bytes never exceed the budget,
+    counters balance, overload sheds only via typed retryable errors,
+    the LRU evicts and reloads, and the update mix value-swaps without
+    replanning. Writes the SLO summary JSON (the CI artifact) and checks
+    result-store resumability. Returns failure count."""
+    from . import common
+
+    spec = smoke_serve_spec(matrices)
+    store = common.result_store()
+    rep = common.Runner(spec, store=store, verbose=False,
+                        on_error="record").run()
+    print("name,us_per_call,derived")
+    failures = len(rep.failures)
+    for f in rep.failures:
+        print(f"{f['label']},0,\"ERROR: {f['error']}\"", flush=True)
+        print(f["traceback"], flush=True)
+    for rec in rep.records:
+        derived = {"variant": rec["variant"],
+                   "ok": rec["ok"], "shed": rec["shed"],
+                   "rejected": rec["rejected"], "errors": rec["errors"],
+                   "unresolved": rec["unresolved"],
+                   "p99_ms": round(rec["p99_ms"], 2),
+                   "coalesce": round(rec["coalesce_ratio"], 2),
+                   "evictions": rec["evictions"],
+                   "reloads": rec["op_reloads"],
+                   "swaps": rec["value_swaps"],
+                   "store": "hit" if rec["store_reused"] else "miss+measure"}
+        print(f"{rec['matrix']}_{rec['variant']},"
+              f"{rec['runner_wall_s'] * 1e6:.0f},"
+              f"\"{json.dumps(derived)}\"", flush=True)
+        # per-cell hard invariants (the acceptance criteria):
+        bad = []
+        if rec["unresolved"]:
+            bad.append(f"unresolved={rec['unresolved']} futures")
+        if not rec["budget_ok"]:
+            bad.append(f"resident_bytes_max={rec['resident_bytes_max']} "
+                       f"exceeded budget={rec['memory_budget_bytes']}")
+        if not rec["counters_balanced"]:
+            bad.append("stats counters do not balance")
+        if rec["errors"]:
+            bad.append(f"{rec['errors']} non-typed request errors")
+        if (rec["rejected"] or rec["shed"]) \
+                and not rec["retry_after_positive"]:
+            bad.append("overload error without positive retry_after_ms")
+        if bad:
+            failures += 1
+            print(f"SOAK INVARIANT FAILED [{rec['variant']}]: "
+                  f"{'; '.join(bad)}", flush=True)
+    if rep.records and not failures:
+        # campaign-level: the overload scenarios must actually overload
+        # (shed/reject), thrash the LRU (evict + reload zero-re-tune)
+        # and value-swap without replanning
+        tot = {k: sum(r[k] for r in rep.records)
+               for k in ("shed", "rejected", "evictions", "op_reloads",
+                         "value_swaps", "updates", "replans")}
+        if tot["shed"] + tot["rejected"] == 0:
+            failures += 1
+            print("SOAK UNDERLOADED: no request was shed or rejected — "
+                  "the scenarios no longer exceed capacity", flush=True)
+        if tot["evictions"] == 0 or tot["op_reloads"] == 0:
+            failures += 1
+            print(f"SOAK LRU NOT EXERCISED: evictions={tot['evictions']} "
+                  f"plan-store reloads={tot['op_reloads']}", flush=True)
+        if tot["updates"] and (tot["value_swaps"] == 0 or tot["replans"]):
+            failures += 1
+            print(f"SOAK VALUE-SWAP FAILED: updates={tot['updates']} "
+                  f"swaps={tot['value_swaps']} replans={tot['replans']} "
+                  f"(updates must swap values without replanning)",
+                  flush=True)
+
+    if not failures:
+        # resumability: the identical spec re-runs entirely from the store
+        rep2 = common.Runner(spec, store=store, verbose=False).run()
+        if rep2.measured != 0 or rep2.reused != len(spec.cells()):
+            print(f"RESUME FAILED: second run measured={rep2.measured} "
+                  f"reused={rep2.reused} (want 0/{len(spec.cells())})",
+                  flush=True)
+            failures += 1
+        else:
+            print(f"# resume: {rep2.reused}/{len(spec.cells())} cells "
+                  f"served from the store (0 re-measured)", flush=True)
+
+    rows = [[r["matrix"], r["variant"], r["ok"], r["shed"], r["rejected"],
+             r["errors"], r["unresolved"],
+             round(r["p50_ms"], 3), round(r["p99_ms"], 3),
+             round(r["coalesce_ratio"], 3), r["evictions"],
+             r["op_reloads"], r["value_swaps"], r["resident_bytes_max"]]
+            for r in rep.records]
+    common.write_csv(os.path.join(common.RESULTS_DIR,
+                                  "smoke_serve_campaign.csv"),
+                     ["matrix", "variant", "ok", "shed", "rejected",
+                      "errors", "unresolved", "p50_ms", "p99_ms",
+                      "coalesce_ratio", "evictions", "op_reloads",
+                      "value_swaps", "resident_bytes_max"],
+                     rows)
+    summary = {"failures": failures, "cells": len(spec.cells()),
+               "records": rep.records}
+    os.makedirs(os.path.dirname(SERVE_SLO_PATH), exist_ok=True)
+    with open(SERVE_SLO_PATH, "w") as f:
+        json.dump(summary, f, indent=1, default=str)
+    print(f"# serve SLO summary -> {os.path.relpath(SERVE_SLO_PATH)}",
+          flush=True)
+    return failures
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
@@ -201,6 +342,9 @@ def main() -> None:
     ap.add_argument("--smoke-parallel", action="store_true",
                     help="distributed-smoke campaign over the 'parallel' "
                          "cell kind (topology-aware plans)")
+    ap.add_argument("--smoke-serve", action="store_true",
+                    help="traffic-sim soak campaign over the 'serve' cell "
+                         "kind (hardened-service invariants)")
     ap.add_argument("--devices", type=int, default=8,
                     help="device count for --smoke-parallel")
     ap.add_argument("--matrices", default="",
@@ -210,6 +354,9 @@ def main() -> None:
     if args.smoke_parallel:
         mats = [m for m in args.matrices.split(",") if m] or None
         raise SystemExit(1 if smoke_parallel(mats, args.devices) else 0)
+    if args.smoke_serve:
+        mats = [m for m in args.matrices.split(",") if m] or None
+        raise SystemExit(1 if smoke_serve(mats) else 0)
     if args.smoke:
         mats = [m for m in args.matrices.split(",") if m] or None
         raise SystemExit(1 if smoke(mats) else 0)

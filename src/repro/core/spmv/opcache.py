@@ -56,6 +56,39 @@ def _registry() -> dict:
              BcsrOperator)}
 
 
+def operator_nbytes(op) -> int:
+    """Device-array footprint of an operator, in bytes.
+
+    Walks jax.Array leaves reachable from the operator through
+    repro-owned objects and plain containers (lists/tuples/dicts) — the
+    structure every operator class here actually has — without
+    descending into jax internals. Host-side numpy mirrors (e.g. a
+    Plan's stored perm) are deliberately NOT counted: the serving
+    layer's memory budget bounds device residency, and evicting an
+    operator frees exactly these bytes.
+    """
+    import jax
+
+    seen: set = set()
+    total = 0
+    stack = [op]
+    while stack:
+        o = stack.pop()
+        if id(o) in seen:
+            continue
+        seen.add(id(o))
+        if isinstance(o, jax.Array):
+            total += int(o.nbytes)
+        elif isinstance(o, (list, tuple)):
+            stack.extend(o)
+        elif isinstance(o, dict):
+            stack.extend(o.values())
+        elif type(o).__module__.startswith("repro.") \
+                and hasattr(o, "__dict__"):
+            stack.extend(vars(o).values())
+    return total
+
+
 def content_key(mat: CSRMatrix, engine: str, dtype_name: str,
                 block_shape=(8, 128), sell_sigma=None, probe=False,
                 k: int = 1) -> str:

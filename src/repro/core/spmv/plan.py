@@ -113,6 +113,21 @@ def _mat_key(mat: CSRMatrix) -> str:
     return h.hexdigest()[:20]
 
 
+def structure_key(mat: CSRMatrix) -> str:
+    """sha1 over the STRUCTURE only (rowptr + cols + shape, never vals).
+
+    Everything a plan decides — scheme permutation, engine, block shape,
+    σ window — is a function of the sparsity pattern alone, so two
+    matrices with equal structure_key can share one Plan: swapping the
+    values is a rebuild (`Plan.rebuild`), never a replan. This is the
+    hash the serving layer's dynamic-matrix path keys on."""
+    h = hashlib.sha1()
+    h.update(np.ascontiguousarray(mat.rowptr).tobytes())
+    h.update(np.ascontiguousarray(mat.cols).tobytes())
+    h.update(f"{tuple(mat.shape)}".encode())
+    return h.hexdigest()[:20]
+
+
 def plan_key(problem: SpmvProblem, reorder: str, engine: str,
              probe: bool, seed: int, schemes=None, topology=None,
              partition: str = "auto", partitioners=None) -> str:
@@ -457,6 +472,41 @@ class Plan:
             info["build_ms"] = (time.perf_counter() - t0) * 1e3
             if use_store:
                 self.save(op=inner)
+        return Operator(inner, self.perm, self, build_info=info)
+
+    def rebuild(self, mat: CSRMatrix, use_kernel: Optional[str] = None):
+        """Operator for a matrix with the SAME sparsity structure but
+        (possibly) different values, under this plan's frozen decision:
+        permute through the carried perm, convert with the already-chosen
+        (engine, shape) — no re-tune, no re-plan, and NO store write (the
+        plan store is content-addressed over values; publishing swapped
+        values under the old key would poison it).
+
+        The dynamic-matrix path of the serving layer: `update_values`
+        (and re-register with an unchanged `structure_key`) is a rebuild,
+        never a replan. Raises ValueError on a structure mismatch or for
+        sharded plans (whose panel layout embeds value padding)."""
+        import jax.numpy as jnp
+
+        if self.topology is not None:
+            raise ValueError("rebuild() supports single-device plans only")
+        if tuple(mat.shape) != tuple(self.mat_shape) \
+                or mat.nnz != self.mat_nnz:
+            raise ValueError(
+                f"rebuild() needs the plan's structure "
+                f"({self.mat_shape}, nnz={self.mat_nnz}); got "
+                f"({tuple(mat.shape)}, nnz={mat.nnz}) — replan instead")
+        dt = jnp.dtype(self.dtype_name)
+        rmat = mat if self.perm is None else mat.permute(self.perm)
+        t0 = time.perf_counter()
+        inner = tune_mod.build_from_plan(
+            rmat, self.tune, dtype=dt,
+            use_kernel=self.use_kernel if use_kernel is None else use_kernel,
+            nnz_bucket=self.nnz_bucket)
+        info = {"cache_hit": False, "key": self.key, "tune_ms": 0.0,
+                "build_ms": (time.perf_counter() - t0) * 1e3,
+                "load_ms": 0.0, "engine": self.tune.engine,
+                "plan": self.tune.to_json(), "value_swap": True}
         return Operator(inner, self.perm, self, build_info=info)
 
     def _build_sharded(self, dt, info: dict, use_store: bool):

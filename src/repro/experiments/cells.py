@@ -26,6 +26,13 @@ Built-ins:
                  calibrated modelled-parallel timing on the plan's
                  panels, and (verify=True) the ShardedOperator's
                  original-index-space oracle check.
+  * "serve"    — one open-loop traffic-sim run against a hardened
+                 SpmvService (serving/traffic.py): the variant encodes
+                 the load shape + service limits (`serve_variant(...)`),
+                 cell.k is the service's max_batch, and the record is
+                 the SLO summary — outcome counts (ok/shed/rejected/
+                 errors/unresolved), p50/p95/p99 latency, throughput,
+                 eviction + value-swap counters, and budget compliance.
 
 Third-party kinds register with @register_cell_kind and become one spec
 line (`ExperimentSpec(kind=...)`) like everything else.
@@ -372,4 +379,140 @@ def measure_schedule_cell(cell, mat) -> dict:
         "m": int(mat.m), "n": int(mat.n), "nnz": int(mat.nnz),
         "modelled_par_ms": ms,
         "gflops": float(ios.gflops(mat.nnz, np.array([ms]))[0]),
+    }
+
+
+# --------------------------------------------------------------------------
+# serving cells (open-loop traffic sim -> SLO summary, ISSUE 6)
+# --------------------------------------------------------------------------
+_SERVE_DEFAULTS = {
+    "arrival": "poisson", "rate_rps": 300.0, "requests": 200,
+    "n_keys": 1, "zipf_s": 1.1, "update_frac": 0.0,
+    "budget_mb": 0.0,            # 0 = unbudgeted
+    "max_queue": 64, "window_ms": 2.0, "overload": "reject",
+}
+
+
+def serve_variant(arrival: str = "poisson", rate_rps: float = 300.0,
+                  requests: int = 200, n_keys: int = 1,
+                  zipf_s: float = 1.1, update_frac: float = 0.0,
+                  budget_mb: float = 0.0, max_queue: int = 64,
+                  window_ms: float = 2.0,
+                  overload: str = "reject") -> str:
+    """The variants-axis encoding of one traffic scenario: the arrival
+    kind followed by single-letter-prefixed tokens (r=rate_rps,
+    n=requests, K=n_keys, z=zipf_s, u=update_frac, m=budget_mb [0=none],
+    q=max_queue, w=window_ms, o=overload policy). Defaults are elided so
+    equal scenarios always encode to the SAME string (cell identity)."""
+    toks = [arrival]
+    for tag, name, val in (("r", "rate_rps", rate_rps),
+                           ("n", "requests", requests),
+                           ("K", "n_keys", n_keys),
+                           ("z", "zipf_s", zipf_s),
+                           ("u", "update_frac", update_frac),
+                           ("m", "budget_mb", budget_mb),
+                           ("q", "max_queue", max_queue),
+                           ("w", "window_ms", window_ms),
+                           ("o", "overload", overload)):
+        if val != _SERVE_DEFAULTS[name]:
+            toks.append(f"{tag}{val:g}" if isinstance(val, float)
+                        else f"{tag}{val}")
+    return ",".join(toks)
+
+
+def _parse_serve_variant(variant: str) -> dict:
+    from ..serving.traffic import ARRIVALS
+
+    cfg = dict(_SERVE_DEFAULTS)
+    toks = [t for t in (variant or "").split(",") if t]
+    if toks and toks[0] in ARRIVALS:
+        cfg["arrival"] = toks.pop(0)
+    casts = {"r": ("rate_rps", float), "n": ("requests", int),
+             "K": ("n_keys", int), "z": ("zipf_s", float),
+             "u": ("update_frac", float), "m": ("budget_mb", float),
+             "q": ("max_queue", int), "w": ("window_ms", float),
+             "o": ("overload", str)}
+    for t in toks:
+        if t[0] not in casts:
+            raise ValueError(f"unknown serve-variant token {t!r} in "
+                             f"{variant!r} (known: {sorted(casts)})")
+        name, cast = casts[t[0]]
+        cfg[name] = cast(t[1:])
+    return cfg
+
+
+@register_cell_kind("serve")
+def measure_serve_cell(cell, mat) -> dict:
+    """One open-loop traffic run: cell.k is the service's max_batch, the
+    variant the scenario. The matrix is registered under n_keys distinct
+    service keys (Zipf-skewed traffic over them), so the memory budget
+    sees n_keys resident operators while the content-addressed plan
+    store holds ONE entry — evictions reload zero-re-tune, which is the
+    LRU pillar this cell measures."""
+    import jax.numpy as jnp
+
+    from ..serving import traffic
+    from ..serving.spmv_service import SpmvService
+
+    pol = cell.policy_dict()
+    cfg = _parse_serve_variant(cell.variant)
+    pattern = traffic.TrafficPattern(
+        arrival=cfg["arrival"], rate_rps=cfg["rate_rps"],
+        requests=cfg["requests"], n_keys=cfg["n_keys"],
+        zipf_s=cfg["zipf_s"], update_frac=cfg["update_frac"],
+        seed=pol["seed"])
+    budget = (None if cfg["budget_mb"] <= 0
+              else int(cfg["budget_mb"] * (1 << 20)))
+    svc = SpmvService(
+        engine=cell.engine, max_batch=max(int(cell.k), 1),
+        window_ms=cfg["window_ms"], use_kernel=pol["use_kernel"],
+        dtype=jnp.dtype(cell.dtype), max_queue=cfg["max_queue"],
+        reorder=cell.scheme, memory_budget_bytes=budget,
+        overload=cfg["overload"])
+    try:
+        for i in range(cfg["n_keys"]):
+            svc.register(f"{cell.matrix}#{i}", mat)
+        summary = traffic.run_open_loop(
+            svc, {f"{cell.matrix}#{i}": mat for i in range(cfg["n_keys"])},
+            pattern)
+        svc.flush()
+        stats = svc.stats()       # quiescent: counters fully balanced
+    finally:
+        svc.close()
+    slo = stats["slo"]
+    return {
+        "m": int(mat.m), "n": int(mat.n), "nnz": int(mat.nnz),
+        "offered": summary["offered"], "submitted": summary["submitted"],
+        "ok": summary["ok"], "shed": summary["shed"],
+        "rejected": summary["rejected"], "errors": summary["errors"],
+        "unresolved": summary["unresolved"],
+        "updates": summary["updates"],
+        "update_conflicts": summary["update_conflicts"],
+        "retry_after_positive": bool(summary["retry_after_positive"]),
+        "offered_rps": float(summary["offered_rps"]),
+        "achieved_rps": float(summary["achieved_rps"]),
+        "wall_s": float(summary["wall_s"]),
+        "p50_ms": float(slo["p50_ms"]), "p95_ms": float(slo["p95_ms"]),
+        "p99_ms": float(slo["p99_ms"]),
+        "throughput_rps": float(slo["throughput_rps"]),
+        "shed_rate": float(slo["shed_rate"]),
+        "reject_rate": float(slo["reject_rate"]),
+        "eviction_rate": float(slo["eviction_rate"]),
+        "coalesce_ratio": float(stats["coalesce_ratio"]),
+        "avg_batch": float(stats["avg_batch"]),
+        "batch_size_max": int(stats["batch_size_max"]),
+        "op_builds": int(stats["op_builds"]),
+        "op_reloads": int(stats["op_reloads"]),
+        "evictions": int(stats["evictions"]),
+        "value_swaps": int(stats["value_swaps"]),
+        "replans": int(stats["replans"]),
+        "wakeups": int(stats["wakeups"]),
+        "resident_bytes_max": int(stats["resident_bytes_max"]),
+        "memory_budget_bytes": int(budget or 0),
+        "budget_ok": bool(summary["budget_ok"]),
+        # the no-silent-drops invariant, checked at quiescence: every
+        # admitted request is accounted a result, a shed, or an error
+        "counters_balanced": bool(
+            stats["requests"] == stats["results"] + stats["sheds"]
+            + stats["errors"] and stats["pending"] == 0),
     }

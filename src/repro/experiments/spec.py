@@ -14,7 +14,9 @@ Axes mirror the paper's experiment design:
 paper's "machines" axis; each expands to its (engine, dtype, p) point.
 Alternatively the physical axes (engines/dtypes/ps) are given directly.
 `ks` is the SpMM batch-width axis, `variants` a free-form axis consumed
-by non-default cell kinds (e.g. the scheduling-policy sweep).
+by non-default cell kinds (e.g. the scheduling-policy sweep; for
+kind="serve" the variant encodes one traffic scenario — see
+cells.serve_variant — and `ks` doubles as the service's max_batch).
 
 Cell identity is CONTENT-addressed: the key hashes the physical
 coordinates plus the resolved measurement policy — never the profile

@@ -324,6 +324,11 @@ def run_serve_sim(matrices=("smoke_banded", "smoke_powerlaw", "smoke_rmat"),
         "batch_size_max": stats["batch_size_max"],
         "coalesce_ratio": stats["coalesce_ratio"],
         "avg_wait_ms": stats["avg_wait_ms"],
+        "p50_ms": stats["slo"]["p50_ms"],
+        "p95_ms": stats["slo"]["p95_ms"],
+        "p99_ms": stats["slo"]["p99_ms"],
+        "throughput_rps": stats["slo"]["throughput_rps"],
+        "wakeups": stats["wakeups"],
         "max_rel_err": max_rel_err,
         "ok": max_rel_err < 1e-4,
     }
@@ -334,6 +339,88 @@ def run_serve_sim(matrices=("smoke_banded", "smoke_powerlaw", "smoke_rmat"),
     if write_results:
         os.makedirs(RESULTS, exist_ok=True)
         with open(os.path.join(RESULTS, "spmv_serve_sim.json"), "w") as f:
+            json.dump(rec, f, indent=1)
+    return rec
+
+
+def run_serve_traffic(matrix: str = "smoke_powerlaw",
+                      arrival: str = "poisson", rate_rps: float = 500.0,
+                      requests: int = 200, n_keys: int = 4,
+                      zipf_s: float = 1.1, update_frac: float = 0.1,
+                      budget_mb: float = 0.0, max_batch: int = 8,
+                      window_ms: float = 2.0, max_queue: int = 32,
+                      overload: str = "reject", engine: str = "auto",
+                      reorder: str = "baseline", seed: int = 0,
+                      write_results: bool = True) -> dict:
+    """Open-loop traffic run against the hardened service (one scenario,
+    driven directly — the campaign-shaped path is `benchmarks/run.py
+    --smoke-serve`). The matrix is registered under n_keys service keys
+    with Zipf-skewed traffic; a budget_mb > 0 memory budget makes the
+    operator LRU (eviction + zero-re-tune plan-store reload) part of the
+    scenario, update_frac > 0 mixes in no-replan value swaps. Reports
+    outcome counts, SLO percentiles and the hardening invariants
+    (`ok` = every future resolved + budget respected + counters balance).
+    """
+    from ..matrices import suite
+    from ..serving import traffic
+    from ..serving.spmv_service import SpmvService
+
+    mat = suite.get(matrix)
+    pattern = traffic.TrafficPattern(
+        arrival=arrival, rate_rps=rate_rps, requests=requests,
+        n_keys=n_keys, zipf_s=zipf_s, update_frac=update_frac, seed=seed)
+    budget = None if budget_mb <= 0 else int(budget_mb * (1 << 20))
+    keys = [f"{matrix}#{i}" for i in range(n_keys)]
+    with SpmvService(engine=engine, reorder=reorder, max_batch=max_batch,
+                     window_ms=window_ms, max_queue=max_queue,
+                     memory_budget_bytes=budget, overload=overload) as svc:
+        for k in keys:
+            svc.register(k, mat)
+        summary = traffic.run_open_loop(svc, {k: mat for k in keys},
+                                        pattern)
+        svc.flush()
+        stats = svc.stats()
+    slo = stats["slo"]
+    rec = {
+        "matrix": matrix, "n_keys": n_keys, "arrival": arrival,
+        "rate_rps": rate_rps, "requests": requests, "zipf_s": zipf_s,
+        "update_frac": update_frac, "overload": overload,
+        "memory_budget_bytes": budget or 0,
+        "offered": summary["offered"], "ok_count": summary["ok"],
+        "shed": summary["shed"], "rejected": summary["rejected"],
+        "errors": summary["errors"], "unresolved": summary["unresolved"],
+        "updates": summary["updates"],
+        "offered_rps": summary["offered_rps"],
+        "achieved_rps": summary["achieved_rps"],
+        "p50_ms": slo["p50_ms"], "p95_ms": slo["p95_ms"],
+        "p99_ms": slo["p99_ms"], "shed_rate": slo["shed_rate"],
+        "eviction_rate": slo["eviction_rate"],
+        "coalesce_ratio": stats["coalesce_ratio"],
+        "op_builds": stats["op_builds"], "op_reloads": stats["op_reloads"],
+        "evictions": stats["evictions"],
+        "value_swaps": stats["value_swaps"],
+        "resident_bytes_max": stats["resident_bytes_max"],
+        "budget_ok": summary["budget_ok"],
+        "counters_balanced": (
+            stats["requests"] == stats["results"] + stats["sheds"]
+            + stats["errors"] and stats["pending"] == 0),
+        "ok": (summary["unresolved"] == 0 and summary["budget_ok"]
+               and stats["requests"] == stats["results"] + stats["sheds"]
+               + stats["errors"]),
+    }
+    print(f"[serve-traffic] {matrix} x{n_keys} keys {arrival}@"
+          f"{rate_rps:g}rps {overload}: ok={rec['ok_count']} "
+          f"shed={rec['shed']} rejected={rec['rejected']} "
+          f"errors={rec['errors']} unresolved={rec['unresolved']} | "
+          f"p50={rec['p50_ms']:.2f}ms p99={rec['p99_ms']:.2f}ms "
+          f"coalesce={rec['coalesce_ratio']:.2f} "
+          f"evictions={rec['evictions']} reloads={rec['op_reloads']} "
+          f"swaps={rec['value_swaps']} budget_ok={rec['budget_ok']}",
+          flush=True)
+    if write_results:
+        os.makedirs(RESULTS, exist_ok=True)
+        with open(os.path.join(RESULTS, "spmv_serve_traffic.json"),
+                  "w") as f:
             json.dump(rec, f, indent=1)
     return rec
 
@@ -370,7 +457,43 @@ def main():
     ap.add_argument("--serve-reorder", default="baseline",
                     help="reordering scheme the service applies internally "
                          "(requests stay in the original index space)")
+    ap.add_argument("--serve-traffic", action="store_true",
+                    help="open-loop traffic run against the hardened "
+                         "service (arrivals, Zipf keys, budgets, shedding)")
+    ap.add_argument("--arrival", default="poisson",
+                    choices=["poisson", "uniform", "bursty"])
+    ap.add_argument("--rate", type=float, default=500.0,
+                    help="mean offered arrival rate (requests/s)")
+    ap.add_argument("--keys", type=int, default=4,
+                    help="distinct service keys (Zipf-skewed traffic)")
+    ap.add_argument("--zipf", type=float, default=1.1)
+    ap.add_argument("--update-frac", type=float, default=0.1,
+                    help="fraction of arrivals that are value updates")
+    ap.add_argument("--budget-mb", type=float, default=0.0,
+                    help="operator memory budget in MiB (0 = unbudgeted)")
+    ap.add_argument("--max-queue", type=int, default=32)
+    ap.add_argument("--overload", default="reject",
+                    choices=["reject", "shed-oldest", "degrade-to-k1"])
     args = ap.parse_args()
+    if args.serve_traffic:
+        if args.spmm != 1 or args.probe or args.devices > 1:
+            ap.error("--serve-traffic does not combine with "
+                     "--spmm/--probe/--devices")
+        rec = run_serve_traffic(
+            matrix=args.matrix or "smoke_powerlaw", arrival=args.arrival,
+            rate_rps=args.rate, requests=args.requests, n_keys=args.keys,
+            zipf_s=args.zipf, update_frac=args.update_frac,
+            budget_mb=args.budget_mb, max_batch=args.max_batch,
+            window_ms=args.window_ms, max_queue=args.max_queue,
+            overload=args.overload, engine=args.engine,
+            reorder=args.serve_reorder)
+        if not rec["ok"]:
+            raise SystemExit(
+                f"serve-traffic invariants FAILED: "
+                f"unresolved={rec['unresolved']} "
+                f"budget_ok={rec['budget_ok']} "
+                f"counters_balanced={rec['counters_balanced']}")
+        return
     if args.serve_sim:
         if args.matrix or args.spmm != 1 or args.probe:
             ap.error("--serve-sim does not combine with "

@@ -1,0 +1,479 @@
+"""Production-hardening acceptance for SpmvService (ISSUE 6).
+
+Covers the four pillars plus the satellite invariants:
+  * typed exception hierarchy (legacy builtin bases preserved);
+  * memory-budgeted operator LRU — the resident-bytes gauge never
+    exceeds the budget, eviction never loses a plan (zero-re-tune
+    plan-store reload), singleton overruns serve transiently;
+  * admission control + QoS — per-key/global/byte limits, reject vs
+    shed-oldest vs degrade-to-k1, priority classes;
+  * dynamic matrices — update_values swaps values with NO replan,
+    update_structure replans in the background behind a staleness gate
+    with an atomic swap;
+  * observability — latency percentiles from the bounded reservoir,
+    self-consistent counters (requests == results + sheds + errors at
+    quiescence), zero busy-wakes when quiescent;
+  * the N-producer concurrency stress: every Future resolves, no
+    deadlock, counters balance.
+"""
+import threading
+import time
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core.spmv import opcache
+from repro.matrices import generators as G
+from repro.serving.errors import (BadRequest, KeyBusy, QueueFull,
+                                  RequestShed, ServiceClosed, ServiceError,
+                                  UnregisteredKey)
+from repro.serving.spmv_service import SpmvService, _Reservoir
+
+
+def _mats():
+    return {"a": G.banded(256, 4, seed=1),
+            "b": G.banded(256, 4, seed=9),
+            "c": G.power_law(256, alpha=1.8, seed=3)}
+
+
+def _force_stop(svc):
+    """Tear down a service whose dispatcher is parked in a huge batch
+    window without paying the drain (the backpressure-test pattern)."""
+    with svc._cv:
+        for q in svc._queues.values():
+            q.clear()
+        svc._queued = 0
+        svc._queued_bytes = 0
+        svc._stop = True
+        svc._cv.notify_all()
+    svc._worker.join(timeout=10)
+
+
+# -- satellite: typed exception hierarchy ----------------------------------
+def test_typed_errors_keep_builtin_bases():
+    assert issubclass(ServiceClosed, RuntimeError)
+    assert issubclass(QueueFull, RuntimeError)
+    assert issubclass(RequestShed, QueueFull)
+    assert issubclass(KeyBusy, RuntimeError)
+    assert issubclass(UnregisteredKey, KeyError)
+    assert issubclass(BadRequest, ValueError)
+    for c in (ServiceClosed, QueueFull, KeyBusy, UnregisteredKey,
+              BadRequest):
+        assert issubclass(c, ServiceError)
+
+
+def test_submit_raises_typed_errors():
+    svc = SpmvService(max_batch=2, window_ms=1.0, engine="csr", cache=False)
+    svc.register("a", _mats()["a"])
+    with pytest.raises(UnregisteredKey):
+        svc.submit("nope", np.zeros(4))
+    with pytest.raises(BadRequest):
+        svc.submit("a", np.zeros(7))
+    with pytest.raises(UnregisteredKey):
+        svc.update_values("nope", np.zeros(4))
+    with pytest.raises(BadRequest):
+        svc.update_values("a", np.zeros(7))
+    svc.close()
+    with pytest.raises(ServiceClosed):
+        svc.submit("a", np.zeros(256))
+    with pytest.raises(ServiceClosed):
+        svc.update_values("a", np.zeros(256))
+
+
+def test_queue_full_carries_retry_after():
+    svc = SpmvService(max_batch=8, window_ms=5000.0, engine="csr",
+                      cache=False, max_queue=2)
+    svc.register("a", _mats()["a"])
+    x = np.zeros(256)
+    for _ in range(2):
+        svc.submit("a", x)
+    with pytest.raises(QueueFull) as ei:
+        svc.submit("a", x)
+    assert ei.value.retry_after_ms > 0
+    assert "backpressure" in str(ei.value)
+    _force_stop(svc)
+
+
+# -- pillar 1: memory-budgeted LRU -----------------------------------------
+def test_lru_evicts_under_budget_and_reloads_without_retune(monkeypatch,
+                                                            tmp_path):
+    monkeypatch.setenv("REPRO_OPERATOR_CACHE", str(tmp_path))
+    mats = _mats()
+    # probe the per-operator footprint with an unbudgeted twin first
+    with SpmvService(max_batch=4, window_ms=1.0, engine="csr",
+                     use_kernel="interpret") as probe:
+        probe.register("a", mats["a"])
+        nb = opcache.operator_nbytes(probe.operator("a"))
+    assert nb > 0
+    budget = int(2.5 * nb)          # room for two residents, never three
+    with SpmvService(max_batch=4, window_ms=1.0, engine="csr",
+                     use_kernel="interpret",
+                     memory_budget_bytes=budget) as svc:
+        for k, m in mats.items():
+            svc.register(k, m)
+        for k in ("a", "b", "c"):
+            svc.operator(k)
+        s = svc.stats()
+        assert s["evictions"] >= 1
+        assert s["resident_ops"] <= 2
+        assert s["resident_bytes"] <= budget
+        assert s["resident_bytes_max"] <= budget, \
+            "the gauge must NEVER exceed the budget, even transiently"
+        # "a" was evicted (LRU-first); re-resolving it must reload from
+        # the plan store — device arrays restored, ZERO re-tune
+        before = s["op_builds"]
+        op = svc.operator("a")
+        s2 = svc.stats()
+        assert s2["op_builds"] == before + 1
+        assert s2["op_reloads"] >= 1
+        assert op.build_info["cache_hit"] is True
+        assert op.build_info.get("tune_ms", 0.0) == 0.0
+        # and it still answers correctly
+        x = np.random.default_rng(0).standard_normal(256)
+        y = svc.submit("a", x).result(timeout=30)
+        want = mats["a"].spmv(x)
+        assert np.abs(y - want).max() / (np.abs(want).max() + 1e-9) < 1e-4
+
+
+def test_singleton_over_budget_serves_transiently(monkeypatch, tmp_path):
+    monkeypatch.setenv("REPRO_OPERATOR_CACHE", str(tmp_path))
+    mats = _mats()
+    with SpmvService(max_batch=4, window_ms=1.0, engine="csr",
+                     use_kernel="interpret", memory_budget_bytes=1) as svc:
+        svc.register("a", mats["a"])
+        x = np.random.default_rng(1).standard_normal(256)
+        y = svc.submit("a", x).result(timeout=30)
+        want = mats["a"].spmv(x)
+        assert np.abs(y - want).max() / (np.abs(want).max() + 1e-9) < 1e-4
+        s = svc.stats()
+    assert s["resident_bytes"] == 0          # never tracked as resident
+    assert s["resident_bytes_max"] == 0
+    assert s["budget_overruns"] >= 1
+
+
+# -- pillar 2: admission control + QoS -------------------------------------
+def test_shed_oldest_fails_oldest_with_request_shed():
+    svc = SpmvService(max_batch=8, window_ms=5000.0, engine="csr",
+                      cache=False, max_queue=2, overload="shed-oldest")
+    svc.register("a", _mats()["a"])
+    x = np.zeros(256)
+    f0 = svc.submit("a", x)
+    f1 = svc.submit("a", x)
+    f2 = svc.submit("a", x)          # admitted: f0 (oldest) is shed
+    assert f0.done()
+    with pytest.raises(RequestShed) as ei:
+        f0.result(timeout=0)
+    assert ei.value.retry_after_ms > 0
+    assert not f1.done() and not f2.done()
+    s = svc.stats()
+    assert s["sheds"] == 1 and s["rejected"] == 0
+    assert s["queued"] == 2
+    _force_stop(svc)
+
+
+def test_per_key_overflow_sheds_own_oldest_only():
+    # a full PER-KEY queue is relieved from that key's own queue (drop-
+    # oldest); other keys' work is untouched — shedding them could never
+    # free the slot
+    svc = SpmvService(max_batch=8, window_ms=5000.0, engine="csr",
+                      cache=False, max_queue=2, overload="shed-oldest")
+    mats = _mats()
+    svc.register("lo", mats["a"], priority=0)
+    svc.register("hi", mats["b"], priority=1)
+    x = np.zeros(256)
+    lo0 = svc.submit("lo", x)
+    hi0 = svc.submit("hi", x)
+    hi1 = svc.submit("hi", x)
+    hi2 = svc.submit("hi", x)        # hi full: hi0 (own oldest) is shed
+    assert isinstance(hi0.exception(timeout=0), RequestShed)
+    assert not (lo0.done() or hi1.done() or hi2.done())
+    assert svc.stats()["sheds"] == 1
+    _force_stop(svc)
+
+
+def test_priority_classes_protect_high_under_global_limit():
+    svc = SpmvService(max_batch=8, window_ms=5000.0, engine="csr",
+                      cache=False, max_queue=8, max_queue_global=3,
+                      overload="shed-oldest")
+    mats = _mats()
+    svc.register("lo", mats["a"], priority=0)
+    svc.register("hi", mats["b"], priority=1)
+    x = np.zeros(256)
+    lo0 = svc.submit("lo", x)
+    lo1 = svc.submit("lo", x)
+    hi0 = svc.submit("hi", x)
+    # global limit hit; admitting hi sheds the LOWEST class's oldest
+    hi1 = svc.submit("hi", x)
+    assert isinstance(lo0.exception(timeout=0), RequestShed)
+    assert not (lo1.done() or hi0.done() or hi1.done())
+    # a lo request cannot shed hi work: the only remaining lo victim is
+    # shed, then every queued request outranks it -> typed reject once
+    # the global queue refills with hi traffic
+    hi2 = svc.submit("hi", x)        # sheds lo1 (global limit again)
+    assert isinstance(lo1.exception(timeout=0), RequestShed)
+    with pytest.raises(QueueFull):
+        svc.submit("lo", x)          # only hi queued: outranked, reject
+    s = svc.stats()
+    assert s["sheds"] == 2 and s["rejected"] == 1
+    assert not (hi0.done() or hi1.done() or hi2.done())
+    _force_stop(svc)
+
+
+def test_degrade_to_k1_drains_instead_of_waiting_windows():
+    # above the watermark (max_queue // 2) the dispatcher must stop
+    # waiting out the (enormous) batch window and drain immediately
+    svc = SpmvService(max_batch=8, window_ms=60000.0, engine="csr",
+                      cache=False, max_queue=4, overload="degrade-to-k1")
+    svc.register("a", _mats()["a"])
+    x = np.zeros(256)
+    futs = [svc.submit("a", x) for _ in range(4)]
+    t0 = time.monotonic()
+    for f in futs:
+        f.result(timeout=30)
+    assert time.monotonic() - t0 < 30, "drain mode must not wait windows"
+    svc.close()
+
+
+def test_global_queue_and_byte_limits():
+    mats = _mats()
+    svc = SpmvService(max_batch=8, window_ms=5000.0, engine="csr",
+                      cache=False, max_queue=8, max_queue_global=3)
+    svc.register("a", mats["a"])
+    svc.register("b", mats["b"])
+    x = np.zeros(256)
+    svc.submit("a", x)
+    svc.submit("a", x)
+    svc.submit("b", x)
+    with pytest.raises(QueueFull, match="global"):
+        svc.submit("b", x)
+    _force_stop(svc)
+    svc2 = SpmvService(max_batch=8, window_ms=5000.0, engine="csr",
+                       cache=False, max_queue=8,
+                       max_queue_bytes=3 * x.nbytes)
+    svc2.register("a", mats["a"])
+    for _ in range(3):
+        svc2.submit("a", x)
+    with pytest.raises(QueueFull, match="payload"):
+        svc2.submit("a", x)
+    _force_stop(svc2)
+
+
+# -- pillar 3: dynamic matrices --------------------------------------------
+def test_update_values_swaps_without_replan(monkeypatch, tmp_path):
+    monkeypatch.setenv("REPRO_OPERATOR_CACHE", str(tmp_path))
+    mat = _mats()["a"]
+    with SpmvService(max_batch=4, window_ms=1.0, engine="csr",
+                     use_kernel="interpret") as svc:
+        svc.register("a", mat)
+        x = np.random.default_rng(2).standard_normal(256)
+        y0 = svc.submit("a", x).result(timeout=30)
+        plan_before = svc._plans["a"][2]
+        builds_before = svc.stats()["op_builds"]
+        svc.update_values("a", mat.vals * 3.0)
+        y1 = svc.submit("a", x).result(timeout=30)
+        s = svc.stats()
+        assert s["value_swaps"] == 1
+        assert s["replans"] == 0
+        # same Plan object, no fresh plan() call, no re-tune
+        assert svc._plans["a"][2] is plan_before
+        assert s["op_builds"] == builds_before
+        assert svc._build_info["a"].get("value_swap") is True
+    want = 3.0 * mat.spmv(x)
+    assert np.abs(y1 - want).max() / (np.abs(want).max() + 1e-9) < 1e-4
+    assert not np.allclose(y0, y1)
+
+
+def test_update_structure_background_replan_and_staleness_gate():
+    a = G.banded(256, 4, seed=1)
+    b = G.power_law(256, alpha=1.8, seed=7)     # different structure
+    x = np.random.default_rng(3).standard_normal(256)
+    with SpmvService(max_batch=4, window_ms=1.0, engine="csr",
+                     cache=False, use_kernel="interpret") as svc:
+        svc.register("m", a)
+        assert np.abs(svc.submit("m", x).result(timeout=30)
+                      - a.spmv(x)).max() < 1e-3
+        # slow the replan down so the staleness gate is observable
+        orig = svc._build_operator
+
+        def slow(*args, **kw):
+            time.sleep(0.3)
+            return orig(*args, **kw)
+
+        svc._build_operator = slow
+        fut = svc.update_structure("m", b, staleness_s=0.0)
+        # staleness 0: the key gates immediately — this request must be
+        # answered from the NEW matrix once the replan lands, never from
+        # the stale operator
+        y = svc.submit("m", x).result(timeout=30)
+        gen = fut.result(timeout=30)
+        assert gen == svc._gen["m"]
+        want = b.spmv(x)
+        assert np.abs(y - want).max() / (np.abs(want).max() + 1e-9) < 1e-4
+        s = svc.stats()
+        assert s["replans"] == 1 and s["replan_errors"] == 0
+        with pytest.raises(BadRequest):
+            svc.update_structure("m", G.banded(128, 4, seed=1))  # shape
+
+
+def test_update_structure_serves_stale_until_swap():
+    a = G.banded(256, 4, seed=1)
+    b = G.power_law(256, alpha=1.8, seed=7)
+    x = np.random.default_rng(4).standard_normal(256)
+    with SpmvService(max_batch=4, window_ms=1.0, engine="csr",
+                     cache=False, use_kernel="interpret") as svc:
+        svc.register("m", a)
+        svc.submit("m", x).result(timeout=30)
+        orig = svc._build_operator
+        started = threading.Event()
+
+        def slow(*args, **kw):
+            started.set()
+            time.sleep(0.5)
+            return orig(*args, **kw)
+
+        svc._build_operator = slow
+        fut = svc.update_structure("m", b)     # no staleness bound
+        assert started.wait(timeout=10)
+        # while the replan runs, the STALE operator keeps answering
+        y_stale = svc.submit("m", x).result(timeout=30)
+        want_a = a.spmv(x)
+        assert np.abs(y_stale - want_a).max() \
+            / (np.abs(want_a).max() + 1e-9) < 1e-4
+        fut.result(timeout=30)
+        y_new = svc.submit("m", x).result(timeout=30)
+        want_b = b.spmv(x)
+        assert np.abs(y_new - want_b).max() \
+            / (np.abs(want_b).max() + 1e-9) < 1e-4
+
+
+def test_update_values_refused_during_replan():
+    a = G.banded(256, 4, seed=1)
+    b = G.power_law(256, alpha=1.8, seed=7)
+    with SpmvService(max_batch=4, window_ms=1.0, engine="csr",
+                     cache=False, use_kernel="interpret") as svc:
+        svc.register("m", a)
+        svc.operator("m")
+        orig = svc._build_operator
+        svc._build_operator = lambda *a_, **k: (time.sleep(0.4),
+                                                orig(*a_, **k))[1]
+        fut = svc.update_structure("m", b)
+        with pytest.raises(KeyBusy):
+            svc.update_values("m", a.vals * 2.0)
+        with pytest.raises(KeyBusy):
+            svc.update_structure("m", b)
+        fut.result(timeout=30)
+
+
+# -- satellite: CV wakeups + observability ---------------------------------
+def test_quiescent_service_never_busy_wakes():
+    with SpmvService(max_batch=4, window_ms=2.0, engine="csr",
+                     cache=False) as svc:
+        svc.register("a", _mats()["a"])
+        before = svc.stats()["wakeups"]
+        time.sleep(0.5)
+        assert svc.stats()["wakeups"] == before, \
+            "idle dispatcher must sleep on the CV, not poll"
+        # and after real work quiesces, it goes back to zero wakes
+        x = np.zeros(256)
+        for _ in range(5):
+            svc.submit("a", x)
+        svc.flush(timeout=30)
+        settled = svc.stats()["wakeups"]
+        time.sleep(0.4)
+        assert svc.stats()["wakeups"] == settled
+
+
+def test_latency_percentiles_from_reservoir():
+    mat = _mats()["a"]
+    with SpmvService(max_batch=4, window_ms=1.0, engine="csr",
+                     cache=False, use_kernel="interpret") as svc:
+        svc.register("a", mat)
+        rng = np.random.default_rng(5)
+        futs = [svc.submit("a", rng.standard_normal(256))
+                for _ in range(20)]
+        svc.flush(timeout=60)
+        for f in futs:
+            f.result(timeout=10)
+        slo = svc.stats()["slo"]
+    assert slo["latency_samples"] == 20
+    assert 0 < slo["p50_ms"] <= slo["p95_ms"] <= slo["p99_ms"]
+    assert slo["throughput_rps"] > 0
+
+
+def test_reservoir_is_bounded_and_counts_all():
+    r = _Reservoir(size=64, seed=0)
+    for i in range(5000):
+        r.add(float(i))
+    assert r.count == 5000
+    assert len(r.snapshot()) == 64
+
+
+def test_stats_snapshot_counters_balance_after_close_drop():
+    svc = SpmvService(max_batch=8, window_ms=60000.0, engine="csr",
+                      cache=False)
+    svc.register("a", _mats()["a"])
+    fut = svc.submit("a", np.zeros(256))
+    with pytest.raises(TimeoutError):
+        svc.close(timeout=0.05)      # drain cannot finish: window is huge
+    assert isinstance(fut.exception(timeout=5), ServiceClosed)
+    s = svc.stats()
+    assert s["requests"] == s["results"] + s["sheds"] + s["errors"] == 1
+    assert s["pending"] == 0
+
+
+# -- satellite: concurrency stress -----------------------------------------
+@pytest.mark.parametrize("overload", ["reject", "shed-oldest"])
+def test_producer_stress_every_future_resolves(monkeypatch, tmp_path,
+                                               overload):
+    monkeypatch.setenv("REPRO_OPERATOR_CACHE", str(tmp_path))
+    mats = _mats()
+    svc = SpmvService(max_batch=8, window_ms=1.0, engine="csr",
+                      use_kernel="interpret", max_queue=16,
+                      overload=overload,
+                      memory_budget_bytes=1 << 20)
+    svc.register("a", mats["a"])
+    svc.register("b", mats["b"])
+    futures = []
+    flock = threading.Lock()
+    n_threads, per_thread = 4, 30
+
+    def produce(tid):
+        rng = np.random.default_rng(tid)
+        for i in range(per_thread):
+            key = ("a", "b")[int(rng.integers(2))]
+            try:
+                f = svc.submit(key, rng.standard_normal(256))
+                with flock:
+                    futures.append(f)
+            except QueueFull:
+                pass                         # typed + retryable: fine
+            if i % 10 == 5:
+                try:
+                    svc.update_values(key, mats[key].vals * (1 + 0.1 * i))
+                except (KeyBusy, ServiceClosed):
+                    pass
+
+    threads = [threading.Thread(target=produce, args=(t,))
+               for t in range(n_threads)]
+    for t in threads:
+        t.start()
+    svc.register("c", mats["c"])             # concurrent registration
+    for t in threads:
+        t.join(timeout=60)
+        assert not t.is_alive(), "producer deadlocked"
+    svc.close(timeout=60)
+    resolved = 0
+    for f in futures:
+        assert f.done(), "a Future was silently dropped"
+        if f.exception(timeout=0) is None:
+            resolved += 1
+        else:
+            assert isinstance(f.exception(timeout=0),
+                              (ServiceError, RuntimeError))
+    s = svc.stats()
+    assert s["requests"] == s["results"] + s["sheds"] + s["errors"]
+    assert s["pending"] == 0
+    assert resolved == s["results"]
+    # a second close must be a no-op, not a deadlock
+    svc.close(timeout=5)

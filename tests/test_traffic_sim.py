@@ -1,0 +1,188 @@
+"""Open-loop traffic simulator + the "serve" experiment cell kind.
+
+The schedule pieces (arrival_times / zipf_keys / update_mask) are pure,
+seeded functions — tested without a service. run_open_loop is then
+exercised end-to-end against a small budgeted service, and the "serve"
+cell kind is driven through ExperimentSpec → Runner → ResultStore with
+the same resumability contract every other kind honors.
+"""
+import numpy as np
+import pytest
+
+from repro.matrices import generators as G
+from repro.serving import traffic
+from repro.serving.traffic import TrafficPattern, arrival_times, \
+    run_open_loop, update_mask, zipf_keys
+
+
+@pytest.fixture()
+def stores(tmp_path, monkeypatch):
+    monkeypatch.setenv("REPRO_PLAN_CACHE", str(tmp_path / "plans"))
+    monkeypatch.setenv("REPRO_REORDER_CACHE", str(tmp_path / "reorder"))
+    monkeypatch.setenv("REPRO_OPERATOR_CACHE", str(tmp_path / "opcache"))
+    monkeypatch.setenv("REPRO_RESULT_STORE", str(tmp_path / "results"))
+    return tmp_path
+
+
+# -- schedule determinism & statistics -------------------------------------
+@pytest.mark.parametrize("arrival", traffic.ARRIVALS)
+def test_arrival_times_deterministic_ascending_mean_rate(arrival):
+    p = TrafficPattern(arrival=arrival, rate_rps=500.0, requests=400,
+                      seed=7)
+    t1, t2 = arrival_times(p), arrival_times(p)
+    assert np.array_equal(t1, t2), "same seed must give same schedule"
+    assert t1.shape == (400,)
+    assert np.all(np.diff(t1) >= 0) and t1[0] > 0
+    # open-loop mean rate ~ rate_rps (bursty has the same MEAN rate)
+    achieved = p.requests / t1[-1]
+    assert 0.6 * p.rate_rps < achieved < 1.6 * p.rate_rps
+    if arrival != "uniform":        # uniform is seed-independent
+        assert not np.array_equal(
+            t1, arrival_times(TrafficPattern(arrival=arrival,
+                                             rate_rps=500.0,
+                                             requests=400, seed=8)))
+
+
+def test_uniform_arrivals_are_evenly_spaced():
+    p = TrafficPattern(arrival="uniform", rate_rps=100.0, requests=10)
+    t = arrival_times(p)
+    assert np.allclose(np.diff(t), 1.0 / 100.0)
+
+
+def test_bursty_has_heavier_interarrival_tail_than_uniform():
+    p = TrafficPattern(arrival="bursty", rate_rps=1000.0, requests=2000,
+                      seed=3)
+    gaps = np.diff(arrival_times(p))
+    # on/off modulation: the largest gaps dwarf the median
+    assert gaps.max() > 5 * np.median(gaps)
+
+
+def test_zipf_keys_skew_toward_key_zero():
+    p = TrafficPattern(rate_rps=1.0, requests=2000, n_keys=8, zipf_s=1.5,
+                      seed=1)
+    k = zipf_keys(p)
+    assert k.min() >= 0 and k.max() < 8
+    counts = np.bincount(k, minlength=8)
+    assert counts[0] > counts[-1] * 2, "key 0 must be the hot key"
+    # zipf_s=0 degenerates to uniform: far flatter
+    flat = np.bincount(zipf_keys(TrafficPattern(
+        rate_rps=1.0, requests=2000, n_keys=8, zipf_s=0.0, seed=1)),
+        minlength=8)
+    assert flat[0] < counts[0]
+
+
+def test_update_mask_matches_fraction():
+    p = TrafficPattern(rate_rps=1.0, requests=5000, update_frac=0.3,
+                      seed=2)
+    m = update_mask(p)
+    assert m.dtype == np.bool_ and m.shape == (5000,)
+    assert 0.25 < m.mean() < 0.35
+    assert not update_mask(TrafficPattern(rate_rps=1.0, requests=50)).any()
+
+
+def test_pattern_validation():
+    with pytest.raises(ValueError, match="arrival"):
+        TrafficPattern(arrival="lognormal")
+    with pytest.raises(ValueError):
+        TrafficPattern(rate_rps=0.0)
+    with pytest.raises(ValueError):
+        TrafficPattern(requests=0)
+    with pytest.raises(ValueError, match="update_frac"):
+        TrafficPattern(update_frac=1.0)
+
+
+# -- variant round-trip ----------------------------------------------------
+def test_serve_variant_roundtrips_and_elides_defaults():
+    from repro.experiments.cells import _parse_serve_variant, serve_variant
+
+    assert serve_variant() == "poisson"
+    v = serve_variant(arrival="bursty", rate_rps=2000.0, requests=120,
+                      n_keys=3, update_frac=0.25, budget_mb=0.02,
+                      max_queue=16, window_ms=1.0,
+                      overload="degrade-to-k1")
+    cfg = _parse_serve_variant(v)
+    assert cfg["arrival"] == "bursty" and cfg["rate_rps"] == 2000.0
+    assert cfg["requests"] == 120 and cfg["n_keys"] == 3
+    assert cfg["update_frac"] == 0.25 and cfg["budget_mb"] == 0.02
+    assert cfg["max_queue"] == 16 and cfg["window_ms"] == 1.0
+    assert cfg["overload"] == "degrade-to-k1"
+    # untouched axes stay at defaults
+    assert cfg["zipf_s"] == 1.1
+    # equal scenarios encode identically (cell identity)
+    assert v == serve_variant(arrival="bursty", rate_rps=2000.0,
+                              requests=120, n_keys=3, update_frac=0.25,
+                              budget_mb=0.02, max_queue=16, window_ms=1.0,
+                              overload="degrade-to-k1")
+    with pytest.raises(ValueError, match="unknown serve-variant"):
+        _parse_serve_variant("poisson,x9")
+
+
+# -- end-to-end open loop --------------------------------------------------
+def test_run_open_loop_accounts_every_arrival(stores):
+    from repro.serving.spmv_service import SpmvService
+
+    mats = {f"k{i}": G.banded(128, 3, seed=i) for i in range(2)}
+    p = TrafficPattern(arrival="poisson", rate_rps=2000.0, requests=60,
+                      n_keys=2, update_frac=0.2, seed=0)
+    with SpmvService(max_batch=8, window_ms=1.0, engine="csr",
+                     use_kernel="interpret", max_queue=16,
+                     overload="reject") as svc:
+        for k, m in mats.items():
+            svc.register(k, m)
+        summary = run_open_loop(svc, mats, p)
+        svc.flush(timeout=60)
+    assert summary["offered"] == 60
+    assert (summary["submitted"] + summary["rejected"]
+            + summary["updates"] + summary["update_conflicts"]
+            + summary["update_errors"]) == 60
+    assert (summary["ok"] + summary["shed"] + summary["errors"]
+            + summary["unresolved"]) == summary["submitted"]
+    assert summary["unresolved"] == 0
+    assert summary["errors"] == 0
+    assert summary["retry_after_positive"]
+    assert summary["budget_ok"]
+    assert summary["stats"]["requests"] == summary["submitted"]
+
+
+def test_run_open_loop_requires_enough_matrices():
+    p = TrafficPattern(rate_rps=1.0, requests=1, n_keys=3)
+    with pytest.raises(ValueError, match="3 keys"):
+        run_open_loop(None, {"only": None}, p)
+
+
+# -- the "serve" experiment cell kind --------------------------------------
+def test_serve_cell_kind_campaign_resumes(stores):
+    from repro.experiments import (ExperimentSpec, MeasurePolicy,
+                                   ResultStore, Runner)
+    from repro.experiments.cells import serve_variant
+
+    spec = ExperimentSpec(
+        name="t_serve", matrices=("smoke_banded",),
+        schemes=("baseline",), engines=("csr",), ks=(4,),
+        kind="serve",
+        variants=(serve_variant(rate_rps=1500.0, requests=50, n_keys=2,
+                                budget_mb=0.02, max_queue=8,
+                                window_ms=1.0, overload="shed-oldest"),),
+        policy=MeasurePolicy(iters=1, warmup=0, with_yax=False,
+                             with_parallel=False, with_metrics=False,
+                             use_kernel="interpret"))
+    store = ResultStore()
+    rep = Runner(spec, store=store, verbose=False).run()
+    assert rep.measured == 1 and rep.reused == 0
+    rec = rep.records[0]
+    assert rec["offered"] == 50
+    assert rec["unresolved"] == 0
+    assert rec["errors"] == 0
+    assert rec["counters_balanced"]
+    assert rec["budget_ok"]
+    assert rec["memory_budget_bytes"] == int(0.02 * (1 << 20))
+    assert rec["p50_ms"] <= rec["p95_ms"] <= rec["p99_ms"]
+    if rec["shed"] or rec["rejected"]:
+        assert rec["retry_after_positive"]
+    # records must be store-serializable scalars
+    for v in rec.values():
+        assert isinstance(v, (int, float, bool, str))
+    # resumability: identical spec re-run measures nothing
+    rep2 = Runner(spec, store=store, verbose=False).run()
+    assert rep2.measured == 0 and rep2.reused == 1
+    assert rep2.records[0]["store_reused"]
