@@ -1,0 +1,27 @@
+#!/usr/bin/env python
+"""Perf-regression gate CLI (thin wrapper over repro.experiments.regress).
+
+    PYTHONPATH=src python benchmarks/regress.py \
+        --baseline benchmarks/baseline/BENCH_spmv.json \
+        --current BENCH_spmv.json
+
+Exit 0 = pass, 1 = regression beyond tolerance, 2 = incomparable
+(scale stamps differ / unreadable summary). Defaults compare the
+committed baseline against the repo-root BENCH_spmv.json.
+"""
+import os
+import sys
+
+_HERE = os.path.dirname(os.path.abspath(__file__))
+sys.path.insert(0, os.path.join(_HERE, "..", "src"))
+
+from repro.experiments.regress import main  # noqa: E402
+
+if __name__ == "__main__":
+    argv = sys.argv[1:]
+    if "--baseline" not in argv:
+        argv += ["--baseline",
+                 os.path.join(_HERE, "baseline", "BENCH_spmv.json")]
+    if "--current" not in argv:
+        argv += ["--current", os.path.join(_HERE, "..", "BENCH_spmv.json")]
+    raise SystemExit(main(argv))

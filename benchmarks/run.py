@@ -52,10 +52,13 @@ def smoke_spec(matrices=None):
         # interpret-mode keeps the Pallas kernel path covered on CPU
         # whenever the tuner picks a kernel engine; verify gates every
         # cell on the numpy oracle in the ORIGINAL index space (this also
-        # exercises the operator's carried permutation)
+        # exercises the operator's carried permutation); probe exercises
+        # the empirical tuner path so a traced smoke run carries the full
+        # plan -> probe -> build -> kernel span nest
         policy=MeasurePolicy(iters=3, warmup=1, with_yax=False,
                              with_parallel=False, with_metrics=False,
-                             verify=True, use_kernel="interpret"))
+                             verify=True, probe=True,
+                             use_kernel="interpret"))
 
 
 def smoke(matrices=None) -> int:
@@ -336,6 +339,8 @@ def smoke_serve(matrices=None) -> int:
 
 
 def main() -> None:
+    import contextlib
+
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--smoke", action="store_true")
@@ -349,17 +354,41 @@ def main() -> None:
                     help="device count for --smoke-parallel")
     ap.add_argument("--matrices", default="",
                     help="comma-separated matrix names (restricts --smoke)")
+    ap.add_argument("--trace", default="", metavar="PATH",
+                    help="record phase-attributed spans for the whole run: "
+                         ".jsonl -> raw event log, anything else -> "
+                         "Chrome-trace JSON (load in ui.perfetto.dev)")
     ap.add_argument("--only", default="")
     args = ap.parse_args()
+
+    @contextlib.contextmanager
+    def traced():
+        if not args.trace:
+            yield
+            return
+        from repro import obs
+
+        with obs.tracing() as buf:
+            yield
+        obs.write_trace(args.trace, buf.flush())
+        print(f"# trace: {len(buf)} span events -> {args.trace}",
+              flush=True)
+
     if args.smoke_parallel:
         mats = [m for m in args.matrices.split(",") if m] or None
-        raise SystemExit(1 if smoke_parallel(mats, args.devices) else 0)
+        with traced():
+            rc = 1 if smoke_parallel(mats, args.devices) else 0
+        raise SystemExit(rc)
     if args.smoke_serve:
         mats = [m for m in args.matrices.split(",") if m] or None
-        raise SystemExit(1 if smoke_serve(mats) else 0)
+        with traced():
+            rc = 1 if smoke_serve(mats) else 0
+        raise SystemExit(rc)
     if args.smoke:
         mats = [m for m in args.matrices.split(",") if m] or None
-        raise SystemExit(1 if smoke(mats) else 0)
+        with traced():
+            rc = 1 if smoke(mats) else 0
+        raise SystemExit(rc)
     only = set(args.only.split(",")) if args.only else None
 
     print("name,us_per_call,derived")

@@ -57,10 +57,13 @@ from .core.spmv.plan import Operator, Plan, SpmvProblem, plan, plan_key
 from .core.spmv.topology import Topology
 from .experiments import (ExperimentSpec, MeasurePolicy, MissingCellError,
                           Report, ResultStore, Runner)
+# observability: obs.tracing() spans every layer above; obs.snapshot()
+# is the process-wide metrics registry (DESIGN.md "Observability")
+from . import obs
 
 __all__ = [
     "SpmvProblem", "plan", "Plan", "Operator", "plan_key", "Topology",
-    "ShardedOperator",
+    "ShardedOperator", "obs",
     "register_scheme", "register_engine", "register_partitioner",
     "register_profile",
     "get_scheme", "get_engine", "get_partitioner", "get_profile",

@@ -29,6 +29,7 @@ from typing import Iterator, Mapping
 
 import numpy as np
 
+from ... import obs
 from ..registry import SCHEME_REGISTRY, get_scheme, register_scheme
 from ..sparse.csr import CSRMatrix
 from .louvain import louvain_order
@@ -126,21 +127,28 @@ def _content_key(mat: CSRMatrix, scheme: str, seed: int) -> str:
 
 def reorder(mat: CSRMatrix, scheme: str, seed: int = 0, cache: bool = True) -> np.ndarray:
     fn = get_scheme(scheme).fn
-    if not cache:
-        return fn(mat, seed)
-    cache_dir = _cache_dir()
-    os.makedirs(cache_dir, exist_ok=True)
-    path = os.path.join(cache_dir, _content_key(mat, scheme, seed) + ".npy")
-    if os.path.exists(path):
-        return np.load(path)
-    perm = fn(mat, seed)
-    # write-then-rename (opcache.py's tmp-name convention: pid AND thread
-    # id) so a concurrent benchmark run never reads a torn .npy
-    tmp = f"{path}.{os.getpid()}.{threading.get_ident()}.tmp"
-    with open(tmp, "wb") as f:
-        np.save(f, perm)
-    os.replace(tmp, path)
-    return perm
+    with obs.span("plan.reorder", scheme=scheme, seed=int(seed),
+                  shape=str(tuple(mat.shape))) as sp:
+        if not cache:
+            return fn(mat, seed)
+        cache_dir = _cache_dir()
+        os.makedirs(cache_dir, exist_ok=True)
+        path = os.path.join(cache_dir,
+                            _content_key(mat, scheme, seed) + ".npy")
+        if os.path.exists(path):
+            obs.counter("reorder_cache.hits").inc()
+            sp.set(cache_hit=True)
+            return np.load(path)
+        obs.counter("reorder_cache.misses").inc()
+        sp.set(cache_hit=False)
+        perm = fn(mat, seed)
+        # write-then-rename (opcache.py's tmp-name convention: pid AND
+        # thread id) so a concurrent run never reads a torn .npy
+        tmp = f"{path}.{os.getpid()}.{threading.get_ident()}.tmp"
+        with open(tmp, "wb") as f:
+            np.save(f, perm)
+        os.replace(tmp, path)
+        return perm
 
 
 def apply_scheme(mat: CSRMatrix, scheme: str, seed: int = 0, cache: bool = True) -> CSRMatrix:

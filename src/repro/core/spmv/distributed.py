@@ -41,6 +41,7 @@ from typing import Optional, Tuple
 
 import numpy as np
 
+from ... import obs
 from ..sparse.bell import to_block_ell
 from ..sparse.csr import CSRMatrix
 from ..sparse.partition import (nnz_balanced_partition, partition_to_owner,
@@ -468,22 +469,34 @@ class ShardedOperator:
     def _exec(self, x, permuted: bool, batched: bool):
         import jax.numpy as jnp
 
-        x = jnp.asarray(x)
-        x2 = x if batched else x[:, None]
-        nv = int(x2.shape[1])
-        dtype = x2.dtype
-        zero = jnp.zeros((1, nv), dtype)
-        xe = jnp.concatenate([x2, zero], axis=0)
-        xp = jnp.take(xe, self._in_idx_r if permuted else self._in_idx,
-                      axis=0)
-        key = (nv, self.simulated)
-        fn = self._fns.get(key)
-        if fn is None:
-            fn = self._fns[key] = self._make_fn(nv)
-        yp = fn(self._device_arrays(dtype), xp)
-        y = jnp.take(yp, self._out_idx_r if permuted else self._out_idx,
-                     axis=0)
-        return y if batched else y[:, 0]
+        lay = self.layout
+        with obs.span("sharded.spmv", engine=lay.engine,
+                      schedule=lay.schedule, devices=lay.topology.devices,
+                      simulated=self.simulated):
+            x = jnp.asarray(x)
+            x2 = x if batched else x[:, None]
+            nv = int(x2.shape[1])
+            dtype = x2.dtype
+            with obs.span("sharded.gather_x", schedule=lay.schedule):
+                zero = jnp.zeros((1, nv), dtype)
+                xe = jnp.concatenate([x2, zero], axis=0)
+                xp = jnp.take(xe,
+                              self._in_idx_r if permuted else self._in_idx,
+                              axis=0)
+            key = (nv, self.simulated)
+            fn = self._fns.get(key)
+            if fn is None:
+                fn = self._fns[key] = self._make_fn(nv)
+            # one fused jit: per-device compute + the plan's collective
+            # (all-gather / halo ring permutes / 2-D all-reduce)
+            with obs.span("sharded.exec", schedule=lay.schedule,
+                          halo=int(lay.halo)):
+                yp = fn(self._device_arrays(dtype), xp)
+            with obs.span("sharded.scatter_y", schedule=lay.schedule):
+                y = jnp.take(yp,
+                             self._out_idx_r if permuted else self._out_idx,
+                             axis=0)
+            return y if batched else y[:, 0]
 
     def __call__(self, x, permuted: bool = False):
         return self._exec(x, permuted, batched=getattr(x, "ndim", 1) == 2)

@@ -31,6 +31,7 @@ import time
 
 import numpy as np
 
+from ... import obs
 from ..sparse.csr import CSRMatrix
 from .tune import TunePlan, tune
 
@@ -197,7 +198,9 @@ def build_cached(mat: CSRMatrix, engine: str = "auto", dtype=None,
                         load_ms=(time.perf_counter() - t0) * 1e3,
                         engine=plan.engine if plan else engine,
                         plan=plan.to_json() if plan else None)
+            obs.counter("opcache.hits").inc()
             return op, info
+        obs.counter("opcache.misses").inc()
 
     plan = None
     t0 = time.perf_counter()
@@ -214,4 +217,5 @@ def build_cached(mat: CSRMatrix, engine: str = "auto", dtype=None,
     info["plan"] = plan.to_json() if plan else None
     if use_cache:
         _store(key, op, plan)
+        obs.counter("opcache.writes").inc()
     return op, info

@@ -34,6 +34,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ... import obs
 from .. import registry
 from ..registry import register_engine
 from ..sparse.bell import to_bcsr, to_block_ell
@@ -91,14 +92,18 @@ class DeviceCSR:
         self.vals = jnp.asarray(vals, dtype=dtype)
 
     def __call__(self, x: jax.Array) -> jax.Array:
-        return _csr_matvec(self.row_ids, self.cols, self.vals, x, self.m)
+        with obs.span("kernel.spmv", engine="csr"):
+            return _csr_matvec(self.row_ids, self.cols, self.vals, x,
+                               self.m)
 
     def matmul(self, x: jax.Array) -> jax.Array:
         """x: [n, k] -> y: [m, k]: one gather/segment-sum pass serves all k
         vectors (the matrix stream is paid once, not k times)."""
         if x.ndim == 1:
             return self(x)
-        return _csr_matmul(self.row_ids, self.cols, self.vals, x, self.m)
+        with obs.span("kernel.spmm", engine="csr", k=int(x.shape[1])):
+            return _csr_matmul(self.row_ids, self.cols, self.vals, x,
+                               self.m)
 
     # -- operator-cache protocol (opcache.py) ------------------------------
     def state(self):
@@ -136,13 +141,15 @@ class DeviceELL:
         self.padded_nnz = mat.m * k
 
     def __call__(self, x: jax.Array) -> jax.Array:
-        return _ell_matvec(self.ell_cols, self.ell_vals, x)
+        with obs.span("kernel.spmv", engine="ell"):
+            return _ell_matvec(self.ell_cols, self.ell_vals, x)
 
     def matmul(self, x: jax.Array) -> jax.Array:
         """x: [n, k] -> y: [m, k] (batched padded-ELL contraction)."""
         if x.ndim == 1:
             return self(x)
-        return _ell_matmul(self.ell_cols, self.ell_vals, x)
+        with obs.span("kernel.spmm", engine="ell", k=int(x.shape[1])):
+            return _ell_matmul(self.ell_cols, self.ell_vals, x)
 
     def state(self):
         meta = {"m": self.m, "n": self.n, "padded_nnz": self.padded_nnz}
@@ -164,10 +171,12 @@ class DeviceDense:
         self.a = jnp.asarray(mat.to_dense(), dtype=dtype)
 
     def __call__(self, x: jax.Array) -> jax.Array:
-        return self.a @ x
+        with obs.span("kernel.spmv", engine="dense"):
+            return self.a @ x
 
     def matmul(self, x: jax.Array) -> jax.Array:
-        return self.a @ x
+        with obs.span("kernel.spmm", engine="dense"):
+            return self.a @ x
 
     def state(self):
         return {}, {"a": np.asarray(self.a)}

@@ -51,6 +51,7 @@ from typing import Any, Optional
 
 import numpy as np
 
+from ... import obs
 from .. import registry
 from ..sparse import partition as partition_mod
 from ..sparse.csr import CSRMatrix
@@ -361,6 +362,7 @@ class Plan:
         with open(jtmp, "w") as f:
             json.dump(rec, f)
         os.replace(jtmp, base + ".json")
+        obs.counter("plan_store.writes").inc()
         return base + ".json"
 
     @staticmethod
@@ -376,6 +378,7 @@ class Plan:
             base = os.path.join(_store_dir(), key_or_path)
         jpath, zpath = base + ".json", base + ".npz"
         if not (os.path.exists(jpath) and os.path.exists(zpath)):
+            obs.counter("plan_store.misses").inc()
             return None
         try:
             with open(jpath) as f:
@@ -397,8 +400,10 @@ class Plan:
             pl.tune_ms = 0.0
             pl.reorder_ms = 0.0
             pl.plan_ms = 0.0
+            obs.counter("plan_store.hits").inc()
             return pl
         except Exception:
+            obs.counter("plan_store.misses").inc()
             return None
 
     # -- materialization ---------------------------------------------------
@@ -441,6 +446,14 @@ class Plan:
         Store hit -> device arrays reload (load_ms); miss -> permute +
         format conversion (build_ms) and the complete entry (plan + perm
         + operator payload) is persisted. Never re-tunes."""
+        with obs.span("plan.build", key=self.key, scheme=self.scheme,
+                      engine=self.tune.engine) as sp:
+            op = self._build_impl(cache)
+            info = getattr(op, "build_info", None) or {}
+            sp.set(cache_hit=bool(info.get("cache_hit")))
+            return op
+
+    def _build_impl(self, cache: bool):
         import jax.numpy as jnp
 
         dt = jnp.dtype(self.dtype_name)
@@ -497,16 +510,19 @@ class Plan:
                 f"({self.mat_shape}, nnz={self.mat_nnz}); got "
                 f"({tuple(mat.shape)}, nnz={mat.nnz}) — replan instead")
         dt = jnp.dtype(self.dtype_name)
-        rmat = mat if self.perm is None else mat.permute(self.perm)
-        t0 = time.perf_counter()
-        inner = tune_mod.build_from_plan(
-            rmat, self.tune, dtype=dt,
-            use_kernel=self.use_kernel if use_kernel is None else use_kernel,
-            nnz_bucket=self.nnz_bucket)
-        info = {"cache_hit": False, "key": self.key, "tune_ms": 0.0,
-                "build_ms": (time.perf_counter() - t0) * 1e3,
-                "load_ms": 0.0, "engine": self.tune.engine,
-                "plan": self.tune.to_json(), "value_swap": True}
+        with obs.span("plan.rebuild", key=self.key,
+                      engine=self.tune.engine):
+            rmat = mat if self.perm is None else mat.permute(self.perm)
+            t0 = time.perf_counter()
+            inner = tune_mod.build_from_plan(
+                rmat, self.tune, dtype=dt,
+                use_kernel=(self.use_kernel if use_kernel is None
+                            else use_kernel),
+                nnz_bucket=self.nnz_bucket)
+            info = {"cache_hit": False, "key": self.key, "tune_ms": 0.0,
+                    "build_ms": (time.perf_counter() - t0) * 1e3,
+                    "load_ms": 0.0, "engine": self.tune.engine,
+                    "plan": self.tune.to_json(), "value_swap": True}
         return Operator(inner, self.perm, self, build_info=info)
 
     def _build_sharded(self, dt, info: dict, use_store: bool):
@@ -585,6 +601,23 @@ def _partition_candidates(partition) -> list:
 def plan(problem: SpmvProblem, reorder: str = "auto", engine: str = "auto",
          probe: bool = False, cache: bool = True, topology=None,
          partition="auto") -> Plan:
+    """See _plan_decide — this wrapper only adds the root "plan" span
+    (scheme/engine decision, store consultation, probe runs all nest
+    under it)."""
+    with obs.span("plan", shape=str(tuple(problem.mat.shape)),
+                  nnz=int(problem.mat.nnz), reorder=reorder,
+                  engine=engine, probe=probe, k=int(problem.k)) as sp:
+        pl = _plan_decide(problem, reorder, engine, probe, cache,
+                          topology, partition)
+        sp.set(scheme=pl.scheme, engine_chosen=pl.tune.engine,
+               cache_hit=bool(pl.cache_hit), key=pl.key)
+        return pl
+
+
+def _plan_decide(problem: SpmvProblem, reorder: str = "auto",
+                 engine: str = "auto", probe: bool = False,
+                 cache: bool = True, topology=None,
+                 partition="auto") -> Plan:
     """Stage 1+2 of the pipeline: decide (scheme, engine, shape) — and,
     given a topology, the row partition — for the problem and return the
     serializable Plan.

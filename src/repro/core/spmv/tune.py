@@ -37,6 +37,7 @@ from typing import Optional
 
 import numpy as np
 
+from ... import obs
 from .. import registry
 from ..sparse import metrics
 from ..sparse.csr import CSRMatrix
@@ -257,6 +258,13 @@ def tune(mat: CSRMatrix, probe: bool = False, dtype=None,
          use_kernel: str = "auto", k: int = 1) -> TunePlan:
     """Pick (engine, shape) for `mat` at RHS batch width k.
     probe=True times the top candidates (at the same k, via matmul)."""
+    with obs.span("plan.tune", shape=str(tuple(mat.shape)),
+                  nnz=int(mat.nnz), probe=probe, k=int(k)) as _sp:
+        return _tune_impl(mat, probe, dtype, use_kernel, k, _sp)
+
+
+def _tune_impl(mat: CSRMatrix, probe, dtype, use_kernel: str, k: int,
+               _sp) -> TunePlan:
     t0 = time.perf_counter()
     k = max(int(k), 1)
     feat = matrix_features(mat)
@@ -282,16 +290,21 @@ def tune(mat: CSRMatrix, probe: bool = False, dtype=None,
         best_ms = np.inf
         for cd in ranked[:PROBE_TOP_K]:
             lab = _label(cd["engine"], cd["block_shape"], cd["sigma"])
-            op = make_engine(mat, cd["engine"], dtype=dt,
-                             block_shape=cd["block_shape"],
-                             sell_sigma=cd["sigma"], use_kernel=use_kernel)
-            ms = float(np.median(ios.run_ios_batched(
-                op, mat.n, k, iters=PROBE_ITERS, warmup=1, dtype=dt)))
+            with obs.span("plan.probe", candidate=lab,
+                          engine=cd["engine"], k=int(k)) as psp:
+                op = make_engine(mat, cd["engine"], dtype=dt,
+                                 block_shape=cd["block_shape"],
+                                 sell_sigma=cd["sigma"],
+                                 use_kernel=use_kernel)
+                ms = float(np.median(ios.run_ios_batched(
+                    op, mat.n, k, iters=PROBE_ITERS, warmup=1, dtype=dt)))
+                psp.set(ms=ms)
             probe_ms[lab] = ms
             if ms < best_ms:
                 best_ms, best = ms, cd
         source = "probe"
     lab = _label(best["engine"], best["block_shape"], best["sigma"])
+    _sp.set(engine=best["engine"], source=source)
     return TunePlan(engine=best["engine"], block_shape=best["block_shape"],
                     sell_sigma=best["sigma"], cost_bytes=costs[lab],
                     costs=costs, features=feat, source=source,

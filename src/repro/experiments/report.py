@@ -276,6 +276,10 @@ class Report:
             summary["speedup_vs_baseline"] = {
                 s: round(v / geo[baseline], 4) for s, v in geo.items()
                 if s != baseline}
+        summary["scale"] = self._scale_stamp()
+        phases = self._phase_medians()
+        if phases:
+            summary["phases"] = phases
         split = self.plan_run_split()
         if split:
             vals = list(split.values())
@@ -289,6 +293,46 @@ class Report:
                 "amortize_iters": self.spec.policy.amortize_iters,
             }
         return summary
+
+    REPRESENTATIVE_MIN_M = 100_000    # paper-scale row-count floor
+
+    def _scale_stamp(self) -> dict:
+        """Matrix-scale / iters provenance for the summary. `regress.py`
+        refuses to compare summaries whose stamps differ, and
+        `representative: false` marks smoke-scale numbers (e.g. RCM at
+        0.70x on tiny matrices) as non-transferable to paper scale."""
+        ms = [int(r["m"]) for r in self.records if "m" in r]
+        nnzs = [int(r["nnz"]) for r in self.records if "nnz" in r]
+        pol = self.spec.policy
+        max_m = max(ms) if ms else 0
+        stamp = {
+            "matrices": sorted({r["matrix"] for r in self.records}),
+            "max_m": max_m,
+            "max_nnz": max(nnzs) if nnzs else 0,
+            "iters": int(pol.iters),
+            "warmup": int(pol.warmup),
+            "use_kernel": pol.use_kernel,
+            "representative": max_m >= self.REPRESENTATIVE_MIN_M,
+        }
+        if not stamp["representative"]:
+            stamp["note"] = (
+                f"smoke-scale measurement (max m={max_m} < "
+                f"{self.REPRESENTATIVE_MIN_M}); speedups are NOT "
+                f"representative of paper-scale matrices")
+        return stamp
+
+    def _phase_medians(self) -> dict:
+        """Per-phase plan-time attribution medians (ms) over the cells
+        that recorded each phase — the span-backed timing fields."""
+        out = {}
+        for field, label in (("reorder_ms", "reorder_ms"),
+                             ("tune_ms", "tune_ms"),
+                             ("format_build_ms", "build_ms"),
+                             ("op_load_ms", "load_ms")):
+            vals = [r[field] for r in self.records if field in r]
+            if vals:
+                out[f"median_{label}"] = round(float(np.median(vals)), 4)
+        return out
 
     def write_bench_summary(self, path: str,
                             field: str = "seq_ios_gflops") -> dict:

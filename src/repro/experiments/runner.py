@@ -16,6 +16,7 @@ import time
 import traceback
 from typing import Callable, Iterable, Optional
 
+from .. import obs
 from .cells import get_cell_kind
 from .report import Report
 from .spec import ExperimentSpec
@@ -54,14 +55,20 @@ class Runner:
             key = cell.key()
             stored = self.store.get(key)
             if stored is not None:
-                entries.append((cell, stored["record"], True, 0.0))
+                with obs.span("runner.cell", key=key, label=cell.label(),
+                              matrix=cell.matrix, scheme=cell.scheme,
+                              store_hit=True):
+                    entries.append((cell, stored["record"], True, 0.0))
                 reused += 1
                 continue
             if cell.matrix != mat_name:    # cells are matrix-major
                 mat_name, mat = cell.matrix, self._get_matrix(cell.matrix)
             t0 = time.time()
             try:
-                record = measure(cell, mat)
+                with obs.span("runner.cell", key=key, label=cell.label(),
+                              matrix=cell.matrix, scheme=cell.scheme,
+                              store_hit=False):
+                    record = self._measure_cell(measure, cell, mat)
             except Exception as e:
                 if self.on_error == "raise":
                     raise
@@ -84,6 +91,20 @@ class Runner:
                       f"({wall:.1f}s)", flush=True)
         return Report(self.spec, entries, measured=measured, reused=reused,
                       failures=failures, store=self.store)
+
+    @staticmethod
+    def _measure_cell(measure, cell, mat):
+        """Measure one cell; policy trace=True additionally records the
+        cell's phase-attributed span events into the record (persisted in
+        the ResultStore alongside the measurement — MeasurePolicy makes
+        `trace` key-relevant only when set, so untraced campaigns keep
+        their cell keys)."""
+        if not cell.policy_dict().get("trace"):
+            return measure(cell, mat)
+        with obs.tracing() as buf:
+            record = measure(cell, mat)
+        record["trace"] = buf.flush()
+        return record
 
 
 def _suite_get(name: str):

@@ -60,6 +60,9 @@ class MeasurePolicy:
     * time_spmv=False — analytic-only cells (no operator build at all).
     * verify — gate each cell on the original-index-space numpy oracle.
     * probe — empirically probe tuner candidates at plan time.
+    * trace — record each cell's phase-attributed span events (repro.obs)
+      into its stored record. Key-relevant only when True (the
+      verify_tol convention), so untraced campaigns keep their keys.
     * amortize_iters — SpMV calls the one-off plan time is spread over in
       the Report's amortization/break-even accounting (paper §3: plan
       time is reported separately, never folded into SpMV time).
@@ -76,6 +79,7 @@ class MeasurePolicy:
     verify: bool = False
     verify_tol: float = 1e-4
     probe: bool = False
+    trace: bool = False
     use_kernel: str = "auto"
     seed: int = 0
     amortize_iters: int = 100
@@ -105,6 +109,8 @@ class MeasurePolicy:
         }
         if self.verify:   # tolerance only gates verifying cells
             out["verify_tol"] = float(self.verify_tol)
+        if self.trace:    # key-relevant only when tracing (key stability)
+            out["trace"] = True
         return out
 
 

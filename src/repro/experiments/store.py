@@ -23,6 +23,8 @@ import threading
 import time
 from typing import Optional
 
+from .. import obs
+
 STORE_SCHEMA_VERSION = 1
 
 _OFF = ("off", "0", "none", "")
@@ -60,11 +62,14 @@ class ResultStore:
             with open(path) as f:
                 entry = json.load(f)
         except (OSError, json.JSONDecodeError, UnicodeDecodeError):
+            obs.counter("result_store.misses").inc()
             return None
         if (not isinstance(entry, dict)
                 or entry.get("schema") != STORE_SCHEMA_VERSION
                 or not isinstance(entry.get("record"), dict)):
+            obs.counter("result_store.misses").inc()
             return None
+        obs.counter("result_store.hits").inc()
         return entry
 
     def put(self, key: str, cell: dict, record: dict) -> str:
@@ -85,6 +90,7 @@ class ResultStore:
         with open(tmp, "w") as f:
             json.dump(entry, f)
         os.replace(tmp, path)
+        obs.counter("result_store.writes").inc()
         return path
 
     def delete(self, key: str) -> bool:

@@ -7,6 +7,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ... import obs
 from ...core.sparse.bell import BCSR
 from .kernel import bcsr_spmm
 from .ref import bcsr_spmm_ref
@@ -51,22 +52,26 @@ class BcsrOperator:
         self.use_kernel = use_kernel
 
     def __call__(self, x: jax.Array) -> jax.Array:
-        squeeze = x.ndim == 1
-        if squeeze:
-            x = x[:, None]
-        n, nv = x.shape
-        bm, bn = self.block_shape
-        x2d = jnp.pad(x, ((0, self.ncb * bn - n), (0, 0))).reshape(self.ncb, bn, nv)
-        if self.use_kernel == "pallas":
-            y = bcsr_spmm(self.blocks, self.block_rows, self.block_cols, x2d, self.nbr)
-        elif self.use_kernel == "interpret":
-            y = bcsr_spmm(self.blocks, self.block_rows, self.block_cols, x2d,
-                          self.nbr, interpret=True)
-        else:
-            y = bcsr_spmm_ref(self.blocks, self.block_rows, self.block_cols,
+        with obs.span("kernel.spmv", engine="bcsr",
+                      use_kernel=self.use_kernel):
+            squeeze = x.ndim == 1
+            if squeeze:
+                x = x[:, None]
+            n, nv = x.shape
+            bm, bn = self.block_shape
+            x2d = jnp.pad(x, ((0, self.ncb * bn - n), (0, 0))) \
+                .reshape(self.ncb, bn, nv)
+            if self.use_kernel == "pallas":
+                y = bcsr_spmm(self.blocks, self.block_rows, self.block_cols,
                               x2d, self.nbr)
-        y = y.reshape(-1, nv)[: self.shape[0]]
-        return y[:, 0] if squeeze else y
+            elif self.use_kernel == "interpret":
+                y = bcsr_spmm(self.blocks, self.block_rows, self.block_cols,
+                              x2d, self.nbr, interpret=True)
+            else:
+                y = bcsr_spmm_ref(self.blocks, self.block_rows,
+                                  self.block_cols, x2d, self.nbr)
+            y = y.reshape(-1, nv)[: self.shape[0]]
+            return y[:, 0] if squeeze else y
 
     def matmul(self, x: jax.Array) -> jax.Array:
         """x: [n, k] -> y: [m, k] (vectorized __call__: one stream of the

@@ -12,6 +12,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ... import obs
 from ...core.sparse.bell import BlockELL
 from .kernel import bell_spmm
 from .ref import bell_spmm_ref
@@ -33,21 +34,24 @@ class BellOperator:
 
     def __call__(self, x: jax.Array) -> jax.Array:
         """x: [n] or [n, nv] -> y: [m] or [m, nv]."""
-        squeeze = x.ndim == 1
-        if squeeze:
-            x = x[:, None]
-        n, nv = x.shape
-        bm, bn = self.block_shape
-        pad_n = self.ncb * bn - n
-        x2d = jnp.pad(x, ((0, pad_n), (0, 0))).reshape(self.ncb, bn, nv)
-        if self.use_kernel == "pallas":
-            y = bell_spmm(self.blocks, self.block_cols, x2d)
-        elif self.use_kernel == "interpret":
-            y = bell_spmm(self.blocks, self.block_cols, x2d, interpret=True)
-        else:
-            y = bell_spmm_ref(self.blocks, self.block_cols, x2d)
-        y = y.reshape(-1, nv)[: self.shape[0]]
-        return y[:, 0] if squeeze else y
+        with obs.span("kernel.spmv", engine="bell",
+                      use_kernel=self.use_kernel):
+            squeeze = x.ndim == 1
+            if squeeze:
+                x = x[:, None]
+            n, nv = x.shape
+            bm, bn = self.block_shape
+            pad_n = self.ncb * bn - n
+            x2d = jnp.pad(x, ((0, pad_n), (0, 0))).reshape(self.ncb, bn, nv)
+            if self.use_kernel == "pallas":
+                y = bell_spmm(self.blocks, self.block_cols, x2d)
+            elif self.use_kernel == "interpret":
+                y = bell_spmm(self.blocks, self.block_cols, x2d,
+                              interpret=True)
+            else:
+                y = bell_spmm_ref(self.blocks, self.block_cols, x2d)
+            y = y.reshape(-1, nv)[: self.shape[0]]
+            return y[:, 0] if squeeze else y
 
     def matmul(self, x: jax.Array) -> jax.Array:
         """x: [n, k] -> y: [m, k] — the block layout already carries a

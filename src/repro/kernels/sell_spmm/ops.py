@@ -10,6 +10,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from ... import obs
 from .kernel import sell_spmm_ktiled
 from .ref import sell_spmm_ref
 
@@ -36,17 +37,21 @@ def sell_matmul(op, x: jax.Array) -> jax.Array:
     batches would otherwise pay up to the tile floor in wasted flops).
     """
     n, k = x.shape
-    if op.use_kernel in ("pallas", "interpret"):
-        kb = pick_k_tile(k)
-        k_pad = ((k + kb - 1) // kb) * kb
-        xp = jnp.pad(x, ((0, op.n_pad - n), (0, k_pad - k)))
-        y = sell_spmm_ktiled(op.chunk_vals, op.chunk_cols, op.chunk_slice,
-                             xp, op.num_slices, kb,
-                             interpret=(op.use_kernel == "interpret"))
-    else:
-        xp = jnp.pad(x, ((0, op.n_pad - n), (0, 0)))
-        y = sell_spmm_ref(op.chunk_vals, op.chunk_cols, op.chunk_slice,
-                          xp, op.num_slices)
-    # y is in slice order; inv_perm[r] = slice position of original row r
-    y = y.reshape(-1, y.shape[-1])[op.inv_perm]
-    return y[:, :k]
+    with obs.span("kernel.spmm", engine="sell", k=int(k),
+                  use_kernel=op.use_kernel) as sp:
+        if op.use_kernel in ("pallas", "interpret"):
+            kb = pick_k_tile(k)
+            sp.set(k_tile=int(kb))
+            k_pad = ((k + kb - 1) // kb) * kb
+            xp = jnp.pad(x, ((0, op.n_pad - n), (0, k_pad - k)))
+            y = sell_spmm_ktiled(op.chunk_vals, op.chunk_cols,
+                                 op.chunk_slice, xp, op.num_slices, kb,
+                                 interpret=(op.use_kernel == "interpret"))
+        else:
+            xp = jnp.pad(x, ((0, op.n_pad - n), (0, 0)))
+            y = sell_spmm_ref(op.chunk_vals, op.chunk_cols, op.chunk_slice,
+                              xp, op.num_slices)
+        # y is in slice order; inv_perm[r] = slice position of original
+        # row r
+        y = y.reshape(-1, y.shape[-1])[op.inv_perm]
+        return y[:, :k]

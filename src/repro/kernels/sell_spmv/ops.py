@@ -9,6 +9,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ... import obs
 from ...core.sparse.sell import SellCS
 from .kernel import sell_spmm
 from .ref import sell_spmm_ref
@@ -36,23 +37,27 @@ class SellOperator:
 
     def __call__(self, x: jax.Array) -> jax.Array:
         """x: [n] or [n, nv] -> y: [m] or [m, nv]."""
-        squeeze = x.ndim == 1
-        if squeeze:
-            x = x[:, None]
-        n, nv = x.shape
-        xp = jnp.pad(x, ((0, self.n_pad - n), (0, 0)))
-        if self.use_kernel == "pallas":
-            y = sell_spmm(self.chunk_vals, self.chunk_cols, self.chunk_slice,
-                          xp, self.num_slices)
-        elif self.use_kernel == "interpret":
-            y = sell_spmm(self.chunk_vals, self.chunk_cols, self.chunk_slice,
-                          xp, self.num_slices, interpret=True)
-        else:
-            y = sell_spmm_ref(self.chunk_vals, self.chunk_cols,
+        with obs.span("kernel.spmv", engine="sell",
+                      use_kernel=self.use_kernel):
+            squeeze = x.ndim == 1
+            if squeeze:
+                x = x[:, None]
+            n, nv = x.shape
+            xp = jnp.pad(x, ((0, self.n_pad - n), (0, 0)))
+            if self.use_kernel == "pallas":
+                y = sell_spmm(self.chunk_vals, self.chunk_cols,
                               self.chunk_slice, xp, self.num_slices)
-        # y is in slice order; inv_perm[r] = slice position of original row r
-        y = y.reshape(-1, nv)[self.inv_perm]
-        return y[:, 0] if squeeze else y
+            elif self.use_kernel == "interpret":
+                y = sell_spmm(self.chunk_vals, self.chunk_cols,
+                              self.chunk_slice, xp, self.num_slices,
+                              interpret=True)
+            else:
+                y = sell_spmm_ref(self.chunk_vals, self.chunk_cols,
+                                  self.chunk_slice, xp, self.num_slices)
+            # y is in slice order; inv_perm[r] = slice position of
+            # original row r
+            y = y.reshape(-1, nv)[self.inv_perm]
+            return y[:, 0] if squeeze else y
 
     def matmul(self, x: jax.Array) -> jax.Array:
         """x: [n, k] -> y: [m, k] via the k-tiled SpMM kernel

@@ -474,7 +474,26 @@ def main():
     ap.add_argument("--max-queue", type=int, default=32)
     ap.add_argument("--overload", default="reject",
                     choices=["reject", "shed-oldest", "degrade-to-k1"])
+    ap.add_argument("--trace", default="", metavar="PATH",
+                    help="record phase-attributed spans (repro.obs): "
+                         ".jsonl -> raw event log, anything else -> "
+                         "Chrome-trace JSON (load in ui.perfetto.dev)")
     args = ap.parse_args()
+    if not args.trace:
+        _dispatch(ap, args)
+        return
+    from .. import obs
+
+    try:
+        with obs.tracing() as buf:
+            _dispatch(ap, args)
+    finally:
+        obs.write_trace(args.trace, buf.flush())
+        print(f"# trace: {len(buf)} span events -> {args.trace}",
+              flush=True)
+
+
+def _dispatch(ap, args):
     if args.serve_traffic:
         if args.spmm != 1 or args.probe or args.devices > 1:
             ap.error("--serve-traffic does not combine with "

@@ -67,6 +67,7 @@ from __future__ import annotations
 
 import collections
 import dataclasses
+import itertools
 import threading
 import time
 from concurrent.futures import Future
@@ -74,6 +75,7 @@ from typing import Dict, Optional, Tuple
 
 import numpy as np
 
+from .. import obs
 from ..core.sparse.csr import CSRMatrix
 from ..core.spmv import opcache
 from ..core.spmv import plan as plan_mod
@@ -83,6 +85,53 @@ from .errors import (BadRequest, KeyBusy, QueueFull, RequestShed,
 OVERLOAD_POLICIES = ("reject", "shed-oldest", "degrade-to-k1")
 
 _RESERVOIR_SIZE = 2048
+_SERVICE_IDS = itertools.count(1)
+
+# every legacy integer/float counter of SpmvService.stats(); each backs
+# onto a process-wide obs counter `service.<key>{service=<sid>}`
+_STAT_KEYS = ("requests", "batches", "dispatches", "errors", "results",
+              "sheds", "rejected", "batch_size_sum", "batch_size_max",
+              "wait_ms_sum", "wakeups", "op_builds", "op_reloads",
+              "evictions", "budget_overruns", "value_swaps",
+              "replans", "replan_errors")
+
+
+class _RegistryStats:
+    """Dict-like stats view backed by the obs metrics registry.
+
+    Every legacy counter key reads/writes a per-service labelled counter
+    in `repro.obs` — `SpmvService.stats()` is therefore a *view* over the
+    registry (obs.snapshot() shows the same numbers) while every existing
+    `self._stats["x"] += 1` mutation site keeps working verbatim.
+
+    Lock discipline is unchanged: all mutation happens under the
+    service's `_cv`, so a `stats()` read under `_cv` is still one atomic
+    cut across all counters (the per-metric locks are redundant here but
+    harmless). `batch_hist` stays a local Counter — it is a dict-valued
+    legacy key, not a scalar metric.
+    """
+
+    def __init__(self, sid: str):
+        self.sid = sid
+        self._c = {k: obs.counter(f"service.{k}", service=sid)
+                   for k in _STAT_KEYS}
+        self.batch_hist: collections.Counter = collections.Counter()
+
+    def __getitem__(self, key):
+        if key == "batch_hist":
+            return self.batch_hist
+        return self._c[key].value
+
+    def __setitem__(self, key, value):
+        if key == "batch_hist":
+            self.batch_hist = value
+        else:
+            self._c[key].set(value)
+
+    def as_dict(self) -> dict:
+        d = {k: c.value for k, c in self._c.items()}
+        d["batch_hist"] = dict(self.batch_hist)
+        return d
 
 
 @dataclasses.dataclass
@@ -215,14 +264,8 @@ class SpmvService:
         self._replanner: Optional[threading.Thread] = None
         self._latency = _Reservoir(reservoir_size)
         self._t_start = time.monotonic()
-        self._stats = {"requests": 0, "batches": 0, "dispatches": 0,
-                       "errors": 0, "results": 0, "sheds": 0, "rejected": 0,
-                       "batch_size_sum": 0, "batch_size_max": 0,
-                       "wait_ms_sum": 0.0, "wakeups": 0,
-                       "op_builds": 0, "op_reloads": 0, "evictions": 0,
-                       "budget_overruns": 0, "value_swaps": 0,
-                       "replans": 0, "replan_errors": 0,
-                       "batch_hist": collections.Counter()}
+        self.sid = f"svc{next(_SERVICE_IDS)}"
+        self._stats = _RegistryStats(self.sid)
         self._worker = threading.Thread(target=self._run, daemon=True,
                                         name="spmv-service-dispatch")
         self._worker.start()
@@ -281,6 +324,13 @@ class SpmvService:
         ent = self._ops.pop(key, None)
         if ent is not None:
             self._resident_bytes -= ent[2]
+            self._sync_lru_gauges_locked()
+
+    def _sync_lru_gauges_locked(self) -> None:
+        obs.gauge("service.resident_bytes", service=self.sid).set(
+            self._resident_bytes)
+        obs.gauge("service.resident_ops", service=self.sid).set(
+            len(self._ops))
 
     def _install_locked(self, key: str, gen: int, op, nbytes: int):
         """Install a freshly built operator under the memory budget:
@@ -304,6 +354,7 @@ class SpmvService:
         self._resident_bytes += nbytes
         self._resident_bytes_max = max(self._resident_bytes_max,
                                        self._resident_bytes)
+        self._sync_lru_gauges_locked()
 
     def operator(self, key: str):
         """Resolve (and memoize, budget permitting) the operator for
@@ -479,9 +530,10 @@ class SpmvService:
                     continue
                 mat, scheme = ent["mat"], self._schemes[key]
             try:
-                op, pl, info = self._build_operator(mat, scheme, None,
-                                                    None, False)
-                nb = opcache.operator_nbytes(op)
+                with obs.span("serve.replan", key=key):
+                    op, pl, info = self._build_operator(mat, scheme, None,
+                                                        None, False)
+                    nb = opcache.operator_nbytes(op)
             except Exception as e:
                 with self._cv:
                     if self._replan_pending.get(key) is ent:
@@ -582,7 +634,7 @@ class SpmvService:
         Under overload="shed-oldest" the newcomer is admitted and the
         oldest lowest-priority queued request fails with RequestShed."""
         x = np.asarray(x)
-        with self._cv:
+        with obs.span("serve.submit", key=key), self._cv:
             if self._stop:
                 raise ServiceClosed("service is closed")
             if key not in self._matrices:
@@ -686,10 +738,15 @@ class SpmvService:
         """One self-consistent snapshot: every counter, gauge and the
         latency reservoir are read under a single lock acquisition, so
         the invariant requests == results + sheds + errors + pending
-        holds in ANY snapshot, not just at quiescence."""
+        holds in ANY snapshot, not just at quiescence.
+
+        Since the obs layer landed this is a VIEW over the process-wide
+        metrics registry: each legacy key reads the per-service counter
+        `service.<key>{service=<sid>}` that obs.snapshot() also reports
+        (all mutation still happens under `_cv`, preserving snapshot
+        atomicity)."""
         with self._cv:
-            s = dict(self._stats)
-            s["batch_hist"] = dict(self._stats["batch_hist"])
+            s = self._stats.as_dict()
             s["queued"] = self._queued
             s["queued_bytes"] = self._queued_bytes
             s["inflight_requests"] = self._inflight_reqs
@@ -835,17 +892,23 @@ class SpmvService:
 
         t0 = time.monotonic()
         try:
-            op = self.operator(key)
-            dt = jnp.float32 if self._dtype is None else self._dtype
-            if len(batch) == 1:
-                # a lone request takes the SpMV path: matmul's k-tile
-                # padding would do tile-width times the work for 1 column
-                y = np.asarray(op(jnp.asarray(batch[0].x, dt)))[:, None]
-            else:
-                # assemble on host, ONE device put per batch
-                x_block = jnp.asarray(
-                    np.stack([r.x for r in batch], axis=1), dt)
-                y = np.asarray(op.matmul(x_block))
+            with obs.span("serve.dispatch", key=key,
+                          batch_size=len(batch)):
+                op = self.operator(key)
+                dt = jnp.float32 if self._dtype is None else self._dtype
+                with obs.span("serve.execute", key=key,
+                              batch_size=len(batch)):
+                    if len(batch) == 1:
+                        # a lone request takes the SpMV path: matmul's
+                        # k-tile padding would do tile-width times the
+                        # work for 1 column
+                        y = np.asarray(
+                            op(jnp.asarray(batch[0].x, dt)))[:, None]
+                    else:
+                        # assemble on host, ONE device put per batch
+                        x_block = jnp.asarray(
+                            np.stack([r.x for r in batch], axis=1), dt)
+                        y = np.asarray(op.matmul(x_block))
         except Exception as e:                       # pragma: no cover
             with self._cv:
                 self._stats["dispatches"] += 1
