@@ -36,6 +36,7 @@ MODULES = [
     "moe_dispatch",
     "roofline",
     "spmm_batch",
+    "corpus_scale",
 ]
 
 BENCH_SUMMARY_PATH = os.path.join(os.path.dirname(__file__), "..",

@@ -130,7 +130,7 @@ def structure_key(mat: CSRMatrix) -> str:
 
 
 def plan_key(problem: SpmvProblem, reorder: str, engine: str,
-             probe: bool, seed: int, schemes=None, topology=None,
+             probe, seed: int, schemes=None, topology=None,
              partition: str = "auto", partitioners=None) -> str:
     """sha1 over matrix content + the full plan request.
 
@@ -148,11 +148,13 @@ def plan_key(problem: SpmvProblem, reorder: str, engine: str,
     caches never fork (asserted in tests/test_topology_plans.py).
     Sharded plans are model-based, so `probe` is normalized out of their
     keys (a probe=True request builds the identical plan — one entry).
+    Probe modes hash distinctly (False / True / "learned" / "exhaustive"
+    are different searches, so different plans).
     """
     topo = topology_mod.normalize(topology)
     k = problem.k if (engine == "auto" or reorder == "auto"
                       or topo is not None) else 1
-    probe = probe and topo is None
+    probe = probe if topo is None else False
     hints = problem.hints
     h = hashlib.sha1()
     h.update(_mat_key(problem.mat).encode())
@@ -267,6 +269,8 @@ class Plan:
     tune_ms: float = 0.0
     plan_ms: float = 0.0
     cache_hit: bool = False           # this plan was loaded, not computed
+    advisor_confidence: float = 0.0   # probe="learned": nearest-neighbor
+    #                                   trust in (0, 1]; 0 = no knowledge
     perm: Optional[np.ndarray] = None  # None = identity
     # -- topology-aware (sharded) plans ------------------------------------
     topology: Optional[Topology] = None          # None = single device
@@ -300,6 +304,7 @@ class Plan:
             "key": self.key, "scheme_costs": self.scheme_costs,
             "reorder_ms": self.reorder_ms, "tune_ms": self.tune_ms,
             "plan_ms": self.plan_ms,
+            "advisor_confidence": self.advisor_confidence,
             "topology": None if self.topology is None
             else self.topology.to_json(),
             "partitioner": self.partitioner, "comm": self.comm,
@@ -320,6 +325,7 @@ class Plan:
                     reorder_ms=d.get("reorder_ms", 0.0),
                     tune_ms=d.get("tune_ms", 0.0),
                     plan_ms=d.get("plan_ms", 0.0),
+                    advisor_confidence=d.get("advisor_confidence", 0.0),
                     topology=Topology.from_json(d.get("topology")),
                     partitioner=d.get("partitioner", ""),
                     panel_starts=panel_starts,
@@ -599,14 +605,14 @@ def _partition_candidates(partition) -> list:
 
 
 def plan(problem: SpmvProblem, reorder: str = "auto", engine: str = "auto",
-         probe: bool = False, cache: bool = True, topology=None,
+         probe=False, cache: bool = True, topology=None,
          partition="auto") -> Plan:
     """See _plan_decide — this wrapper only adds the root "plan" span
     (scheme/engine decision, store consultation, probe runs all nest
     under it)."""
     with obs.span("plan", shape=str(tuple(problem.mat.shape)),
                   nnz=int(problem.mat.nnz), reorder=reorder,
-                  engine=engine, probe=probe, k=int(problem.k)) as sp:
+                  engine=engine, probe=str(probe), k=int(problem.k)) as sp:
         pl = _plan_decide(problem, reorder, engine, probe, cache,
                           topology, partition)
         sp.set(scheme=pl.scheme, engine_chosen=pl.tune.engine,
@@ -615,7 +621,7 @@ def plan(problem: SpmvProblem, reorder: str = "auto", engine: str = "auto",
 
 
 def _plan_decide(problem: SpmvProblem, reorder: str = "auto",
-                 engine: str = "auto", probe: bool = False,
+                 engine: str = "auto", probe=False,
                  cache: bool = True, topology=None,
                  partition="auto") -> Plan:
     """Stage 1+2 of the pipeline: decide (scheme, engine, shape) — and,
@@ -631,9 +637,14 @@ def _plan_decide(problem: SpmvProblem, reorder: str = "auto",
     engine    — a registered engine name, or "auto" for the OSKI-style
               tuner. Sharded plans execute per-device "bell" or "csr"
               panels; "auto" picks between them.
-    probe     — empirically time the top engine candidates (auto-scheme
-              selection stays model-based; the winning scheme is re-tuned
-              with probing). Sharded plans are model-based only.
+    probe     — one of tune.PROBE_MODES: False (model only), True (time
+              the model's top candidates), "exhaustive" (time every
+              candidate), "learned" (time the corpus TuneAdvisor's
+              nearest-neighbor shortlist mined from prior ResultStore
+              campaigns; the plan carries `advisor_confidence`).
+              Auto-scheme selection stays model-based; the winning
+              scheme is re-tuned with the requested probe mode. Sharded
+              plans are model-based only.
     cache     — consult/populate the persistent plan store.
     topology  — a Topology (core/spmv/topology.py); devices=1/None plans
               single-device. Non-trivial topologies extend the joint
@@ -649,6 +660,9 @@ def _plan_decide(problem: SpmvProblem, reorder: str = "auto",
     from . import ops  # noqa: F401 — ensure built-in engines are registered
     from ..reorder import api as reorder_api
 
+    if probe not in tune_mod.PROBE_MODES:
+        raise ValueError(
+            f"probe must be one of {tune_mod.PROBE_MODES}, got {probe!r}")
     t_start = time.perf_counter()
     mat = problem.mat
     hints = problem.hints
@@ -714,7 +728,8 @@ def _plan_decide(problem: SpmvProblem, reorder: str = "auto",
         if engine == "auto":
             # single explicit scheme: probe directly (the legacy tune path);
             # multi-scheme search stays model-based until a winner exists
-            tp = tune_mod.tune(rmat, probe=(probe and len(schemes) == 1),
+            tp = tune_mod.tune(rmat,
+                               probe=(probe if len(schemes) == 1 else False),
                                use_kernel=use_kernel, k=k)
             cost = tp.cost_bytes
         else:
@@ -734,12 +749,13 @@ def _plan_decide(problem: SpmvProblem, reorder: str = "auto",
         if best is None or cost < best[0]:
             best = (cost, s, perm, rmat, tp)
     _, scheme, perm, rmat, tp = best
-    if probe and engine == "auto" and tp.source != "probe":
+    if probe and engine == "auto" and tp.source not in ("probe", "learned"):
         # model picked the scheme; OSKI's empirical search refines the
         # engine choice on the winner only (probing every scheme would
-        # time the planner, not the SpMV)
+        # time the planner, not the SpMV) — in the caller's probe mode,
+        # so "learned"/"exhaustive" reach the winner's tune too
         t0 = time.perf_counter()
-        tp = tune_mod.tune(rmat, probe=True, use_kernel=use_kernel, k=k)
+        tp = tune_mod.tune(rmat, probe=probe, use_kernel=use_kernel, k=k)
         tune_ms += (time.perf_counter() - t0) * 1e3
 
     pl = Plan(scheme=scheme, seed=seed, engine_request=engine, tune=tp,
@@ -748,6 +764,8 @@ def _plan_decide(problem: SpmvProblem, reorder: str = "auto",
               mat_nnz=mat.nnz, key=key, scheme_costs=scheme_costs,
               reorder_ms=reorder_ms, tune_ms=tune_ms,
               plan_ms=(time.perf_counter() - t_start) * 1e3,
+              advisor_confidence=float(
+                  (tp.advisor or {}).get("confidence", 0.0)),
               perm=None if perm is None else np.asarray(perm, np.int64),
               _mat=mat, _rmat=rmat)
     if cache and store_enabled():

@@ -18,10 +18,21 @@ capability metadata: `candidate_cost` and `enumerate_candidates` dispatch
 over whatever engines are registered, so a plugin engine that ships a cost
 model participates in tuning with no change here.
 
-Two tuning modes:
-  * model  — rank candidates by modelled bytes, build the argmin. Free.
-  * probe  — additionally time the top PROBE_TOP_K candidates once
-             (OSKI's empirical search) and build the measured winner.
+Four tuning modes (the `probe` argument):
+  * False        — model: rank candidates by modelled bytes, build the
+                   argmin. Free.
+  * True         — probe: additionally time the top PROBE_TOP_K
+                   candidates (OSKI's empirical search) and build the
+                   measured winner.
+  * "exhaustive" — time EVERY candidate: ground truth for the learned
+                   mode, and the reference the regression tests hold the
+                   advisor to.
+  * "learned"    — ask the corpus TuneAdvisor (repro.corpus.advisor) for
+                   a nearest-neighbor shortlist mined from prior
+                   ResultStore campaigns and probe only that (strictly
+                   fewer candidates than either probe mode); empty
+                   knowledge base falls back to the model's top
+                   PROBE_TOP_K and bumps `advisor.fallbacks`.
 
 `build_tuned` is what the engine="auto" build path calls; the chosen
 `TunePlan` rides on the returned operator as `.plan` so benchmarks can
@@ -49,6 +60,9 @@ _DENSE_MAX_ENTRIES = 64 * 64
 PROBE_TOP_K = 3
 PROBE_ITERS = 3
 
+# the values `probe` accepts, here and up through plan()/MeasurePolicy
+PROBE_MODES = (False, True, "learned", "exhaustive")
+
 _VAL = 4          # float32 bytes
 _IDX = 4          # int32 bytes
 
@@ -61,10 +75,12 @@ class TunePlan:
     cost_bytes: float                 # modelled bytes/SpMM of the choice
     costs: dict                       # candidate label -> modelled bytes
     features: dict                    # structural features the model used
-    source: str                       # "model" | "probe" | "fixed"
+    source: str                       # "model" | "probe" | "learned" | "fixed"
     probe_ms: Optional[dict] = None   # candidate label -> measured ms
     tune_ms: float = 0.0              # wall time spent deciding
     k: int = 1                        # RHS batch width the plan was tuned for
+    advisor: Optional[dict] = None    # learned mode: {confidence, predicted,
+    #                                   hit, shortlist} (None otherwise)
 
     def label(self) -> str:
         base = _label(self.engine, self.block_shape, self.sell_sigma)
@@ -123,6 +139,10 @@ def matrix_features(mat: CSRMatrix, bm: int = 8, bn: int = 128) -> dict:
         "row_nnz_max": int(counts.max()) if mat.m else 0,
         "row_nnz_cv": cv,
         "avg_row_bandwidth": metrics.avg_row_bandwidth(mat),
+        # bandwidth + envelope feed the advisor's feature space (both are
+        # single O(nnz) passes); cost models ignore them
+        "bandwidth": metrics.bandwidth(mat),
+        "profile_per_row": float(metrics.profile(mat)) / max(mat.m, 1),
         "block_fill": float(mat.nnz / max(nblocks * bm * bn, 1)),
         "nonempty_blocks": nblocks,
         "block_row_max": int(br_counts.max()) if br_counts.size else 0,
@@ -254,17 +274,42 @@ def enumerate_candidates(mat: CSRMatrix, feat: dict) -> list[dict]:
     return cands
 
 
-def tune(mat: CSRMatrix, probe: bool = False, dtype=None,
-         use_kernel: str = "auto", k: int = 1) -> TunePlan:
+def tune(mat: CSRMatrix, probe=False, dtype=None,
+         use_kernel: str = "auto", k: int = 1, advisor=None) -> TunePlan:
     """Pick (engine, shape) for `mat` at RHS batch width k.
-    probe=True times the top candidates (at the same k, via matmul)."""
+
+    `probe` is one of PROBE_MODES (see module docstring). `advisor`
+    optionally injects a corpus TuneAdvisor for probe="learned"; by
+    default the process-wide advisor over the default ResultStore is
+    used.
+    """
+    if probe not in PROBE_MODES:
+        raise ValueError(f"probe must be one of {PROBE_MODES}, got {probe!r}")
     with obs.span("plan.tune", shape=str(tuple(mat.shape)),
-                  nnz=int(mat.nnz), probe=probe, k=int(k)) as _sp:
-        return _tune_impl(mat, probe, dtype, use_kernel, k, _sp)
+                  nnz=int(mat.nnz), probe=str(probe), k=int(k)) as _sp:
+        return _tune_impl(mat, probe, dtype, use_kernel, k, _sp, advisor)
+
+
+def _probe_set(probe, ranked, feat, advisor):
+    """The candidates to time, plus the advisor record for learned mode."""
+    if probe == "exhaustive":
+        return ranked, None
+    if probe != "learned":
+        return ranked[:PROBE_TOP_K], None
+    if advisor is None:
+        from ...corpus.advisor import default_advisor
+        advisor = default_advisor()
+    shortlist, confidence, predicted = advisor.shortlist(feat, ranked)
+    if not shortlist:
+        obs.counter("advisor.fallbacks").inc()
+        return ranked[:PROBE_TOP_K], {"confidence": 0.0, "predicted": None,
+                                      "hit": None, "shortlist": 0}
+    return shortlist, {"confidence": confidence, "predicted": predicted,
+                       "hit": None, "shortlist": len(shortlist)}
 
 
 def _tune_impl(mat: CSRMatrix, probe, dtype, use_kernel: str, k: int,
-               _sp) -> TunePlan:
+               _sp, advisor=None) -> TunePlan:
     t0 = time.perf_counter()
     k = max(int(k), 1)
     feat = matrix_features(mat)
@@ -279,16 +324,18 @@ def _tune_impl(mat: CSRMatrix, probe, dtype, use_kernel: str, k: int,
     probe_ms = None
     best = ranked[0]
     source = "model"
+    adv_info = None
     if probe:
         import jax.numpy as jnp
 
         from ..measure import ios
         from .ops import make_engine
 
+        to_probe, adv_info = _probe_set(probe, ranked, feat, advisor)
         dt = jnp.float32 if dtype is None else dtype
         probe_ms = {}
         best_ms = np.inf
-        for cd in ranked[:PROBE_TOP_K]:
+        for cd in to_probe:
             lab = _label(cd["engine"], cd["block_shape"], cd["sigma"])
             with obs.span("plan.probe", candidate=lab,
                           engine=cd["engine"], k=int(k)) as psp:
@@ -302,14 +349,23 @@ def _tune_impl(mat: CSRMatrix, probe, dtype, use_kernel: str, k: int,
             probe_ms[lab] = ms
             if ms < best_ms:
                 best_ms, best = ms, cd
-        source = "probe"
+        winner = _label(best["engine"], best["block_shape"], best["sigma"])
+        if adv_info is not None and adv_info["predicted"] is not None:
+            # predicted-vs-probed agreement: the advisor's learning signal
+            hit = adv_info["predicted"] == winner
+            adv_info["hit"] = hit
+            obs.counter("advisor.hits" if hit else "advisor.misses").inc()
+            source = "learned"
+        else:
+            source = "probe"
     lab = _label(best["engine"], best["block_shape"], best["sigma"])
     _sp.set(engine=best["engine"], source=source)
     return TunePlan(engine=best["engine"], block_shape=best["block_shape"],
                     sell_sigma=best["sigma"], cost_bytes=costs[lab],
                     costs=costs, features=feat, source=source,
                     probe_ms=probe_ms,
-                    tune_ms=(time.perf_counter() - t0) * 1e3, k=k)
+                    tune_ms=(time.perf_counter() - t0) * 1e3, k=k,
+                    advisor=adv_info)
 
 
 def build_from_plan(mat: CSRMatrix, plan: TunePlan, dtype=None,

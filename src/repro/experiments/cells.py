@@ -134,6 +134,21 @@ def measure_spmv_cell(cell, mat) -> dict:
         "plan_ms": pl.plan_ms,
         "plan_store_hit": bool(pl.cache_hit),
     }
+    # tuner knowledge for the cross-campaign advisor (repro.corpus.advisor
+    # mines these pairs out of the store): the structural feature vector
+    # and the decision the tuner landed on, plus probe accounting so
+    # learned-vs-exhaustive campaigns can compare probe effort.
+    if pl.tune.features:
+        rec["features"] = {k: float(v) for k, v in pl.tune.features.items()}
+    rec["tuner_decision"] = {
+        "engine": pl.tune.engine,
+        "block_shape": list(pl.tune.block_shape),
+        "sell_sigma": (None if pl.tune.sell_sigma is None
+                       else int(pl.tune.sell_sigma)),
+    }
+    rec["advisor_confidence"] = float(pl.advisor_confidence)
+    rec["probed_candidates"] = len(pl.tune.probe_ms or {})
+    rec["tuner_candidates"] = len(pl.tune.costs)
     if cell.engine == "auto":
         rec["tuner_label"] = pl.tune.label()
         rec["tuner_cost_bytes"] = pl.tune.cost_bytes

@@ -59,7 +59,11 @@ class MeasurePolicy:
       host only).
     * time_spmv=False — analytic-only cells (no operator build at all).
     * verify — gate each cell on the original-index-space numpy oracle.
-    * probe — empirically probe tuner candidates at plan time.
+    * probe — tuner probe mode, threaded to plan(): False (cost model
+      only), True (probe the top candidates), "learned" (advisor
+      shortlist mined from prior campaign cells), or "exhaustive"
+      (probe everything). Bool values keep their historical key
+      encoding, so pre-existing store cells stay addressable.
     * trace — record each cell's phase-attributed span events (repro.obs)
       into its stored record. Key-relevant only when True (the
       verify_tol convention), so untraced campaigns keep their keys.
@@ -78,7 +82,7 @@ class MeasurePolicy:
     with_metrics: bool = True
     verify: bool = False
     verify_tol: float = 1e-4
-    probe: bool = False
+    probe: object = False            # False | True | "learned" | "exhaustive"
     trace: bool = False
     use_kernel: str = "auto"
     seed: int = 0
@@ -103,7 +107,8 @@ class MeasurePolicy:
             "with_parallel": bool(self.with_parallel),
             "with_metrics": bool(self.with_metrics),
             "verify": bool(self.verify),
-            "probe": bool(self.probe),
+            "probe": (self.probe if isinstance(self.probe, str)
+                      else bool(self.probe)),
             "use_kernel": self.use_kernel,
             "seed": int(self.seed),
         }

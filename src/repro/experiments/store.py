@@ -93,6 +93,25 @@ class ResultStore:
         obs.counter("result_store.writes").inc()
         return path
 
+    def entries(self):
+        """Iterate (key, entry) over every readable cell in the store.
+
+        Same tolerance as get(): unreadable/alien files are skipped, not
+        fatal. This is the mining surface the corpus TuneAdvisor walks to
+        learn (features → engine decision) pairs across campaigns.
+        """
+        try:
+            names = sorted(os.listdir(self.root))
+        except OSError:
+            return
+        for name in names:
+            if not name.endswith(".json"):
+                continue
+            key = name[:-len(".json")]
+            entry = self.get(key)
+            if entry is not None:
+                yield key, entry
+
     def delete(self, key: str) -> bool:
         try:
             os.remove(self.path(key))

@@ -26,6 +26,14 @@ from .mesh import make_production_mesh
 RESULTS = os.path.join(os.path.dirname(__file__), "..", "..", "..",
                        "benchmarks", "results")
 
+
+def _fname(name: str) -> str:
+    """Filesystem-safe matrix tag: corpus://group/name -> corpus_group_name
+    (corpus names carry URL-ish separators that would split the path)."""
+    import re
+
+    return re.sub(r"[:/]+", "_", name).strip("_")
+
 # synthetic production matrix: 4.19M rows, ~16 nnz/row, 8x128 bricks
 M_ROWS = 1 << 22
 BM, BN = 8, 128
@@ -194,7 +202,7 @@ def run_parallel(matrix: str, scheme: str = "baseline", engine: str = "auto",
     if write_results:
         os.makedirs(RESULTS, exist_ok=True)
         out = os.path.join(
-            RESULTS, f"spmv_parallel_{matrix}_{scheme}_{layout}"
+            RESULTS, f"spmv_parallel_{_fname(matrix)}_{scheme}_{layout}"
                      f"_p{devices}.json")
         with open(out, "w") as f:
             json.dump(rec, f, indent=1)
@@ -202,7 +210,7 @@ def run_parallel(matrix: str, scheme: str = "baseline", engine: str = "auto",
 
 
 def run_single(matrix: str, scheme: str = "baseline", engine: str = "auto",
-               iters: int = 12, probe: bool = False,
+               iters: int = 12, probe=False,
                write_results: bool = True, k: int = 1,
                use_store: bool = True) -> dict:
     """Single-node tuned SpMV/SpMM benchmark for one (matrix, scheme) cell.
@@ -222,6 +230,10 @@ def run_single(matrix: str, scheme: str = "baseline", engine: str = "auto",
 
     k > 1 (--spmm) times the k-RHS SpMM path `op.matmul(X[n, k])` with a
     k-specialized tuning plan and reports amortized per-vector time.
+
+    probe accepts the full plan() mode set: False (cost model), True
+    (--probe: top candidates), "learned" (--learned: the TuneAdvisor
+    shortlist), "exhaustive".
     """
     from ..experiments import (ExperimentSpec, MeasurePolicy, ResultStore,
                                Runner)
@@ -267,8 +279,8 @@ def run_single(matrix: str, scheme: str = "baseline", engine: str = "auto",
     if write_results:
         os.makedirs(RESULTS, exist_ok=True)
         suffix = f"_k{k}" if k > 1 else ""      # SpMM never clobbers SpMV
-        out = os.path.join(RESULTS,
-                           f"spmv_single_{matrix}_{scheme}{suffix}.json")
+        out = os.path.join(
+            RESULTS, f"spmv_single_{_fname(matrix)}_{scheme}{suffix}.json")
         with open(out, "w") as f:
             json.dump(rec, f, indent=1)
     return rec
@@ -434,6 +446,9 @@ def main():
     ap.add_argument("--engine", default="auto")
     ap.add_argument("--probe", action="store_true",
                     help="empirically probe top tuner candidates")
+    ap.add_argument("--learned", action="store_true",
+                    help="probe only the TuneAdvisor shortlist mined from "
+                         "prior campaign cells (plan(probe='learned'))")
     ap.add_argument("--iters", type=int, default=12)
     ap.add_argument("--spmm", type=int, default=1, metavar="K",
                     help="batch width: time K-RHS SpMM instead of SpMV")
@@ -494,8 +509,11 @@ def main():
 
 
 def _dispatch(ap, args):
+    if args.probe and args.learned:
+        ap.error("--probe and --learned are mutually exclusive probe modes")
+    probe = "learned" if args.learned else args.probe
     if args.serve_traffic:
-        if args.spmm != 1 or args.probe or args.devices > 1:
+        if args.spmm != 1 or probe or args.devices > 1:
             ap.error("--serve-traffic does not combine with "
                      "--spmm/--probe/--devices")
         rec = run_serve_traffic(
@@ -514,7 +532,7 @@ def _dispatch(ap, args):
                 f"counters_balanced={rec['counters_balanced']}")
         return
     if args.serve_sim:
-        if args.matrix or args.spmm != 1 or args.probe:
+        if args.matrix or args.spmm != 1 or probe:
             ap.error("--serve-sim does not combine with "
                      "--matrix/--spmm/--probe")
         rec = run_serve_sim(requests=args.requests, max_batch=args.max_batch,
@@ -531,7 +549,7 @@ def _dispatch(ap, args):
     if args.devices > 1 and not args.matrix:
         ap.error("--devices requires --matrix (sharded single-cell mode)")
     if args.matrix and args.devices > 1:
-        if args.probe:
+        if probe:
             ap.error("--devices does not combine with --probe "
                      "(sharded plans are model-based)")
         run_parallel(args.matrix, args.scheme, args.engine,
@@ -543,11 +561,12 @@ def _dispatch(ap, args):
         return
     if args.matrix:
         run_single(args.matrix, args.scheme, args.engine, iters=args.iters,
-                   probe=args.probe, k=args.spmm,
+                   probe=probe, k=args.spmm,
                    use_store=not args.fresh)
         return
-    if args.spmm != 1 or args.probe:
-        ap.error("--spmm/--probe require --matrix (single-cell mode)")
+    if args.spmm != 1 or probe:
+        ap.error("--spmm/--probe/--learned require --matrix "
+                 "(single-cell mode)")
     mesh = make_production_mesh(multi_pod=args.multi_pod)
     out = {}
     for name, fn in [("1d", lower_1d), ("2d", lower_2d), ("halo", lower_halo)]:

@@ -1,32 +1,68 @@
 """The benchmark corpus — a seeded, named, structurally diverse matrix suite.
 
 Analogue of the paper's 559 symmetric >=10k-row SuiteSparse selection,
-sized for a 1-core CPU container (DESIGN.md §7). Three tiers:
+sized for a 1-core CPU container (DESIGN.md §7). One registered catalog,
+queried by tier:
 
-  * SMOKE  — tiny, for unit tests (seconds).
-  * BENCH  — the default corpus for benchmarks/fig* (~60 matrices,
-             10k-66k rows) satisfying the paper's >=10k-row filter.
-  * LARGE  — a few 100k+ row matrices incl. the Fig. 1 pair.
+  * SMOKE    — tiny, for unit tests (seconds).
+  * BENCH    — the default corpus for benchmarks/fig* (~60 matrices,
+               10k-66k rows) satisfying the paper's >=10k-row filter.
+  * LARGE    — a few 100k+ row matrices incl. the Fig. 1 pair.
+  * LOCALITY — ~520k rows, x spills L2 (sequential locality tier).
+  * CORPUS   — real SuiteSparse matrices (or offline stand-ins) resolved
+               through repro.corpus; names carry the `corpus://` prefix.
 
-Each entry is (name, thunk). Matrices are deterministic in their seed and
-cached on disk (npz) after first build so repeated benchmark runs are fast.
+Every name — synthetic or `corpus://` — resolves through the same
+`get(name)`. Synthetic entries are deterministic in their seed and cached
+on disk (npz) after first build; corpus entries resolve through the
+content-addressed `.csrz` artifact store. Third parties can add entries
+with `register_matrix`.
 """
 from __future__ import annotations
 
+import dataclasses
 import os
-from typing import Callable, Dict
+from typing import Callable, Dict, Optional
 
 import numpy as np
 
 from ..core.sparse.csr import CSRMatrix
 from . import generators as G
 
-_CACHE_DIR = os.environ.get("REPRO_MATRIX_CACHE", "/tmp/repro_matrices")
+TIERS = ("smoke", "bench", "large", "locality", "corpus")
+
+
+@dataclasses.dataclass(frozen=True)
+class MatrixDef:
+    """One catalog entry: a named, tiered thunk producing a CSRMatrix."""
+
+    name: str
+    tier: str
+    thunk: Callable[[], CSRMatrix]
+    cached: bool = True              # persist to the npz matrix cache
+
+
+_CATALOG: Dict[str, MatrixDef] = {}
+
+
+def register_matrix(name: str, tier: str, thunk: Callable[[], CSRMatrix],
+                    cached: bool = True, override: bool = False) -> None:
+    if tier not in TIERS:
+        raise ValueError(f"unknown tier {tier!r}; known: {TIERS}")
+    if name in _CATALOG and not override:
+        raise ValueError(f"matrix {name!r} already registered")
+    _CATALOG[name] = MatrixDef(name=name, tier=tier, thunk=thunk,
+                               cached=cached)
+
+
+def _cache_dir() -> str:
+    return os.environ.get("REPRO_MATRIX_CACHE", "/tmp/repro_matrices")
 
 
 def _cached(name: str, thunk: Callable[[], CSRMatrix]) -> CSRMatrix:
-    os.makedirs(_CACHE_DIR, exist_ok=True)
-    path = os.path.join(_CACHE_DIR, name + ".npz")
+    root = _cache_dir()
+    os.makedirs(root, exist_ok=True)
+    path = os.path.join(root, name + ".npz")
     if os.path.exists(path):
         z = np.load(path)
         return CSRMatrix(rowptr=z["rowptr"], cols=z["cols"], vals=z["vals"],
@@ -37,86 +73,133 @@ def _cached(name: str, thunk: Callable[[], CSRMatrix]) -> CSRMatrix:
     return mat
 
 
-def _bench_defs() -> Dict[str, Callable[[], CSRMatrix]]:
-    defs: Dict[str, Callable[[], CSRMatrix]] = {}
-    # banded family (RCM's home turf) + shuffled twins (Fig. 1 regime)
-    for i, (m, bw) in enumerate([(16384, 8), (16384, 32), (32768, 16),
-                                 (32768, 63), (65536, 8), (65536, 24)]):
-        defs[f"banded_m{m}_bw{bw}"] = (lambda m=m, bw=bw, i=i: G.banded(m, bw, seed=i))
-        defs[f"banded_shuf_m{m}_bw{bw}"] = (
-            lambda m=m, bw=bw, i=i: G.shuffle(G.banded(m, bw, seed=i), seed=100 + i))
-    # 2-D/3-D stencils (+ shuffled: hidden locality that RCM can recover)
-    for i, nx in enumerate([128, 181, 256]):
-        defs[f"stencil2d_{nx}"] = lambda nx=nx, i=i: G.stencil_2d(nx, seed=i)
-        defs[f"stencil2d_shuf_{nx}"] = (
-            lambda nx=nx, i=i: G.shuffle(G.stencil_2d(nx, seed=i), seed=200 + i))
-    for i, nx in enumerate([24, 32]):
-        defs[f"stencil3d_{nx}"] = lambda nx=nx, i=i: G.stencil_3d(nx, seed=i)
-        defs[f"stencil3d_shuf_{nx}"] = (
-            lambda nx=nx, i=i: G.shuffle(G.stencil_3d(nx, seed=i), seed=300 + i))
-    # power-law graphs (load-imbalance stressors)
-    for i, (scale, ef) in enumerate([(14, 8), (14, 16), (15, 8), (16, 6)]):
-        defs[f"rmat_s{scale}_e{ef}"] = lambda s=scale, e=ef, i=i: G.rmat(s, e, seed=i)
-    # community graphs (Louvain/METIS home turf), shuffled so structure is hidden
-    for i, (m, k, pin) in enumerate([(16384, 16, 0.004), (32768, 32, 0.002),
-                                     (16384, 8, 0.006), (32768, 64, 0.004)]):
-        defs[f"sbm_m{m}_k{k}"] = (
-            lambda m=m, k=k, pin=pin, i=i:
-            G.shuffle(G.sbm(m, k, pin, 8.0 / m / m * 4, seed=i), seed=400 + i))
-    # small world
-    for i, (m, k, beta) in enumerate([(16384, 6, 0.05), (32768, 8, 0.1),
-                                      (65536, 6, 0.02)]):
-        defs[f"smallworld_m{m}_k{k}"] = (
-            lambda m=m, k=k, b=beta, i=i: G.small_world(m, k, b, seed=i))
-    # kronecker
-    for i, (bm, p) in enumerate([(11, 4), (26, 3)]):
-        defs[f"kron_b{bm}_p{p}"] = lambda b=bm, p=p, i=i: G.kron_graph(b, p, seed=i)
-    # uniform random (no structure to find — reordering should not help)
-    for i, (m, d) in enumerate([(16384, 8), (32768, 12), (65536, 6)]):
-        defs[f"uniform_m{m}_d{d}"] = lambda m=m, d=d, i=i: G.random_uniform(m, d, seed=i)
-    # explicit power-law row skew (hub rows; padded-ELL worst case, the
-    # regime the SELL-C-σ engine and the autotuner exist for)
-    for i, (m, a) in enumerate([(16384, 2.1), (32768, 1.9), (16384, 1.7)]):
-        defs[f"powerlaw_m{m}_a{round(a * 10)}"] = (
-            lambda m=m, a=a, i=i: G.power_law(m, alpha=a, seed=i))
-    return defs
-
-
-def bench_names() -> list[str]:
-    return sorted(_bench_defs().keys())
+def names(tier: Optional[str] = None) -> list:
+    """Catalog names, optionally restricted to one tier (sorted)."""
+    if tier is None:
+        return sorted(_CATALOG)
+    if tier not in TIERS:
+        raise ValueError(f"unknown tier {tier!r}; known: {TIERS}")
+    return sorted(n for n, d in _CATALOG.items() if d.tier == tier)
 
 
 def get(name: str) -> CSRMatrix:
-    defs = _bench_defs()
-    defs.update(_large_defs())
-    defs.update(_smoke_defs())
-    defs.update(_locality_defs())
-    if name not in defs:
-        raise KeyError(f"unknown matrix {name!r}; known: {sorted(defs)[:10]}...")
-    return _cached(name, defs[name])
+    """Resolve any catalog name — synthetic, corpus://, or registered."""
+    if name.startswith("corpus://"):
+        from ..corpus import manifest as corpus_manifest
+
+        return corpus_manifest.resolve(name)
+    if name not in _CATALOG:
+        raise KeyError(f"unknown matrix {name!r}; known: "
+                       f"{sorted(_CATALOG)[:10]}... (or a corpus:// name)")
+    d = _CATALOG[name]
+    return _cached(name, d.thunk) if d.cached else d.thunk()
 
 
-def _large_defs() -> Dict[str, Callable[[], CSRMatrix]]:
-    return {
-        # the Fig. 1 pair (1M x 1M so x spills this host's 2 MiB L2 —
-        # the paper's 128K matrices spill the smaller caches of its hosts)
-        "fig1_banded": lambda: G.banded(1048576, 15, seed=7),
-        "fig1_shuffled": lambda: G.shuffle(G.banded(1048576, 15, seed=7), seed=8),
-    }
+def bench_names() -> list:
+    return names("bench")
 
 
-# LOCALITY tier: ~520k rows — x (2+ MiB) spills L2, so sequential
-# data-movement effects (the paper's §4 sequential story) are physically
-# measurable on this host (DESIGN.md §7). Shuffled variants hide structure
-# that reordering can recover.
-def _locality_defs() -> Dict[str, Callable[[], CSRMatrix]]:
+def smoke_names() -> list:
+    return names("smoke")
+
+
+def large_names() -> list:
+    return names("large")
+
+
+def locality_names() -> list:
+    return names("locality")
+
+
+def corpus_names() -> list:
+    """Qualified corpus:// names from the corpus manifest."""
+    from ..corpus import manifest as corpus_manifest
+
+    return corpus_manifest.corpus_names()
+
+
+# --------------------------------------------------------------------------
+# built-in catalog
+# --------------------------------------------------------------------------
+def _register_bench() -> None:
+    # banded family (RCM's home turf) + shuffled twins (Fig. 1 regime)
+    for i, (m, bw) in enumerate([(16384, 8), (16384, 32), (32768, 16),
+                                 (32768, 63), (65536, 8), (65536, 24)]):
+        register_matrix(f"banded_m{m}_bw{bw}", "bench",
+                        lambda m=m, bw=bw, i=i: G.banded(m, bw, seed=i))
+        register_matrix(f"banded_shuf_m{m}_bw{bw}", "bench",
+                        lambda m=m, bw=bw, i=i:
+                        G.shuffle(G.banded(m, bw, seed=i), seed=100 + i))
+    # 2-D/3-D stencils (+ shuffled: hidden locality that RCM can recover)
+    for i, nx in enumerate([128, 181, 256]):
+        register_matrix(f"stencil2d_{nx}", "bench",
+                        lambda nx=nx, i=i: G.stencil_2d(nx, seed=i))
+        register_matrix(f"stencil2d_shuf_{nx}", "bench",
+                        lambda nx=nx, i=i:
+                        G.shuffle(G.stencil_2d(nx, seed=i), seed=200 + i))
+    for i, nx in enumerate([24, 32]):
+        register_matrix(f"stencil3d_{nx}", "bench",
+                        lambda nx=nx, i=i: G.stencil_3d(nx, seed=i))
+        register_matrix(f"stencil3d_shuf_{nx}", "bench",
+                        lambda nx=nx, i=i:
+                        G.shuffle(G.stencil_3d(nx, seed=i), seed=300 + i))
+    # power-law graphs (load-imbalance stressors)
+    for i, (scale, ef) in enumerate([(14, 8), (14, 16), (15, 8), (16, 6)]):
+        register_matrix(f"rmat_s{scale}_e{ef}", "bench",
+                        lambda s=scale, e=ef, i=i: G.rmat(s, e, seed=i))
+    # community graphs (Louvain/METIS home turf), shuffled to hide structure
+    for i, (m, k, pin) in enumerate([(16384, 16, 0.004), (32768, 32, 0.002),
+                                     (16384, 8, 0.006), (32768, 64, 0.004)]):
+        register_matrix(f"sbm_m{m}_k{k}", "bench",
+                        lambda m=m, k=k, pin=pin, i=i:
+                        G.shuffle(G.sbm(m, k, pin, 8.0 / m / m * 4, seed=i),
+                                  seed=400 + i))
+    # small world
+    for i, (m, k, beta) in enumerate([(16384, 6, 0.05), (32768, 8, 0.1),
+                                      (65536, 6, 0.02)]):
+        register_matrix(f"smallworld_m{m}_k{k}", "bench",
+                        lambda m=m, k=k, b=beta, i=i:
+                        G.small_world(m, k, b, seed=i))
+    # kronecker
+    for i, (bm, p) in enumerate([(11, 4), (26, 3)]):
+        register_matrix(f"kron_b{bm}_p{p}", "bench",
+                        lambda b=bm, p=p, i=i: G.kron_graph(b, p, seed=i))
+    # uniform random (no structure to find — reordering should not help)
+    for i, (m, d) in enumerate([(16384, 8), (32768, 12), (65536, 6)]):
+        register_matrix(f"uniform_m{m}_d{d}", "bench",
+                        lambda m=m, d=d, i=i: G.random_uniform(m, d, seed=i))
+    # explicit power-law row skew (hub rows; padded-ELL worst case, the
+    # regime the SELL-C-σ engine and the autotuner exist for)
+    for i, (m, a) in enumerate([(16384, 2.1), (32768, 1.9), (16384, 1.7)]):
+        register_matrix(f"powerlaw_m{m}_a{round(a * 10)}", "bench",
+                        lambda m=m, a=a, i=i: G.power_law(m, alpha=a, seed=i))
+
+
+def _register_large() -> None:
+    # the Fig. 1 pair (1M x 1M so x spills this host's 2 MiB L2 —
+    # the paper's 128K matrices spill the smaller caches of its hosts)
+    register_matrix("fig1_banded", "large",
+                    lambda: G.banded(1048576, 15, seed=7))
+    register_matrix("fig1_shuffled", "large",
+                    lambda: G.shuffle(G.banded(1048576, 15, seed=7), seed=8))
+
+
+def _register_locality() -> None:
+    # LOCALITY tier: ~520k rows — x (2+ MiB) spills L2, so sequential
+    # data-movement effects (the paper's §4 sequential story) are
+    # physically measurable on this host (DESIGN.md §7). Shuffled
+    # variants hide structure that reordering can recover.
     M = 524288
-    return {
+    defs = {
         "loc_banded_bw8": lambda: G.banded(M, 8, seed=20),
-        "loc_banded_shuf_bw8": lambda: G.shuffle(G.banded(M, 8, seed=20), seed=21),
-        "loc_banded_shuf_bw24": lambda: G.shuffle(G.banded(M, 24, seed=22), seed=23),
-        "loc_stencil2d_shuf": lambda: G.shuffle(G.stencil_2d(724, seed=24), seed=25),
-        "loc_stencil3d_shuf": lambda: G.shuffle(G.stencil_3d(80, seed=26), seed=27),
+        "loc_banded_shuf_bw8":
+            lambda: G.shuffle(G.banded(M, 8, seed=20), seed=21),
+        "loc_banded_shuf_bw24":
+            lambda: G.shuffle(G.banded(M, 24, seed=22), seed=23),
+        "loc_stencil2d_shuf":
+            lambda: G.shuffle(G.stencil_2d(724, seed=24), seed=25),
+        "loc_stencil3d_shuf":
+            lambda: G.shuffle(G.stencil_3d(80, seed=26), seed=27),
         "loc_sbm_k64": lambda: G.shuffle(
             G.sbm(M, 64, 0.0008, 1.0 / M / 64, seed=28), seed=29),
         "loc_smallworld_k8": lambda: G.small_world(M, 8, 0.05, seed=30),
@@ -130,25 +213,24 @@ def _locality_defs() -> Dict[str, Callable[[], CSRMatrix]]:
         "loc_banded_bw24_nat": lambda: G.banded(M, 24, seed=35),
         "loc_banded_bw3_nat": lambda: G.banded(M, 3, seed=36),
     }
+    for name, thunk in defs.items():
+        register_matrix(name, "locality", thunk)
 
 
-def locality_names() -> list[str]:
-    return sorted(_locality_defs().keys())
-
-
-def _smoke_defs() -> Dict[str, Callable[[], CSRMatrix]]:
-    return {
+def _register_smoke() -> None:
+    defs = {
         "smoke_banded": lambda: G.banded(256, 4, seed=1),
         "smoke_stencil": lambda: G.stencil_2d(20, seed=2),
         "smoke_rmat": lambda: G.rmat(8, 4, seed=3),
-        "smoke_sbm": lambda: G.shuffle(G.sbm(512, 8, 0.08, 0.002, seed=4), seed=5),
+        "smoke_sbm":
+            lambda: G.shuffle(G.sbm(512, 8, 0.08, 0.002, seed=4), seed=5),
         "smoke_powerlaw": lambda: G.power_law(1024, alpha=1.9, seed=6),
     }
+    for name, thunk in defs.items():
+        register_matrix(name, "smoke", thunk)
 
 
-def smoke_names() -> list[str]:
-    return sorted(_smoke_defs().keys())
-
-
-def large_names() -> list[str]:
-    return sorted(_large_defs().keys())
+_register_bench()
+_register_large()
+_register_locality()
+_register_smoke()

@@ -1,0 +1,325 @@
+"""Streaming MatrixMarket ingestion + .csrz artifact cache (repro.corpus).
+
+Covers the corpus I/O contract end to end: header validation (the
+rejects the seed reader silently mis-parsed), symmetric/pattern/integer
+semantics, chunked-vs-whole-file equivalence against an in-test oracle
+written in the seed's np.loadtxt style, the >=100k-row chunk-count
+accounting that pins peak parser memory, bit-identical .csrz round
+trips, corruption tolerance, and the parse-once-ever cache hit.
+"""
+import json
+import math
+import os
+
+import numpy as np
+import pytest
+
+from repro import obs
+from repro.core.sparse.csr import CSRMatrix
+from repro.corpus import artifact, mtxstream
+from repro.matrices import generators
+from repro.matrices.io import read_mtx, write_mtx
+
+
+@pytest.fixture()
+def corpus_cache(tmp_path, monkeypatch):
+    monkeypatch.setenv("REPRO_CORPUS_CACHE", str(tmp_path / "corpus"))
+    return tmp_path
+
+
+def _write(tmp_path, text, name="t.mtx"):
+    p = tmp_path / name
+    p.write_text(text)
+    return str(p)
+
+
+def _dense(mat: CSRMatrix) -> np.ndarray:
+    out = np.zeros(mat.shape, dtype=np.float64)
+    for i in range(mat.m):
+        lo, hi = mat.rowptr[i], mat.rowptr[i + 1]
+        np.add.at(out[i], mat.cols[lo:hi], mat.vals[lo:hi])
+    return out
+
+
+def _oracle_read(path: str) -> CSRMatrix:
+    """The seed's whole-file reader, kept as a test oracle: slurp every
+    data line through np.loadtxt and assemble via from_coo."""
+    with open(path) as f:
+        banner = f.readline().split()
+        field, sym = banner[3].lower(), banner[4].lower()
+        line = f.readline()
+        while line.startswith("%") or not line.strip():
+            line = f.readline()
+        m, n, nnz = (int(t) for t in line.split())
+        data = np.loadtxt(f, dtype=np.float64,
+                          ndmin=2) if nnz else np.zeros((0, 3))
+    r = data[:, 0].astype(np.int64) - 1
+    c = data[:, 1].astype(np.int64) - 1
+    v = (np.ones(r.size) if field == "pattern"
+         else data[:, 2].astype(np.float64))
+    if sym == "symmetric":
+        off = r != c
+        r, c, v = (np.concatenate([r, c[off]]), np.concatenate([c, r[off]]),
+                   np.concatenate([v, v[off]]))
+    return CSRMatrix.from_coo(r, c, v, (m, n))
+
+
+# -------------------------------------------------------------------------
+# header validation
+# -------------------------------------------------------------------------
+@pytest.mark.parametrize("banner,match", [
+    ("%%MatrixMarket matrix coordinate complex general", "complex"),
+    ("%%MatrixMarket matrix coordinate real hermitian", "hermitian"),
+    ("%%MatrixMarket matrix coordinate real skew-symmetric",
+     "skew-symmetric"),
+    ("%%MatrixMarket matrix array real general", "array|coordinate"),
+    ("%%MatrixMarket vector coordinate real general", "vector"),
+    ("%%MatrixMarket matrix coordinate quaternion general", "quaternion"),
+    ("%%MatrixMarket matrix coordinate real upper-magic", "upper-magic"),
+])
+def test_reject_unsupported_headers(tmp_path, banner, match):
+    path = _write(tmp_path, banner + "\n2 2 1\n1 1 1.0\n")
+    with pytest.raises(ValueError, match=match):
+        mtxstream.read_header(path)
+
+
+def test_reject_non_mtx_and_malformed(tmp_path):
+    with pytest.raises(ValueError, match="not a MatrixMarket"):
+        mtxstream.read_header(_write(tmp_path, "hello world\n1 1 1\n"))
+    with pytest.raises(ValueError, match="malformed MatrixMarket banner"):
+        mtxstream.read_header(
+            _write(tmp_path, "%%MatrixMarket matrix coordinate\n"))
+    hdr = "%%MatrixMarket matrix coordinate real general\n"
+    with pytest.raises(ValueError, match="size line"):
+        mtxstream.read_header(_write(tmp_path, hdr + "2 2\n"))
+    with pytest.raises(ValueError, match="three integers"):
+        mtxstream.read_header(_write(tmp_path, hdr + "2 2 x\n"))
+    with pytest.raises(ValueError, match="negative"):
+        mtxstream.read_header(_write(tmp_path, hdr + "-2 2 1\n"))
+    with pytest.raises(ValueError, match="square"):
+        mtxstream.read_header(_write(
+            tmp_path, "%%MatrixMarket matrix coordinate real symmetric\n"
+            "2 3 1\n"))
+
+
+def test_header_skips_comments_and_blank_lines(tmp_path):
+    path = _write(tmp_path,
+                  "%%MatrixMarket matrix coordinate real general\n"
+                  "% a comment\n%another\n\n3 4 2\n1 1 5\n3 4 7\n")
+    hdr = mtxstream.read_header(path)
+    assert (hdr.m, hdr.n, hdr.nnz) == (3, 4, 2)
+    assert hdr.field == "real" and not hdr.symmetric
+    mat = read_mtx(path)
+    assert mat.shape == (3, 4) and mat.nnz == 2
+    assert _dense(mat)[0, 0] == 5 and _dense(mat)[2, 3] == 7
+
+
+# -------------------------------------------------------------------------
+# data-section validation
+# -------------------------------------------------------------------------
+def _general(m, n, entries):
+    body = "".join(f"{r} {c} {v}\n" for r, c, v in entries)
+    return ("%%MatrixMarket matrix coordinate real general\n"
+            f"{m} {n} {len(entries)}\n" + body)
+
+
+def test_truncated_file_rejected(tmp_path):
+    path = _write(tmp_path,
+                  "%%MatrixMarket matrix coordinate real general\n"
+                  "2 2 3\n1 1 1.0\n2 2 2.0\n")
+    with pytest.raises(ValueError, match="truncated"):
+        read_mtx(path)
+
+
+def test_trailing_data_rejected(tmp_path):
+    path = _write(tmp_path, _general(2, 2, [(1, 1, 1.0)]) + "2 2 9.0\n")
+    with pytest.raises(ValueError, match="beyond the declared"):
+        read_mtx(path)
+
+
+def test_out_of_range_and_garbage_rejected(tmp_path):
+    for bad in [(0, 1, 1.0), (3, 1, 1.0), (1, 0, 1.0), (1, 5, 1.0)]:
+        with pytest.raises(ValueError, match="out of range"):
+            read_mtx(_write(tmp_path, _general(2, 2, [bad])))
+    with pytest.raises(ValueError, match="non-numeric"):
+        read_mtx(_write(tmp_path, _general(2, 2, [(1, "x", 1.0)])))
+    with pytest.raises(ValueError, match="non-integer"):
+        read_mtx(_write(tmp_path, _general(2, 2, [(1.5, 1, 1.0)])))
+    with pytest.raises(ValueError, match="columns per entry"):
+        read_mtx(_write(tmp_path,
+                        "%%MatrixMarket matrix coordinate real general\n"
+                        "2 2 2\n1 1 1.0\n2 2\n"))
+
+
+def test_duplicates_merged_scipy_semantics(tmp_path):
+    path = _write(tmp_path, _general(
+        2, 2, [(1, 1, 1.0), (1, 1, 2.5), (2, 1, 4.0)]))
+    mat, stats = mtxstream.parse_mtx(path)
+    assert stats["duplicates_merged"] == 1
+    assert mat.nnz == 2
+    assert _dense(mat)[0, 0] == pytest.approx(3.5)
+    assert _dense(mat)[1, 0] == pytest.approx(4.0)
+
+
+# -------------------------------------------------------------------------
+# field / symmetry semantics
+# -------------------------------------------------------------------------
+def test_pattern_field_yields_unit_values(tmp_path):
+    path = _write(tmp_path,
+                  "%%MatrixMarket matrix coordinate pattern symmetric\n"
+                  "3 3 3\n1 1\n2 1\n3 2\n")
+    mat = read_mtx(path)
+    # two off-diagonal stored entries mirror; the diagonal does not
+    assert mat.nnz == 5
+    assert np.all(mat.vals == 1.0)
+    d = _dense(mat)
+    assert np.array_equal(d, d.T)
+
+
+def test_integer_field_and_symmetric_mirror(tmp_path):
+    path = _write(tmp_path,
+                  "%%MatrixMarket matrix coordinate integer symmetric\n"
+                  "3 3 4\n1 1 2\n2 1 -3\n3 1 5\n3 3 7\n")
+    mat = read_mtx(path)
+    assert mat.nnz == 6
+    d = _dense(mat)
+    assert np.array_equal(d, d.T)
+    assert d[0, 1] == -3 and d[1, 0] == -3 and d[0, 0] == 2
+
+
+def test_empty_matrix(tmp_path):
+    mat = read_mtx(_write(tmp_path, _general(4, 3, [])))
+    assert mat.shape == (4, 3) and mat.nnz == 0
+    assert mat.rowptr.tolist() == [0] * 5
+
+
+# -------------------------------------------------------------------------
+# chunked-vs-oracle equivalence + round trips
+# -------------------------------------------------------------------------
+@pytest.mark.parametrize("gen", [
+    lambda: generators.banded(60, 4, seed=3),
+    lambda: generators.power_law(80, alpha=2.0, seed=5),
+    lambda: generators.random_uniform(50, 6, seed=9),
+])
+def test_chunked_matches_oracle_and_roundtrip(tmp_path, gen):
+    ref = gen()
+    path = str(tmp_path / "m.mtx")
+    write_mtx(path, ref)
+    oracle = _oracle_read(path)
+    for chunk in (7, 64, None):  # tiny chunks force many boundaries
+        got = read_mtx(path, chunk_nnz=chunk)
+        assert got.shape == oracle.shape == ref.shape
+        assert np.array_equal(got.rowptr, oracle.rowptr.astype(got.rowptr.dtype))
+        assert np.array_equal(got.cols, oracle.cols)
+        np.testing.assert_array_equal(got.vals, oracle.vals)
+        np.testing.assert_array_equal(got.vals, ref.vals.astype(np.float64))
+
+
+def test_write_mtx_value_exact_roundtrip(tmp_path):
+    rng = np.random.default_rng(42)
+    m = generators.banded(40, 3, seed=1)
+    vals = rng.standard_normal(m.nnz)  # full-precision doubles
+    mat = CSRMatrix(rowptr=m.rowptr, cols=m.cols, vals=vals, shape=m.shape)
+    path = str(tmp_path / "rt.mtx")
+    write_mtx(path, mat)
+    got = read_mtx(path)
+    np.testing.assert_array_equal(got.vals, vals)  # %.17g is lossless
+
+
+def test_scale_ingest_chunk_accounting(tmp_path):
+    """>=100k-row ingest with bounded chunks: the chunk count must match
+    2 * ceil(stored/chunk) (two streaming passes) and no chunk may exceed
+    the requested size — the accounting that pins peak parser memory."""
+    m = 110_000
+    ref = generators.banded(m, 1, seed=7)  # tridiagonal: nnz = 3m - 2
+    path = str(tmp_path / "big.mtx")
+    write_mtx(path, ref)
+    chunk = 65_536
+    mat, stats = mtxstream.parse_mtx(path, chunk_nnz=chunk)
+    assert mat.m == m >= 100_000
+    assert mat.nnz == ref.nnz == 3 * m - 2
+    assert stats["passes"] == 2
+    assert stats["chunks"] == 2 * math.ceil(ref.nnz / chunk)
+    assert 0 < stats["max_chunk_elems"] <= chunk
+    np.testing.assert_array_equal(mat.vals, ref.vals.astype(np.float64))
+    assert np.array_equal(mat.cols, ref.cols)
+
+
+def test_chunk_nnz_validation(tmp_path):
+    path = _write(tmp_path, _general(2, 2, [(1, 1, 1.0)]))
+    with pytest.raises(ValueError, match="chunk_nnz"):
+        mtxstream.parse_mtx(path, chunk_nnz=0)
+
+
+# -------------------------------------------------------------------------
+# .csrz artifacts
+# -------------------------------------------------------------------------
+def test_csrz_bit_identical_roundtrip(tmp_path):
+    mat = generators.power_law(64, alpha=1.8, seed=4)
+    zpath = artifact.save_csrz(str(tmp_path / "a.csrz"), mat)
+    assert os.path.exists(zpath) and os.path.exists(zpath + ".json")
+    loaded = artifact.load_csrz(zpath)
+    assert loaded is not None
+    got, meta = loaded
+    assert got.shape == mat.shape
+    np.testing.assert_array_equal(got.rowptr, mat.rowptr)
+    np.testing.assert_array_equal(got.cols, mat.cols)
+    np.testing.assert_array_equal(got.vals, mat.vals)
+    assert meta["m"] == 64 and meta["nnz"] == mat.nnz
+    assert "features" in meta and "locality" in meta
+
+
+@pytest.mark.parametrize("corrupt", ["npz", "json", "schema", "missing"])
+def test_csrz_corruption_tolerant(tmp_path, corrupt):
+    mat = generators.banded(16, 2, seed=2)
+    zpath = artifact.save_csrz(str(tmp_path / "c.csrz"), mat)
+    jpath = zpath + ".json"
+    if corrupt == "npz":
+        with open(zpath, "wb") as f:
+            f.write(b"not a zipfile")
+    elif corrupt == "json":
+        with open(jpath, "w") as f:
+            f.write("{broken")
+    elif corrupt == "schema":
+        with open(jpath, "w") as f:
+            json.dump({"schema": 999, "meta": {}}, f)
+    else:
+        os.remove(zpath)
+    assert artifact.load_csrz(zpath) is None  # tolerant: caller re-parses
+
+
+def test_ingest_parse_once_ever(tmp_path, corpus_cache):
+    ref = generators.banded(32, 2, seed=6)
+    path = str(tmp_path / "src.mtx")
+    write_mtx(path, ref)
+
+    def parses():
+        return obs.snapshot()["counters"].get("corpus.parses", 0)
+
+    p0 = parses()
+    cold = artifact.ingest_path(path)
+    assert not cold.cache_hit and cold.parse_stats is not None
+    assert parses() == p0 + 1
+    warm = artifact.ingest_path(path)
+    assert warm.cache_hit and warm.parse_stats is None
+    assert warm.key == cold.key == artifact.file_sha256(path)
+    assert parses() == p0 + 1  # zero parse work on the hit
+    np.testing.assert_array_equal(warm.mat.vals, cold.mat.vals)
+    # same bytes at another path -> same content key -> still a hit
+    path2 = str(tmp_path / "copy.mtx")
+    with open(path) as f:
+        data = f.read()
+    with open(path2, "w") as f:
+        f.write(data)
+    assert artifact.ingest_path(path2).cache_hit
+    assert parses() == p0 + 1
+
+
+def test_ingest_cache_disabled(tmp_path, monkeypatch):
+    monkeypatch.setenv("REPRO_CORPUS_CACHE", "off")
+    ref = generators.banded(8, 1, seed=1)
+    path = str(tmp_path / "nc.mtx")
+    write_mtx(path, ref)
+    res = artifact.ingest_path(path)
+    assert not res.cache_hit and res.artifact == ""
+    assert not artifact.cache_enabled()

@@ -1,0 +1,289 @@
+"""Corpus manifest/registry + the closed-loop learned tuner.
+
+The full loop under test: corpus:// names resolve through the suite
+registry, offline stand-ins are deterministic first-class artifacts, a
+probed campaign seeds the advisor's knowledge base as a side effect, and
+`plan(probe="learned")` then shortlists strictly fewer candidates than
+either probing mode — with the hit/miss/fallback counters and the
+per-plan confidence auditable throughout.
+"""
+import json
+
+import numpy as np
+import pytest
+
+from repro import obs
+from repro.corpus import manifest
+from repro.corpus.advisor import (FEATURE_AXES, TuneAdvisor, advisor_reset,
+                                  default_advisor, embed)
+from repro.experiments import ExperimentSpec, MeasurePolicy, Runner
+from repro.matrices import generators as G
+from repro.matrices import suite
+
+FAST = MeasurePolicy(iters=1, warmup=0, with_yax=False, with_parallel=False,
+                     with_metrics=False)
+
+
+@pytest.fixture()
+def stores(tmp_path, monkeypatch):
+    monkeypatch.setenv("REPRO_RESULT_STORE", str(tmp_path / "results"))
+    monkeypatch.setenv("REPRO_PLAN_CACHE", str(tmp_path / "plans"))
+    monkeypatch.setenv("REPRO_REORDER_CACHE", str(tmp_path / "reorder"))
+    monkeypatch.setenv("REPRO_OPERATOR_CACHE", str(tmp_path / "opcache"))
+    monkeypatch.setenv("REPRO_CORPUS_CACHE", str(tmp_path / "corpus"))
+    monkeypatch.setenv("REPRO_CORPUS_OFFLINE", "1")
+    advisor_reset()
+    yield tmp_path
+    advisor_reset()
+
+
+def _policy(probe, iters=2):
+    return MeasurePolicy(iters=iters, warmup=0, probe=probe, with_yax=False,
+                         with_parallel=False, with_metrics=False)
+
+
+# -------------------------------------------------------------------------
+# manifest
+# -------------------------------------------------------------------------
+class TestManifest:
+    def test_bundled_manifest_loads_and_validates(self):
+        entries = manifest.load_manifest()
+        assert len(entries) >= 15
+        fixtures = [e for e in entries.values() if e.fixture]
+        remote = [e for e in entries.values() if e.url]
+        assert len(fixtures) >= 5 and len(remote) >= 10
+        # the scale campaign depends on >=100k-row entries existing
+        assert any(e.m >= 100_000 for e in remote)
+
+    def test_get_entry_accepts_both_name_forms(self):
+        a = manifest.get_entry("fix_bcsstk")
+        b = manifest.get_entry("corpus://fix_bcsstk")
+        assert a == b and a.qualified == "corpus://fix_bcsstk"
+
+    def test_get_entry_unknown_lists_known(self):
+        with pytest.raises(KeyError, match="fix_bcsstk"):
+            manifest.get_entry("no_such_matrix")
+
+    def test_corpus_names_are_qualified_once(self):
+        names = manifest.corpus_names()
+        assert names and all(n.startswith("corpus://") for n in names)
+        assert not any(n.count("corpus://") > 1 for n in names)
+
+    @pytest.mark.parametrize("rec,match", [
+        ({"name": "fix_bcsstk", "m": 1, "n": 1, "nnz": 1,
+          "symmetric": True, "kind": "fixture", "fixture": "x.mtx"},
+         "duplicate"),
+        ({"name": "z", "m": 1, "n": 1, "nnz": 1, "symmetric": False,
+          "kind": "banana", "url": "http://x"}, "unknown kind"),
+        ({"name": "z", "m": 1, "n": 1, "nnz": 1, "symmetric": False,
+          "kind": "mesh"}, "neither url nor"),
+        ({"name": "z", "m": 0, "n": 1, "nnz": 1, "symmetric": False,
+          "kind": "mesh", "url": "http://x"}, "non-positive"),
+    ])
+    def test_manifest_validation_rejects(self, tmp_path, rec, match):
+        with open(manifest.MANIFEST_PATH) as f:
+            raw = json.load(f)
+        raw["matrices"].append(rec)
+        bad = tmp_path / "manifest.json"
+        bad.write_text(json.dumps(raw))
+        with pytest.raises(ValueError, match=match):
+            manifest.load_manifest(str(bad))
+
+
+# -------------------------------------------------------------------------
+# resolution: fixtures, stand-ins, suite registry
+# -------------------------------------------------------------------------
+class TestResolution:
+    def test_fixture_resolves_through_suite(self, stores):
+        e = manifest.get_entry("fix_bcsstk")
+        mat = suite.get("corpus://fix_bcsstk")
+        assert (mat.m, mat.n, mat.nnz) == (e.m, e.n, e.nnz)
+
+    def test_offline_standin_deterministic_and_flagged(self, stores):
+        cold = manifest.ensure("bcsstk17")
+        assert not cold.cache_hit
+        assert cold.meta.get("standin") is True
+        assert cold.mat.m == manifest.get_entry("bcsstk17").m
+        warm = manifest.ensure("bcsstk17")
+        assert warm.cache_hit  # second resolve: first-class .csrz artifact
+        np.testing.assert_array_equal(warm.mat.vals, cold.mat.vals)
+        np.testing.assert_array_equal(warm.mat.cols, cold.mat.cols)
+        rep = manifest.verify_entry("bcsstk17")
+        assert rep["ok"] and rep["standin"]
+
+    def test_verify_entry_fixture(self, stores):
+        rep = manifest.verify_entry("fix_general")
+        assert rep["ok"] and not rep["standin"]
+        assert rep["artifact"].endswith(".csrz")
+
+    def test_suite_catalog_uniform(self, stores):
+        assert "corpus" in suite.TIERS
+        assert set(suite.smoke_names()) <= set(suite.names())
+        assert suite.names("smoke") == suite.smoke_names()
+        got = suite.corpus_names()
+        assert "corpus://fix_bcsstk" in got
+        with pytest.raises(KeyError, match="corpus://"):
+            suite.get("definitely_not_registered")
+        with pytest.raises(ValueError, match="already registered"):
+            suite.register_matrix(suite.names()[0], "smoke",
+                                  lambda: G.banded(8, 1))
+        suite.register_matrix("tmp_test_matrix", "smoke",
+                              lambda: G.banded(8, 1, seed=3), cached=False,
+                              override=True)
+        try:
+            assert suite.get("tmp_test_matrix").m == 8
+        finally:
+            del suite._CATALOG["tmp_test_matrix"]
+
+    def test_runner_resolves_corpus_names(self, stores):
+        spec = ExperimentSpec(name="corpus_rt",
+                              matrices=("corpus://fix_bcsstk",),
+                              schemes=("baseline",), engines=("auto",),
+                              policy=FAST)
+        rep = Runner(spec, verbose=False).run()
+        rec = rep.cell("corpus://fix_bcsstk", "baseline")
+        assert rec["m"] == 96
+        # every measured cell now carries the advisor's training pair
+        assert set(rec["tuner_decision"]) == {"engine", "block_shape",
+                                              "sell_sigma"}
+        assert rec["features"]["nnz"] > 0
+        assert rec["tuner_candidates"] >= 1
+
+
+# -------------------------------------------------------------------------
+# probe modes + plan keys
+# -------------------------------------------------------------------------
+class TestProbeModes:
+    def test_policy_resolve_keeps_probe_mode(self):
+        for probe, want in ((False, False), (True, True),
+                            ("learned", "learned"),
+                            ("exhaustive", "exhaustive")):
+            pol = _policy(probe).resolve("*")
+            assert pol["probe"] == want
+
+    def test_plan_keys_distinct_per_mode(self, stores):
+        from repro.api import SpmvProblem
+        from repro.core.spmv.plan import plan_key
+
+        pr = SpmvProblem(G.banded(64, 2, seed=1), k=1, dtype="float32")
+        keys = {plan_key(pr, "baseline", "auto", mode, 0)
+                for mode in (False, True, "learned", "exhaustive")}
+        assert len(keys) == 4
+
+    def test_bogus_probe_mode_rejected(self, stores):
+        from repro.api import SpmvProblem, plan
+
+        with pytest.raises(ValueError, match="probe"):
+            plan(SpmvProblem(G.banded(32, 1, seed=1), k=1, dtype="float32"),
+                 reorder="baseline", probe="telepathic")
+
+
+# -------------------------------------------------------------------------
+# the learned tuner loop
+# -------------------------------------------------------------------------
+class TestLearnedTuner:
+    def test_embed_covers_all_axes(self):
+        from repro.core.spmv.tune import matrix_features
+
+        v = embed(matrix_features(G.power_law(128, alpha=2.0, seed=2)))
+        assert v.shape == (len(FEATURE_AXES),)
+        assert np.all(np.isfinite(v))
+        assert embed({}).shape == v.shape  # pre-schema records degrade to 0s
+
+    def test_fallback_on_empty_store(self, stores):
+        from repro.api import SpmvProblem, plan
+
+        before = obs.snapshot()["counters"].get("advisor.fallbacks", 0)
+        pl = plan(SpmvProblem(G.banded(64, 2, seed=4), k=1, dtype="float32"),
+                  reorder="baseline", probe="learned")
+        after = obs.snapshot()["counters"].get("advisor.fallbacks", 0)
+        assert after == before + 1
+        assert pl.advisor_confidence == 0.0
+        assert pl.tune.source == "probe"  # model ranking still probed
+
+    def test_seeded_kb_shortlists_strictly_fewer(self, stores):
+        from repro.core.spmv.tune import PROBE_TOP_K
+
+        mats = ("corpus://fix_banded_1k", "corpus://fix_plaw_1k")
+        seed = ExperimentSpec(name="tseed", matrices=mats,
+                              schemes=("baseline",), engines=("auto",),
+                              policy=_policy("exhaustive"))
+        store_rep = Runner(seed, verbose=False).run()
+        n_ex = {m: store_rep.cell(m, "baseline")["probed_candidates"]
+                for m in mats}
+        assert all(v > PROBE_TOP_K for v in n_ex.values())
+
+        advisor_reset()  # the learned phase must see the cells just written
+        assert default_advisor().knowledge_size() == len(mats)
+        before = obs.snapshot()["counters"]
+        learned = ExperimentSpec(name="tlearn", matrices=mats,
+                                 schemes=("baseline",), engines=("auto",),
+                                 policy=_policy("learned"))
+        rep = Runner(learned, verbose=False).run()
+        after = obs.snapshot()["counters"]
+
+        for m in mats:
+            rec = rep.cell(m, "baseline")
+            n_ln = rec["probed_candidates"]
+            assert 0 < n_ln <= 2 < PROBE_TOP_K + 1
+            assert n_ln < n_ex[m]
+            assert rec["advisor_confidence"] > 0
+        consulted = sum(after.get(k, 0) - before.get(k, 0)
+                        for k in ("advisor.hits", "advisor.misses"))
+        assert consulted == len(mats)
+        assert after.get("advisor.fallbacks", 0) == before.get(
+            "advisor.fallbacks", 0)
+
+    def test_shortlist_maps_decisions_onto_candidates(self):
+        adv = TuneAdvisor.__new__(TuneAdvisor)  # no store: drive _match only
+        cands = [
+            {"engine": "csr", "block_shape": (8, 128), "sigma": None},
+            {"engine": "sell", "block_shape": (8, 128), "sigma": 64},
+            {"engine": "sell", "block_shape": (8, 128), "sigma": 256},
+        ]
+        exact = adv._match({"engine": "sell", "block_shape": [8, 128],
+                            "sell_sigma": 256}, cands)
+        assert exact is cands[2]
+        shape_only = adv._match({"engine": "sell", "block_shape": [8, 128],
+                                 "sell_sigma": 999}, cands)
+        assert shape_only is cands[1]
+        assert adv._match({"engine": "gone", "block_shape": [8, 128],
+                           "sell_sigma": None}, cands) is None
+
+
+# -------------------------------------------------------------------------
+# CLI
+# -------------------------------------------------------------------------
+class TestCli:
+    def test_list(self, stores, capsys):
+        from repro.corpus.__main__ import main
+
+        assert main(["list"]) == 0
+        out = capsys.readouterr().out
+        assert "corpus://fix_bcsstk" in out and "fixture" in out
+        assert main(["list", "--json"]) == 0
+        rows = json.loads(capsys.readouterr().out)
+        assert any(r["name"] == "corpus://cage12" for r in rows)
+
+    def test_ingest_then_expect_cached(self, stores, capsys):
+        from repro.corpus.__main__ import main
+
+        # cold cache: fixtures parse, so --expect-cached must fail...
+        assert main(["ingest", "--fixtures", "--offline",
+                     "--expect-cached"]) == 1
+        capsys.readouterr()
+        # ...and once artifacts exist, re-ingest is a 100% hit
+        assert main(["ingest", "--fixtures", "--offline",
+                     "--expect-cached"]) == 0
+        out = capsys.readouterr().out
+        assert "cache-hit" in out and "0 parse(s)" in out
+
+    def test_verify_fixtures_and_unknown_name(self, stores, capsys):
+        from repro.corpus.__main__ import main
+
+        assert main(["verify", "--fixtures"]) == 0
+        assert "ok" in capsys.readouterr().out
+        with pytest.raises(SystemExit):
+            main(["ingest"])  # no selection
+        with pytest.raises(KeyError):
+            main(["ingest", "no_such_matrix"])
