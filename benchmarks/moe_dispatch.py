@@ -1,53 +1,40 @@
 """Paper technique inside the LM framework: MoE routing as a sparse matrix.
 
-Measures (CPU, reduced config): the router LI metric (paper §6.1), the drop
-fraction under the capacity (= nnz-balanced) schedule, and wall-clock of
-sorted (reordered) vs one-hot (unreordered) dispatch."""
+A thin VIEW over the `"workload"` campaign cells (benchmarks/workloads
+`moe_dispatch_spec`): the seed's (E, k) grid at d=128, measured through
+the Problem→Plan→Operator pipeline under the WorkloadSession
+amortization policy instead of raw perf_counter loops — sorted dispatch
+is the sparse operator chain, onehot the GShard-style scatter oracle
+(repro.workloads.adapters). CSV schema unchanged: the router LI metric
+(paper §6.1), the drop fraction under the capacity (= nnz-balanced)
+schedule, and wall-clock of sorted (reordered) vs one-hot (unreordered)
+dispatch."""
 from __future__ import annotations
 
-import time
+import re
 
-import jax
-import jax.numpy as jnp
-import numpy as np
+from repro.experiments import Runner
 
-from repro.configs.base import MoEConfig
-from repro.models.layers import moe as MOE
-
-from .common import RESULTS_DIR, write_csv
+from .common import RESULTS_DIR, result_store, write_csv
+from .workloads import moe_dispatch_spec
 
 
 def run(quick: bool = False):
-    d, tokens = 128, 2048 if quick else 8192
+    tokens = 2048 if quick else 8192
+    spec = moe_dispatch_spec(tokens)
+    rep = Runner(spec, store=result_store(), verbose=False).run()
     rows, out = [], {}
-    for e, k in [(16, 2), (64, 8)]:
-        cfg_s = MoEConfig(num_experts=e, top_k=k, d_ff_expert=256,
-                          dispatch="sorted")
-        cfg_o = MoEConfig(num_experts=e, top_k=k, d_ff_expert=256,
-                          dispatch="onehot")
-        params = MOE.init_moe(jax.random.PRNGKey(0), d, cfg_s)
-        x = jax.random.normal(jax.random.PRNGKey(1), (1, tokens, d), jnp.float32)
-        results = {}
-        for nm, cfg in [("sorted", cfg_s), ("onehot", cfg_o)]:
-            f = jax.jit(lambda p, xx, c=cfg: MOE.moe_layer(p, xx, c))
-            y, m = f(params, x)
-            y.block_until_ready()
-            t0 = time.perf_counter()
-            for _ in range(5):
-                y, m = f(params, x)
-                y.block_until_ready()
-            dt = (time.perf_counter() - t0) / 5 * 1e3
-            results[nm] = (dt, y, m)
-            rows.append([f"e{e}_k{k}", nm, round(dt, 2),
-                         round(float(m["router_li"]), 3),
-                         round(float(m["drop_frac"]), 4)])
-        # both dispatches agree numerically
-        ys, yo = results["sorted"][1], results["onehot"][1]
-        err = float(jnp.abs(ys - yo).max())
-        out[f"e{e}_k{k}_dispatch_agree"] = err < 1e-3
-        out[f"e{e}_k{k}_sorted_ms"] = round(results["sorted"][0], 2)
-        out[f"e{e}_k{k}_onehot_ms"] = round(results["onehot"][0], 2)
-        out[f"e{e}_k{k}_router_li"] = round(float(results["sorted"][2]["router_li"]), 3)
+    for rec in rep.records:
+        m = re.search(r"moe-e(\d+)-k(\d+)", rec["matrix"])
+        cfg = f"e{m.group(1)}_k{m.group(2)}"
+        li = round(float(rec["li_mean"]), 3)
+        drop = round(float(rec["drop_frac"]), 4)
+        rows.append([cfg, "sorted", round(rec["sorted_ms"], 2), li, drop])
+        rows.append([cfg, "onehot", round(rec["onehot_ms"], 2), li, drop])
+        out[f"{cfg}_dispatch_agree"] = bool(rec["dispatch_agree"])
+        out[f"{cfg}_sorted_ms"] = round(rec["sorted_ms"], 2)
+        out[f"{cfg}_onehot_ms"] = round(rec["onehot_ms"], 2)
+        out[f"{cfg}_router_li"] = li
     write_csv(f"{RESULTS_DIR}/moe_dispatch.csv",
               ["config", "dispatch", "ms", "router_li", "drop_frac"], rows)
     return out

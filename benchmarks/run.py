@@ -37,6 +37,7 @@ MODULES = [
     "roofline",
     "spmm_batch",
     "corpus_scale",
+    "workloads",
 ]
 
 BENCH_SUMMARY_PATH = os.path.join(os.path.dirname(__file__), "..",
@@ -351,6 +352,10 @@ def main() -> None:
     ap.add_argument("--smoke-serve", action="store_true",
                     help="traffic-sim soak campaign over the 'serve' cell "
                          "kind (hardened-service invariants)")
+    ap.add_argument("--smoke-workloads", action="store_true",
+                    help="dynamic-sparsity campaign over the 'workload' "
+                         "cell kind (moe/attn/gnn streams + amortization "
+                         "invariants)")
     ap.add_argument("--devices", type=int, default=8,
                     help="device count for --smoke-parallel")
     ap.add_argument("--matrices", default="",
@@ -384,6 +389,13 @@ def main() -> None:
         mats = [m for m in args.matrices.split(",") if m] or None
         with traced():
             rc = 1 if smoke_serve(mats) else 0
+        raise SystemExit(rc)
+    if args.smoke_workloads:
+        from . import workloads as workloads_mod
+
+        mats = [m for m in args.matrices.split(",") if m] or None
+        with traced():
+            rc = 1 if workloads_mod.smoke(mats) else 0
         raise SystemExit(rc)
     if args.smoke:
         mats = [m for m in args.matrices.split(",") if m] or None

@@ -20,3 +20,20 @@ for e, k in [(16, 2), (64, 8)]:
           f"(1.0 = perfectly balanced), dropped={float(m['drop_frac']):.3%} "
           f"under capacity (nnz-balanced) schedule, "
           f"aux={float(m['aux_loss']):.3f}")
+
+# The same routing through the Problem->Plan->Operator pipeline
+# (repro.workloads): dispatch/combine become registry operators, and a
+# value-only stream (routing structure frozen, gates changing) plans once
+# per role and then rebuilds/reuses — the paper's amortization question
+# answered on workload-shaped sparsity.
+from repro.workloads import DynamicSparseProblem, run_stream  # noqa: E402
+
+rec = run_stream(DynamicSparseProblem("workload://moe-e16-k2-t1024-d64-n4",
+                                      scenario="static"), iters=2)
+print(f"pipeline (E=16 top-2, {rec['steps']}-step value-only stream): "
+      f"plans={rec['plans']} replans={rec['replans']} "
+      f"reuse rate={rec['reuse_rate']:.0%}, "
+      f"plan-cost share={rec['plan_cost_share']:.0%}, "
+      f"sorted-vs-onehot speedup={rec['speedup_vs_ref']:.2f}x, "
+      f"dispatch bitwise-equal={rec['dispatch_bitwise_equal']}")
+assert rec["replans"] == 0 and rec["dispatch_bitwise_equal"]

@@ -1,15 +1,20 @@
 """Train a ~100M-param LM for a few hundred steps on CPU, with a mid-run
 simulated crash + auto-resume (fault-tolerance demo).
 
-    PYTHONPATH=src python examples/train_small_lm.py [--steps 200]
+    PYTHONPATH=src python examples/train_small_lm.py [--steps 200] [--small]
 """
 import argparse
+import dataclasses
 import shutil
 
 from repro.launch.train import small_lm_config, train
 
 ap = argparse.ArgumentParser()
 ap.add_argument("--steps", type=int, default=200)
+ap.add_argument("--small", action="store_true",
+                help="~1M-param reduced config (CI / quick sanity run)")
+ap.add_argument("--batch", type=int, default=8)
+ap.add_argument("--seq", type=int, default=256)
 ap.add_argument("--crash-demo", action="store_true",
                 help="crash at 40%% and auto-resume")
 args = ap.parse_args()
@@ -17,13 +22,19 @@ args = ap.parse_args()
 ckpt_dir = "/tmp/repro_example_ckpt"
 shutil.rmtree(ckpt_dir, ignore_errors=True)
 cfg = small_lm_config()
-print(f"model: {cfg.param_count()/1e6:.0f}M params")
+if args.small:
+    cfg = dataclasses.replace(cfg, name="small-lm-ci", n_layers=2,
+                              d_model=128, n_heads=4, kv_heads=2,
+                              d_ff=256, vocab=512, head_dim=32)
+print(f"model: {cfg.param_count()/1e6:.1f}M params")
 
 if args.crash_demo:
     out = train(cfg, args.steps, ckpt_dir, ckpt_every=20,
+                batch=args.batch, seq=args.seq,
                 crash_at=int(args.steps * 0.4))
     print("crashed:", {k: v for k, v in out.items() if k != 'losses'})
-out = train(cfg, args.steps, ckpt_dir, ckpt_every=20)
+out = train(cfg, args.steps, ckpt_dir, ckpt_every=20,
+            batch=args.batch, seq=args.seq)
 print(f"loss: {out['first_loss']:.3f} -> {out['final_loss']:.3f} "
       f"over {args.steps} steps")
 assert out["final_loss"] < out["first_loss"], "loss must decrease"

@@ -129,6 +129,19 @@ def structure_key(mat: CSRMatrix) -> str:
     return h.hexdigest()[:20]
 
 
+def values_key(mat: CSRMatrix) -> str:
+    """sha1 over the VALUES only — structure_key's complement.
+
+    (structure_key, values_key) identifies a matrix's full content
+    without hashing it as one blob, which is what a dynamic-structure
+    consumer (workloads.WorkloadSession) needs to tell "same structure,
+    same values → reuse the built Operator" apart from "same structure,
+    new values → Plan.rebuild"."""
+    h = hashlib.sha1()
+    h.update(np.ascontiguousarray(mat.vals).tobytes())
+    return h.hexdigest()[:20]
+
+
 def plan_key(problem: SpmvProblem, reorder: str, engine: str,
              probe, seed: int, schemes=None, topology=None,
              partition: str = "auto", partitioners=None) -> str:

@@ -26,6 +26,15 @@ Built-ins:
                  calibrated modelled-parallel timing on the plan's
                  panels, and (verify=True) the ShardedOperator's
                  original-index-space oracle check.
+  * "workload" — one dynamic-sparsity stream (repro.workloads): the cell
+                 matrix is a `workload://` name, the variant the
+                 scenario ("static" value-only / "drift" per-step
+                 structure change / "shift1" one mid-stream change). The
+                 whole stream runs through a `WorkloadSession`
+                 (plan/replan/rebuild/reuse amortization policy) and the
+                 record is the stream summary: per-step LI, drop_frac,
+                 reuse rate, plan-cost share, sparse-vs-reference
+                 (sorted-vs-onehot for moe) speedup, verification.
   * "serve"    — one open-loop traffic-sim run against a hardened
                  SpmvService (serving/traffic.py): the variant encodes
                  the load shape + service limits (`serve_variant(...)`),
@@ -395,6 +404,43 @@ def measure_schedule_cell(cell, mat) -> dict:
         "modelled_par_ms": ms,
         "gflops": float(ios.gflops(mat.nnz, np.array([ms]))[0]),
     }
+
+
+# --------------------------------------------------------------------------
+# workload cells (dynamic model-layer sparsity streams, ISSUE 9)
+# --------------------------------------------------------------------------
+@register_cell_kind("workload")
+def measure_workload_cell(cell, mat) -> dict:
+    """One workload stream: cell.matrix is a `workload://` name, the
+    variant is the scenario. The resolved suite matrix (step-0
+    representative) is ignored — the stream regenerates every step from
+    the cell's seed, so the cell stays content-addressed on
+    (name, scenario, scheme, engine, policy)."""
+    from ..workloads import DynamicSparseProblem, WorkloadSession, run_stream
+
+    pol = cell.policy_dict()
+    scenario = cell.variant or "drift"
+    problem = DynamicSparseProblem(cell.matrix, scenario=scenario,
+                                   seed=pol["seed"], dtype=cell.dtype)
+    if problem.wdef.kind == "moe" and cell.scheme != "baseline":
+        raise ValueError(
+            f"moe workloads have rectangular dispatch/combine matrices; "
+            f"symmetric reordering scheme {cell.scheme!r} does not apply "
+            f"(the dispatch IS the reordering) — use scheme='baseline'")
+    session = WorkloadSession(problem, reorder=cell.scheme,
+                              engine=cell.engine, probe=pol["probe"])
+    rec = run_stream(problem, session, iters=max(int(pol["iters"]), 2),
+                     compare_dense=pol["time_spmv"], verify=pol["verify"])
+    if problem.wdef.kind == "moe":
+        # the seed benchmark's vocabulary: sparse chain == sorted
+        # dispatch, reference == onehot baseline
+        rec["sorted_ms"] = rec["sparse_ms"]
+        if "ref_ms" in rec:
+            rec["onehot_ms"] = rec["ref_ms"]
+            rec["sorted_vs_onehot_speedup"] = rec["speedup_vs_ref"]
+        if "verify_ok" in rec:
+            rec["dispatch_agree"] = rec["verify_ok"]
+    return rec
 
 
 # --------------------------------------------------------------------------

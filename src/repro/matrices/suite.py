@@ -11,9 +11,13 @@ queried by tier:
   * LOCALITY — ~520k rows, x spills L2 (sequential locality tier).
   * CORPUS   — real SuiteSparse matrices (or offline stand-ins) resolved
                through repro.corpus; names carry the `corpus://` prefix.
+  * WORKLOAD — dynamic model-layer sparsity streams (repro.workloads);
+               names carry the `workload://` prefix and resolve to the
+               stream's step-0 representative matrix (the full stream is
+               the "workload" cell kind's business).
 
-Every name — synthetic or `corpus://` — resolves through the same
-`get(name)`. Synthetic entries are deterministic in their seed and cached
+Every name — synthetic, `corpus://`, or `workload://` — resolves through
+the same `get(name)`. Synthetic entries are deterministic in their seed and cached
 on disk (npz) after first build; corpus entries resolve through the
 content-addressed `.csrz` artifact store. Third parties can add entries
 with `register_matrix`.
@@ -29,7 +33,7 @@ import numpy as np
 from ..core.sparse.csr import CSRMatrix
 from . import generators as G
 
-TIERS = ("smoke", "bench", "large", "locality", "corpus")
+TIERS = ("smoke", "bench", "large", "locality", "corpus", "workload")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -88,9 +92,14 @@ def get(name: str) -> CSRMatrix:
         from ..corpus import manifest as corpus_manifest
 
         return corpus_manifest.resolve(name)
+    if name.startswith("workload://"):
+        from ..workloads import sources as workload_sources
+
+        return workload_sources.representative(name)
     if name not in _CATALOG:
         raise KeyError(f"unknown matrix {name!r}; known: "
-                       f"{sorted(_CATALOG)[:10]}... (or a corpus:// name)")
+                       f"{sorted(_CATALOG)[:10]}... (or a corpus:// / "
+                       f"workload:// name)")
     d = _CATALOG[name]
     return _cached(name, d.thunk) if d.cached else d.thunk()
 
@@ -116,6 +125,14 @@ def corpus_names() -> list:
     from ..corpus import manifest as corpus_manifest
 
     return corpus_manifest.corpus_names()
+
+
+def workload_names() -> list:
+    """Canonical workload:// preset names (any parameterization of the
+    repro.workloads name grammar resolves too)."""
+    from ..workloads import sources as workload_sources
+
+    return workload_sources.preset_names()
 
 
 # --------------------------------------------------------------------------

@@ -54,6 +54,11 @@ def _route(params, x_flat, num_experts, top_k):
     return gates, experts, probs
 
 
+# public alias: repro.workloads lowers this routing decision to sparse
+# dispatch/combine matrices (workloads/sources.py mirrors it in numpy)
+route = _route
+
+
 def _aux_loss(probs, experts, num_experts):
     """Switch-style load-balancing loss + the paper's LI metric."""
     n, _ = probs.shape

@@ -1,0 +1,176 @@
+"""Model-layer adapters: moe/attention/gnn rewired through the pipeline.
+
+Two jobs. First, the workload-facing forward paths: the sorted MoE
+dispatch of models/layers/moe.py and a block-sparse attention
+score-matmul expressed as *registry operators* — same engines, same
+opcache, same obs spans as every static benchmark, so workload-shaped
+sparsity is measured by exactly the machinery the paper's static
+matrices go through. Second, the reference paths `run_stream` verifies
+and races against: the GShard-style onehot scatter dispatch (the
+unreordered baseline of benchmarks/moe_dispatch) and plain dense
+matmuls for attention masks / GNN adjacencies.
+
+Equality contract: the sparse dispatch D @ x and the onehot scatter
+place each kept token's row exactly once (one nonzero of value 1.0 per
+slot row — multiplying by 1.0 and adding 0.0 are exact in f32), so the
+dispatch buffers must be BITWISE equal; the combine sums k gate-weighted
+contributions per token in different orders, so it is compared at
+rel err < 1e-3.
+"""
+from __future__ import annotations
+
+import functools
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.spmv.plan import SpmvProblem, plan as plan_fn
+from . import sources
+
+
+def to_device(x):
+    return jnp.asarray(x)
+
+
+def block_until_ready(y):
+    return y.block_until_ready() if hasattr(y, "block_until_ready") else y
+
+
+def rel_err(a, b) -> float:
+    a = np.asarray(a, np.float64)
+    b = np.asarray(b, np.float64)
+    return float(np.abs(a - b).max() / max(np.abs(b).max(), 1e-12))
+
+
+def _plan_op(mat, k, *, reorder="baseline", engine="auto", hints=None):
+    return plan_fn(SpmvProblem(mat=mat, k=k, hints=dict(hints or {})),
+                   reorder=reorder, engine=engine).build()
+
+
+# --------------------------------------------------------------------------
+# pipeline-rewired forward paths
+# --------------------------------------------------------------------------
+def moe_sorted_dispatch(x, w_router, top_k: int, num_experts: int,
+                        capacity_factor: float = 1.25, *, session=None,
+                        reorder: str = "baseline", engine: str = "auto"):
+    """models/layers/moe.py sorted dispatch as pipeline operators.
+
+    route (numpy mirror of moe.route) → (dispatch D, combine C) →
+    registry operators → buf = D @ x, y = C @ buf. With a
+    `WorkloadSession`, plans amortize across calls (value-only routing
+    changes rebuild, identical routing reuses). Returns
+    (buf [E*cap, d], y [n, d], info) — info carries li/drop_frac/cap and
+    the session events when one is used.
+    """
+    x = np.asarray(x, np.float32)
+    gates, experts = sources.moe_route_np(x, np.asarray(w_router, np.float32),
+                                          top_k)
+    cap = sources.moe_capacity(x.shape[0], top_k, num_experts,
+                               capacity_factor)
+    disp, comb, info = sources.routing_matrices(experts, gates,
+                                                num_experts, cap)
+    info.update(cap=cap, num_experts=num_experts)
+    if session is not None:
+        d_op, ev_d = session.operator(disp, role="dispatch")
+        c_op, ev_c = session.operator(comb, role="combine")
+        info["events"] = (ev_d, ev_c)
+    else:
+        d = x.shape[1]
+        d_op = _plan_op(disp, d, reorder=reorder, engine=engine)
+        c_op = _plan_op(comb, d, reorder=reorder, engine=engine)
+    xd = to_device(x)
+    buf = d_op.matmul(xd)
+    y = block_until_ready(c_op.matmul(buf))
+    return np.asarray(buf), np.asarray(y), info
+
+
+def block_sparse_attention(scores, v, *, session=None,
+                           reorder: str = "baseline", engine: str = "auto",
+                           block: int = 0):
+    """Block-sparse attention score application y = scores @ v through a
+    registry operator. `scores` is the masked (already-normalized) score
+    matrix as CSRMatrix — dense inside each (b × b) block — lowered with
+    the `block_shape` hint so BCSR-shaped engines are on the menu."""
+    hints = {"block_shape": (block, block)} if block else None
+    if session is not None:
+        op, _ = session.operator(scores, role="mask")
+    else:
+        op = _plan_op(scores, np.asarray(v).shape[1], reorder=reorder,
+                      engine=engine, hints=hints)
+    return np.asarray(block_until_ready(op.matmul(to_device(v))))
+
+
+def gnn_aggregate(adj, x, *, session=None, reorder: str = "baseline",
+                  engine: str = "auto"):
+    """GNN neighborhood aggregation X' = A @ X (SpMM at feature width)."""
+    if session is not None:
+        op, _ = session.operator(adj, role="aggregate")
+    else:
+        op = _plan_op(adj, np.asarray(x).shape[1], reorder=reorder,
+                      engine=engine)
+    return np.asarray(block_until_ready(op.matmul(to_device(x))))
+
+
+# --------------------------------------------------------------------------
+# reference paths (what run_stream verifies against and races)
+# --------------------------------------------------------------------------
+@functools.partial(jax.jit, static_argnames=("num_experts", "cap"))
+def _onehot_dispatch_combine(x_flat, experts, gates, num_experts, cap):
+    """The onehot branch of models/layers/moe.py `_moe_body`, minus the
+    expert FFN: rank via cumsum over UNSORTED assignments (GShard
+    baseline), scatter to the slot buffer, gate-weighted combine."""
+    n, d = x_flat.shape
+    k = experts.shape[1]
+    ef = experts.reshape(-1)
+    tok = jnp.repeat(jnp.arange(n), k)
+    gf = gates.reshape(-1)
+    onehot_full = jax.nn.one_hot(ef, num_experts, dtype=jnp.int32)
+    rank = (jnp.cumsum(onehot_full, axis=0) - 1)[jnp.arange(n * k), ef]
+    keep = rank < cap
+    slot = jnp.where(keep, ef * cap + rank, num_experts * cap)
+    buf = jnp.zeros((num_experts * cap + 1, d),
+                    x_flat.dtype).at[slot].set(x_flat[tok])
+    buf = buf[:-1]
+    y_flat = jnp.concatenate([buf, jnp.zeros((1, d), buf.dtype)])
+    contrib = y_flat[slot] * (gf * keep)[:, None]
+    y = jnp.zeros((n, d), x_flat.dtype).at[tok].add(contrib)
+    return buf, y
+
+
+@jax.jit
+def _dense_matmul(a, x):
+    return a @ x
+
+
+def reference(kind: str, step: sources.WorkloadStep, iters: int = 3) -> dict:
+    """Run the kind's reference path on one step; returns {"ms", "y"}
+    (+ "buf" for moe). ms is the median of `iters` timed runs after a
+    warmup call, same protocol as run_stream's sparse chain."""
+    if kind == "moe":
+        x = to_device(step.operands[0].x)
+        experts = to_device(step.meta["experts"])
+        gates = to_device(step.meta["gates"])
+        args = (x, experts, gates)
+        fn = functools.partial(_onehot_dispatch_combine,
+                               num_experts=step.meta["num_experts"],
+                               cap=step.meta["cap"])
+    else:
+        a = to_device(step.operands[0].mat.to_dense())
+        args = (a, to_device(step.operands[0].x))
+        fn = _dense_matmul
+    out = fn(*args)
+    block_until_ready(out[-1] if isinstance(out, tuple) else out)
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        o = fn(*args)
+        block_until_ready(o[-1] if isinstance(o, tuple) else o)
+        times.append((time.perf_counter() - t0) * 1e3)
+    rec = {"ms": float(np.median(times))}
+    if kind == "moe":
+        rec["buf"], rec["y"] = out
+    else:
+        rec["y"] = out
+    return rec
