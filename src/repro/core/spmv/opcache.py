@@ -90,6 +90,46 @@ def operator_nbytes(op) -> int:
     return total
 
 
+def operator_nbytes_per_device(op) -> list:
+    """Per-device footprint breakdown, in bytes (list of length
+    topology.devices; a non-sharded operator is the single-device list
+    `[operator_nbytes(op)]`).
+
+    `operator_nbytes` counts a ShardedOperator as ONE blob, so a
+    service-global budget can be satisfied while an individual device is
+    over — the per-device budget the multi-shard router enforces needs
+    the split. Each device is charged its slice of the engine arrays
+    (leading mesh axes of layout.arrays, floats priced at the plan's
+    compute dtype) PLUS the replicated gather/scatter index maps, which
+    every device holds a copy of — so sum(per_device) >= the blob count
+    whenever replication exists, which is exactly the accounting gap the
+    global number hides. Deterministic: computed from the host layout,
+    independent of whether device arrays were materialized yet."""
+    lay = getattr(op, "layout", None)
+    if lay is None:
+        return [operator_nbytes(op)]
+    topo = lay.topology
+    ndev = int(topo.devices)
+    dtype_name = getattr(getattr(op, "plan", None), "dtype_name", None)
+    per = np.zeros(ndev, dtype=np.int64)
+    for a in lay.arrays.values():
+        a = np.asarray(a)
+        flat = a.reshape((ndev,) + a.shape[2 if topo.col_devices > 1
+                                           else 1:])
+        itemsize = (np.dtype(dtype_name).itemsize
+                    if dtype_name and np.issubdtype(a.dtype, np.floating)
+                    else a.dtype.itemsize)
+        per += np.asarray([flat[i].size * itemsize for i in range(ndev)],
+                          dtype=np.int64)
+    replicated = 0
+    for name in ("_in_idx", "_in_idx_r", "_out_idx", "_out_idx_r"):
+        arr = getattr(op, name, None)
+        if arr is not None:
+            replicated += int(arr.nbytes)
+    per += replicated
+    return [int(b) for b in per]
+
+
 def content_key(mat: CSRMatrix, engine: str, dtype_name: str,
                 block_shape=(8, 128), sell_sigma=None, probe=False,
                 k: int = 1) -> str:

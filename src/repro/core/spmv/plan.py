@@ -516,12 +516,13 @@ class Plan:
 
         The dynamic-matrix path of the serving layer: `update_values`
         (and re-register with an unchanged `structure_key`) is a rebuild,
-        never a replan. Raises ValueError on a structure mismatch or for
-        sharded plans (whose panel layout embeds value padding)."""
+        never a replan. Sharded plans rebuild too: the frozen partition,
+        panel split and collective schedule are reused and only the
+        per-device arrays are repacked (no re-partition, no re-tune) —
+        what the multi-shard router's value-swap path runs. Raises
+        ValueError on a structure mismatch."""
         import jax.numpy as jnp
 
-        if self.topology is not None:
-            raise ValueError("rebuild() supports single-device plans only")
         if tuple(mat.shape) != tuple(self.mat_shape) \
                 or mat.nnz != self.mat_nnz:
             raise ValueError(
@@ -530,9 +531,28 @@ class Plan:
                 f"({tuple(mat.shape)}, nnz={mat.nnz}) — replan instead")
         dt = jnp.dtype(self.dtype_name)
         with obs.span("plan.rebuild", key=self.key,
-                      engine=self.tune.engine):
+                      engine=self.tune.engine,
+                      sharded=self.topology is not None):
             rmat = mat if self.perm is None else mat.permute(self.perm)
             t0 = time.perf_counter()
+            if self.topology is not None:
+                from . import distributed
+
+                layout = distributed.build_sharded_layout(
+                    rmat, self.topology, self.panel_starts,
+                    engine=self.tune.engine,
+                    block_shape=self.tune.block_shape,
+                    schedule=self.comm.get("schedule", "all_gather"),
+                    halo=int(self.comm.get("halo", 0)))
+                info = {"cache_hit": False, "key": self.key,
+                        "tune_ms": 0.0,
+                        "build_ms": (time.perf_counter() - t0) * 1e3,
+                        "load_ms": 0.0, "engine": self.tune.engine,
+                        "plan": self.tune.to_json(), "value_swap": True,
+                        "comm": dict(self.comm),
+                        "partitioner": self.partitioner}
+                return distributed.ShardedOperator(
+                    layout, self.perm, plan=self, build_info=info)
             inner = tune_mod.build_from_plan(
                 rmat, self.tune, dtype=dt,
                 use_kernel=(self.use_kernel if use_kernel is None
@@ -543,6 +563,33 @@ class Plan:
                     "load_ms": 0.0, "engine": self.tune.engine,
                     "plan": self.tune.to_json(), "value_swap": True}
         return Operator(inner, self.perm, self, build_info=info)
+
+    def apply_delta(self, delta, *, max_churn: Optional[float] = None,
+                    max_bw_growth: Optional[float] = None) -> "Plan":
+        """A NEW Plan for this plan's matrix edited by a StructureDelta
+        (core/spmv/delta.py), reusing the frozen tuning decision and
+        permutation — the amortization tier between `rebuild` (values
+        only) and a full replan (new search).
+
+        An empty delta returns this plan unchanged (no counters move).
+        A small delta (nnz churn <= max_churn AND bandwidth growth <=
+        max_bw_growth, defaults delta.MAX_CHURN / delta.MAX_BW_GROWTH)
+        returns the edited plan under a `plan.delta` span, counting
+        `delta.applies`; appended rows extend the permutation with
+        identity tail positions. Past either threshold the frozen
+        decision is stale: DeltaTooLarge is raised (counting
+        `delta.fallbacks`) and the caller replans. Sharded plans accept
+        same-shape deltas only (panel split indexes a fixed row count)
+        and reuse partitioner + panel_starts + schedule, so build() after
+        apply_delta repacks arrays without any new search."""
+        from . import delta as delta_mod
+
+        kw = {}
+        if max_churn is not None:
+            kw["max_churn"] = max_churn
+        if max_bw_growth is not None:
+            kw["max_bw_growth"] = max_bw_growth
+        return delta_mod.apply_delta(self, delta, **kw)
 
     def _build_sharded(self, dt, info: dict, use_store: bool):
         """Topology-aware build: restore the ShardedOperator's layout

@@ -359,20 +359,27 @@ def run_serve_traffic(matrix: str = "smoke_powerlaw",
                       arrival: str = "poisson", rate_rps: float = 500.0,
                       requests: int = 200, n_keys: int = 4,
                       zipf_s: float = 1.1, update_frac: float = 0.1,
+                      structure_frac: float = 0.0,
                       budget_mb: float = 0.0, max_batch: int = 8,
                       window_ms: float = 2.0, max_queue: int = 32,
                       overload: str = "reject", engine: str = "auto",
-                      reorder: str = "baseline", seed: int = 0,
+                      reorder: str = "baseline", devices: int = 1,
+                      layout: str = "1d_rows", meshes: int = 2,
+                      placement: str = "bin_pack", seed: int = 0,
                       write_results: bool = True) -> dict:
     """Open-loop traffic run against the hardened service (one scenario,
     driven directly — the campaign-shaped path is `benchmarks/run.py
-    --smoke-serve`). The matrix is registered under n_keys service keys
-    with Zipf-skewed traffic; a budget_mb > 0 memory budget makes the
-    operator LRU (eviction + zero-re-tune plan-store reload) part of the
-    scenario, update_frac > 0 mixes in no-replan value swaps. Reports
-    outcome counts, SLO percentiles and the hardening invariants
-    (`ok` = every future resolved + budget respected + counters balance).
-    """
+    --smoke-serve` / `--smoke-route`). The matrix is registered under
+    n_keys service keys with Zipf-skewed traffic; a budget_mb > 0 memory
+    budget makes the operator LRU (eviction + zero-re-tune plan-store
+    reload) part of the scenario, update_frac > 0 mixes in no-replan
+    value swaps, structure_frac > 0 mixes in StructureDelta background
+    replans. devices > 1 serves the keys SHARDED from a
+    RoutedSpmvService fleet (`meshes` meshes of `devices` devices each,
+    keys placed by `placement`; budget_mb then bounds every DEVICE, not
+    the fleet). Reports outcome counts, SLO percentiles and the
+    hardening invariants (`ok` = every future — requests and replans —
+    resolved + budget respected + counters balance)."""
     from ..matrices import suite
     from ..serving import traffic
     from ..serving.spmv_service import SpmvService
@@ -380,54 +387,104 @@ def run_serve_traffic(matrix: str = "smoke_powerlaw",
     mat = suite.get(matrix)
     pattern = traffic.TrafficPattern(
         arrival=arrival, rate_rps=rate_rps, requests=requests,
-        n_keys=n_keys, zipf_s=zipf_s, update_frac=update_frac, seed=seed)
+        n_keys=n_keys, zipf_s=zipf_s, update_frac=update_frac,
+        structure_frac=structure_frac, seed=seed)
     budget = None if budget_mb <= 0 else int(budget_mb * (1 << 20))
     keys = [f"{matrix}#{i}" for i in range(n_keys)]
-    with SpmvService(engine=engine, reorder=reorder, max_batch=max_batch,
-                     window_ms=window_ms, max_queue=max_queue,
-                     memory_budget_bytes=budget, overload=overload) as svc:
+    routed = devices > 1
+    if routed:
+        from ..core.spmv.topology import Topology
+        from ..router import MeshSpec, RoutedSpmvService
+
+        fleet = [MeshSpec(f"mesh{i}",
+                          Topology(devices=devices, layout=layout),
+                          budget_per_device=budget)
+                 for i in range(meshes)]
+        svc = RoutedSpmvService(fleet, policy=placement, engine=engine,
+                                reorder=reorder, max_batch=max_batch,
+                                window_ms=window_ms, max_queue=max_queue,
+                                overload=overload)
+    else:
+        svc = SpmvService(engine=engine, reorder=reorder,
+                          max_batch=max_batch, window_ms=window_ms,
+                          max_queue=max_queue, memory_budget_bytes=budget,
+                          overload=overload)
+    with svc:
         for k in keys:
             svc.register(k, mat)
         summary = traffic.run_open_loop(svc, {k: mat for k in keys},
                                         pattern)
         svc.flush()
         stats = svc.stats()
-    slo = stats["slo"]
+    if routed:
+        # fleet rollup: worst-mesh SLO, summed build/reload counters
+        per = [m["service"] for m in stats["per_mesh"].values()]
+        slo = {k: max(s["slo"][k] for s in per)
+               for k in ("p50_ms", "p95_ms", "p99_ms", "shed_rate",
+                         "eviction_rate")}
+        coalesce = max(s["coalesce_ratio"] for s in per)
+        op_builds = sum(s["op_builds"] for s in per)
+        op_reloads = sum(s["op_reloads"] for s in per)
+        resident_max = max(s["resident_bytes_max"] for s in per)
+    else:
+        slo = stats["slo"]
+        coalesce = stats["coalesce_ratio"]
+        op_builds = stats["op_builds"]
+        op_reloads = stats["op_reloads"]
+        resident_max = stats["resident_bytes_max"]
     rec = {
         "matrix": matrix, "n_keys": n_keys, "arrival": arrival,
         "rate_rps": rate_rps, "requests": requests, "zipf_s": zipf_s,
-        "update_frac": update_frac, "overload": overload,
+        "update_frac": update_frac, "structure_frac": structure_frac,
+        "overload": overload,
         "memory_budget_bytes": budget or 0,
         "offered": summary["offered"], "ok_count": summary["ok"],
         "shed": summary["shed"], "rejected": summary["rejected"],
         "errors": summary["errors"], "unresolved": summary["unresolved"],
         "updates": summary["updates"],
+        "structure_updates": summary["structure_updates"],
+        "replans_landed": summary["replans_landed"],
+        "replan_errors": summary["replan_errors"],
+        "replan_unresolved": summary["replan_unresolved"],
         "offered_rps": summary["offered_rps"],
         "achieved_rps": summary["achieved_rps"],
         "p50_ms": slo["p50_ms"], "p95_ms": slo["p95_ms"],
         "p99_ms": slo["p99_ms"], "shed_rate": slo["shed_rate"],
         "eviction_rate": slo["eviction_rate"],
-        "coalesce_ratio": stats["coalesce_ratio"],
-        "op_builds": stats["op_builds"], "op_reloads": stats["op_reloads"],
+        "coalesce_ratio": coalesce,
+        "op_builds": op_builds, "op_reloads": op_reloads,
         "evictions": stats["evictions"],
         "value_swaps": stats["value_swaps"],
-        "resident_bytes_max": stats["resident_bytes_max"],
+        "resident_bytes_max": resident_max,
         "budget_ok": summary["budget_ok"],
         "counters_balanced": (
             stats["requests"] == stats["results"] + stats["sheds"]
             + stats["errors"] and stats["pending"] == 0),
-        "ok": (summary["unresolved"] == 0 and summary["budget_ok"]
+        "ok": (summary["unresolved"] == 0
+               and summary["replan_unresolved"] == 0
+               and summary["budget_ok"]
+               and stats.get("per_device_ok", True)
                and stats["requests"] == stats["results"] + stats["sheds"]
                + stats["errors"]),
     }
+    if routed:
+        rec.update({
+            "devices": devices, "layout": layout, "meshes": meshes,
+            "placement": placement, "replans": stats["replans"],
+            "per_device_ok": bool(stats["per_device_ok"]),
+            "assignments": dict(stats["routing"]["assignments"]),
+        })
+    fleet_tag = (f" [{meshes}x{devices}dev {layout} {placement}]"
+                 if routed else "")
     print(f"[serve-traffic] {matrix} x{n_keys} keys {arrival}@"
-          f"{rate_rps:g}rps {overload}: ok={rec['ok_count']} "
+          f"{rate_rps:g}rps {overload}{fleet_tag}: ok={rec['ok_count']} "
           f"shed={rec['shed']} rejected={rec['rejected']} "
           f"errors={rec['errors']} unresolved={rec['unresolved']} | "
           f"p50={rec['p50_ms']:.2f}ms p99={rec['p99_ms']:.2f}ms "
           f"coalesce={rec['coalesce_ratio']:.2f} "
           f"evictions={rec['evictions']} reloads={rec['op_reloads']} "
-          f"swaps={rec['value_swaps']} budget_ok={rec['budget_ok']}",
+          f"swaps={rec['value_swaps']} "
+          f"replans={rec['replans_landed']} budget_ok={rec['budget_ok']}",
           flush=True)
     if write_results:
         os.makedirs(RESULTS, exist_ok=True)
@@ -484,6 +541,16 @@ def main():
     ap.add_argument("--zipf", type=float, default=1.1)
     ap.add_argument("--update-frac", type=float, default=0.1,
                     help="fraction of arrivals that are value updates")
+    ap.add_argument("--structure-frac", type=float, default=0.0,
+                    help="fraction of arrivals that are StructureDelta "
+                         "background replans (with --serve-traffic)")
+    ap.add_argument("--meshes", type=int, default=2,
+                    help="fleet size for routed --serve-traffic "
+                         "(--devices > 1: meshes x devices)")
+    ap.add_argument("--placement", default="bin_pack",
+                    help="router placement policy for routed "
+                         "--serve-traffic (bin_pack, nnz_balance, "
+                         "comm_aware, or any @register_placement name)")
     ap.add_argument("--budget-mb", type=float, default=0.0,
                     help="operator memory budget in MiB (0 = unbudgeted)")
     ap.add_argument("--max-queue", type=int, default=32)
@@ -513,22 +580,30 @@ def _dispatch(ap, args):
         ap.error("--probe and --learned are mutually exclusive probe modes")
     probe = "learned" if args.learned else args.probe
     if args.serve_traffic:
-        if args.spmm != 1 or probe or args.devices > 1:
+        if args.spmm != 1 or probe:
             ap.error("--serve-traffic does not combine with "
-                     "--spmm/--probe/--devices")
+                     "--spmm/--probe")
+        # --devices > 1 serves routed SHARDED keys from a
+        # RoutedSpmvService fleet (--meshes x --devices, --layout,
+        # --placement); budget_mb then bounds every device
         rec = run_serve_traffic(
             matrix=args.matrix or "smoke_powerlaw", arrival=args.arrival,
             rate_rps=args.rate, requests=args.requests, n_keys=args.keys,
             zipf_s=args.zipf, update_frac=args.update_frac,
+            structure_frac=args.structure_frac,
             budget_mb=args.budget_mb, max_batch=args.max_batch,
             window_ms=args.window_ms, max_queue=args.max_queue,
             overload=args.overload, engine=args.engine,
-            reorder=args.serve_reorder)
+            reorder=args.serve_reorder, devices=args.devices,
+            layout=args.layout or "1d_rows", meshes=args.meshes,
+            placement=args.placement)
         if not rec["ok"]:
             raise SystemExit(
                 f"serve-traffic invariants FAILED: "
                 f"unresolved={rec['unresolved']} "
+                f"replan_unresolved={rec['replan_unresolved']} "
                 f"budget_ok={rec['budget_ok']} "
+                f"per_device_ok={rec.get('per_device_ok', True)} "
                 f"counters_balanced={rec['counters_balanced']}")
         return
     if args.serve_sim:

@@ -16,6 +16,10 @@ call sites (and tests) keep working unchanged:
       KeyBusy       (RuntimeError)    register() on a key with pending work
       UnregisteredKey (KeyError)      submit()/update on an unknown key
       BadRequest    (ValueError)      malformed x / vals / matrix argument
+        RoutedElsewhere (BadRequest)  a sharded-key update on a PLAIN
+                                      SpmvService — the multi-shard
+                                      router (repro.router) owns that
+                                      lifecycle
 
 Retry discipline: `isinstance(e, QueueFull)` (which covers RequestShed)
 means "back off retry_after_ms and resend the same request"; everything
@@ -63,3 +67,12 @@ class UnregisteredKey(ServiceError, KeyError):
 class BadRequest(ServiceError, ValueError):
     """Malformed request payload (wrong shape/nnz/dtype) — a programming
     error at the call site, never retryable."""
+
+
+class RoutedElsewhere(BadRequest):
+    """update_values/update_structure on a SHARDED key of a plain
+    SpmvService: the per-shard replan lifecycle (generation-tagged swap
+    per shard, siblings keep serving) lives in the multi-shard router —
+    register the key through repro.router.RoutedSpmvService instead.
+    Subclasses BadRequest, so pre-router `except ValueError` /
+    `except BadRequest` call sites keep working unchanged."""

@@ -77,10 +77,11 @@ import numpy as np
 
 from .. import obs
 from ..core.sparse.csr import CSRMatrix
+from ..core.spmv import delta as delta_mod
 from ..core.spmv import opcache
 from ..core.spmv import plan as plan_mod
 from .errors import (BadRequest, KeyBusy, QueueFull, RequestShed,
-                     ServiceClosed, UnregisteredKey)
+                     RoutedElsewhere, ServiceClosed, UnregisteredKey)
 
 OVERLOAD_POLICIES = ("reject", "shed-oldest", "degrade-to-k1")
 
@@ -191,6 +192,11 @@ class SpmvService:
 
     Also usable as a context manager (close() on exit).
     """
+
+    # Sharded keys refuse update_values/update_structure on a PLAIN
+    # service (RoutedElsewhere): the per-shard replan lifecycle belongs
+    # to the multi-shard router, whose per-mesh service flips this.
+    _allow_sharded_updates = False
 
     def __init__(self, engine: str = "auto", max_batch: int = 32,
                  window_ms: float = 2.0, use_kernel: str = "auto",
@@ -332,6 +338,13 @@ class SpmvService:
         obs.gauge("service.resident_ops", service=self.sid).set(
             len(self._ops))
 
+    def _op_nbytes(self, op) -> int:
+        """Bytes an operator is charged against the memory budget.
+        The router's per-mesh service overrides this with per-device
+        accounting (max device share x devices), so its budget bounds
+        EVERY device, not just the global sum."""
+        return opcache.operator_nbytes(op)
+
     def _install_locked(self, key: str, gen: int, op, nbytes: int):
         """Install a freshly built operator under the memory budget:
         evict LRU-first residents until the newcomer fits, so the
@@ -387,7 +400,7 @@ class SpmvService:
                     dirty = self._dirty.get(key, False)
                 op, pl, info = self._build_operator(mat, scheme, topology,
                                                     hint, dirty)
-                nb = opcache.operator_nbytes(op)
+                nb = self._op_nbytes(op)
                 with self._cv:
                     if self._gen[key] != gen:
                         continue       # superseded mid-build: resolve again
@@ -406,8 +419,10 @@ class SpmvService:
         When the key's values have diverged from the plan store (dirty)
         and the kept plan still matches the structure + scheme, rebuild
         under the frozen decision — plan() would otherwise replan from
-        scratch because its content key hashes the values."""
-        if (dirty and topology is None and hint is not None
+        scratch because its content key hashes the values. Sharded plans
+        take the same shortcut: Plan.rebuild repacks the frozen layout
+        (partition, panel split, schedule all kept)."""
+        if (dirty and hint is not None
                 and hint[0] == plan_mod.structure_key(mat)
                 and hint[1] == scheme):
             op = hint[2].rebuild(mat, use_kernel=self.use_kernel)
@@ -436,10 +451,13 @@ class SpmvService:
                 raise ServiceClosed("service is closed")
             if key not in self._matrices:
                 raise UnregisteredKey(f"unregistered matrix key {key!r}")
-            if plan_mod.topology_mod.normalize(
-                    self._topologies.get(key)) is not None:
-                raise BadRequest(f"update_values on sharded key {key!r} is "
-                                 f"not supported; re-register")
+            if (not self._allow_sharded_updates
+                    and plan_mod.topology_mod.normalize(
+                        self._topologies.get(key)) is not None):
+                raise RoutedElsewhere(
+                    f"update_values on sharded key {key!r}: per-shard "
+                    f"swaps belong to the router — register the key "
+                    f"through repro.router.RoutedSpmvService")
             if key in self._replan_pending:
                 raise KeyBusy(f"structure replan in flight for {key!r}")
             mat = self._matrices[key]
@@ -460,7 +478,7 @@ class SpmvService:
             return          # no operator planned yet: first dispatch plans
         # rebuild OUTSIDE the lock — the old operator keeps serving
         op = hint[2].rebuild(new_mat, use_kernel=self.use_kernel)
-        nb = opcache.operator_nbytes(op)
+        nb = self._op_nbytes(op)
         with self._cv:
             if self._gen[key] == gen and not self._stop:
                 self._build_info[key] = op.build_info
@@ -468,8 +486,9 @@ class SpmvService:
                 self._stats["value_swaps"] += 1
                 self._cv.notify_all()
 
-    def update_structure(self, key: str, mat: CSRMatrix,
-                         staleness_s: Optional[float] = None) -> Future:
+    def update_structure(self, key: str, mat: Optional[CSRMatrix] = None,
+                         staleness_s: Optional[float] = None,
+                         delta=None) -> Future:
         """Replace `key`'s matrix with one of a DIFFERENT structure. The
         stale operator keeps serving while a background thread replans
         (reorder + tune on the new structure); matrix, plan and operator
@@ -477,23 +496,42 @@ class SpmvService:
         generation (or the replan error — the stale operator keeps
         serving on failure).
 
+        Either pass the full replacement matrix (`mat=`) or an
+        incremental `delta=` (core.spmv.delta.StructureDelta) describing
+        the edit against the CURRENT matrix; with a delta the background
+        worker first tries `Plan.apply_delta` (reuse the frozen tuning
+        decision + permutation, skip reorder and re-tune entirely) and
+        only falls back to a full replan when the delta is over the
+        churn/bandwidth thresholds (DeltaTooLarge).
+
         staleness_s (default: the service's max_staleness_s) bounds how
         long the stale operator may keep answering: once exceeded, the
         key's dispatch GATES on the replan instead of serving staler
         results. The matrix shape must be unchanged (queued requests were
         validated against it)."""
+        if (mat is None) == (delta is None):
+            raise BadRequest("update_structure takes exactly one of "
+                             "mat= or delta=")
         with self._cv:
             if self._stop:
                 raise ServiceClosed("service is closed")
             if key not in self._matrices:
                 raise UnregisteredKey(f"unregistered matrix key {key!r}")
-            if plan_mod.topology_mod.normalize(
-                    self._topologies.get(key)) is not None:
-                raise BadRequest(f"update_structure on sharded key {key!r} "
-                                 f"is not supported; re-register")
+            if (not self._allow_sharded_updates
+                    and plan_mod.topology_mod.normalize(
+                        self._topologies.get(key)) is not None):
+                raise RoutedElsewhere(
+                    f"update_structure on sharded key {key!r}: the "
+                    f"per-shard replan lifecycle belongs to the router — "
+                    f"register the key through "
+                    f"repro.router.RoutedSpmvService")
             if key in self._replan_pending:
                 raise KeyBusy(f"structure replan already in flight for "
                               f"{key!r}")
+            if delta is not None:
+                # materialize eagerly so malformed deltas (BadDelta, a
+                # ValueError) surface at the call site, not in the Future
+                mat = delta.apply_to(self._matrices[key])
             if tuple(mat.shape) != tuple(self._matrices[key].shape):
                 raise BadRequest(
                     f"update_structure must keep the shape "
@@ -504,7 +542,7 @@ class SpmvService:
             now = time.monotonic()
             fut: Future = Future()
             self._replan_pending[key] = {
-                "mat": mat, "t_req": now, "future": fut,
+                "mat": mat, "delta": delta, "t_req": now, "future": fut,
                 "deadline": (float("inf") if bound is None
                              else now + float(bound)),
             }
@@ -529,11 +567,32 @@ class SpmvService:
                 if ent is None:
                     continue
                 mat, scheme = ent["mat"], self._schemes[key]
+                topology = self._topologies.get(key)
+                hint = self._plans.get(key)
+                dirty = self._dirty.get(key, False)
+                delta = ent.get("delta")
+                skey_cur = plan_mod.structure_key(self._matrices[key])
             try:
-                with obs.span("serve.replan", key=key):
-                    op, pl, info = self._build_operator(mat, scheme, None,
-                                                        None, False)
-                    nb = opcache.operator_nbytes(op)
+                with obs.span("serve.replan", key=key,
+                              delta=delta is not None):
+                    op = pl = info = None
+                    if (delta is not None and hint is not None
+                            and hint[1] == scheme and hint[0] == skey_cur):
+                        # incremental path: keep the frozen tuning
+                        # decision + perm, skip reorder/tune entirely;
+                        # refuse -> full replan below
+                        try:
+                            pl = hint[2].apply_delta(delta)
+                            op = (pl.rebuild(mat,
+                                             use_kernel=self.use_kernel)
+                                  if dirty else pl.build(cache=self.cache))
+                            info = op.build_info
+                        except delta_mod.DeltaTooLarge:
+                            op = pl = info = None
+                    if op is None:
+                        op, pl, info = self._build_operator(
+                            mat, scheme, topology, None, False)
+                    nb = self._op_nbytes(op)
             except Exception as e:
                 with self._cv:
                     if self._replan_pending.get(key) is ent:

@@ -65,6 +65,13 @@ class TrafficPattern:
     zipf_s       — Zipf exponent (0 = uniform over keys).
     update_frac  — fraction of arrivals that are update_values() calls
                    instead of submits (the dynamic-values mix).
+    structure_frac — fraction of arrivals that are update_structure()
+                   calls carrying a small deletion-only StructureDelta
+                   (always churn/bandwidth-legal, so the delta-apply
+                   path — not the full-replan fallback — is what soaks).
+                   Takes precedence over update_frac on an arrival
+                   masked by both. The mid-soak replan scenario the
+                   router's sibling-p99 assert runs on.
     """
 
     arrival: str = "poisson"
@@ -73,6 +80,7 @@ class TrafficPattern:
     n_keys: int = 1
     zipf_s: float = 1.1
     update_frac: float = 0.0
+    structure_frac: float = 0.0
     burst_factor: float = 4.0
     burst_duty: float = 0.2
     burst_period_s: float = 0.05
@@ -87,6 +95,8 @@ class TrafficPattern:
                              ">= 1")
         if not 0.0 <= self.update_frac < 1.0:
             raise ValueError("update_frac must be in [0, 1)")
+        if not 0.0 <= self.structure_frac < 1.0:
+            raise ValueError("structure_frac must be in [0, 1)")
         if not (self.burst_factor > 1.0 and 0.0 < self.burst_duty < 1.0
                 and self.burst_period_s > 0.0):
             raise ValueError("burst_factor must be > 1, burst_duty in "
@@ -139,6 +149,28 @@ def update_mask(pattern: TrafficPattern) -> np.ndarray:
     return rng.random(pattern.requests) < pattern.update_frac
 
 
+def structure_mask(pattern: TrafficPattern) -> np.ndarray:
+    """Boolean per arrival: True = update_structure() with a small
+    deletion delta. Wins over update_mask on a doubly masked arrival."""
+    rng = np.random.default_rng(pattern.seed + 4)
+    return rng.random(pattern.requests) < pattern.structure_frac
+
+
+def _deletion_delta(mat: CSRMatrix, rng, frac: float = 0.005):
+    """A small always-legal StructureDelta: delete ~frac of the entries
+    (floored at 1). Deletions never grow bandwidth and the churn stays
+    far under delta.MAX_CHURN, so Plan.apply_delta accepts it."""
+    from ..core.spmv.delta import StructureDelta
+
+    nnz = mat.nnz
+    k = max(1, int(round(frac * nnz)))
+    pick = np.sort(rng.choice(nnz, size=min(k, nnz), replace=False))
+    rows = np.repeat(np.arange(mat.shape[0], dtype=np.int64),
+                     np.diff(mat.rowptr.astype(np.int64)))
+    return StructureDelta(del_rows=rows[pick],
+                          del_cols=mat.cols.astype(np.int64)[pick])
+
+
 def run_open_loop(svc, mats: Dict[str, CSRMatrix],
                   pattern: TrafficPattern,
                   result_timeout_s: float = 60.0,
@@ -172,9 +204,14 @@ def run_open_loop(svc, mats: Dict[str, CSRMatrix],
     times = arrival_times(pattern) / float(speedup)
     kidx = zipf_keys(pattern)
     is_update = update_mask(pattern)
+    is_structure = structure_mask(pattern)
+    cur = dict(mats)          # tracks structure as deltas land
+    drng = np.random.default_rng(pattern.seed + 5)
 
     futures = []
+    replan_futures = []
     submitted = rejected = updates = update_conflicts = update_errors = 0
+    structure_updates = structure_conflicts = structure_errors = 0
     retry_after_positive = True
     t0 = time.monotonic()
     for i in range(pattern.requests):
@@ -182,9 +219,20 @@ def run_open_loop(svc, mats: Dict[str, CSRMatrix],
         if delay > 0:
             time.sleep(delay)
         key = keys[kidx[i]]
-        if is_update[i]:
+        if is_structure[i]:
             try:
-                svc.update_values(key, mats[key].vals * (1.0 + 0.01 * i))
+                d = _deletion_delta(cur[key], drng)
+                replan_futures.append(
+                    svc.update_structure(key, delta=d))
+                cur[key] = d.apply_to(cur[key])
+                structure_updates += 1
+            except KeyBusy:
+                structure_conflicts += 1   # replan already in flight
+            except Exception:
+                structure_errors += 1
+        elif is_update[i]:
+            try:
+                svc.update_values(key, cur[key].vals * (1.0 + 0.01 * i))
                 updates += 1
             except KeyBusy:
                 update_conflicts += 1   # replan in flight: benign race
@@ -211,10 +259,23 @@ def run_open_loop(svc, mats: Dict[str, CSRMatrix],
             unresolved += 1             # the no-silent-drops violation
         except Exception:
             errors += 1
+    replans_landed = replan_errors = replan_unresolved = 0
+    for fut in replan_futures:
+        try:
+            fut.result(timeout=result_timeout_s)
+            replans_landed += 1
+        except FutureTimeout:
+            replan_unresolved += 1
+        except Exception:
+            replan_errors += 1
     wall_s = time.monotonic() - t0
 
     stats = svc.stats()
     budget = stats.get("memory_budget_bytes")
+    budget_ok = (budget is None
+                 or stats.get("resident_bytes_max", 0) <= budget)
+    if "per_device_ok" in stats:        # routed fleet: per-device verdict
+        budget_ok = budget_ok and bool(stats["per_device_ok"])
     return {
         "pattern": dataclasses.asdict(pattern),
         "offered": int(pattern.requests),
@@ -227,11 +288,16 @@ def run_open_loop(svc, mats: Dict[str, CSRMatrix],
         "updates": int(updates),
         "update_conflicts": int(update_conflicts),
         "update_errors": int(update_errors),
+        "structure_updates": int(structure_updates),
+        "structure_conflicts": int(structure_conflicts),
+        "structure_errors": int(structure_errors),
+        "replans_landed": int(replans_landed),
+        "replan_errors": int(replan_errors),
+        "replan_unresolved": int(replan_unresolved),
         "retry_after_positive": bool(retry_after_positive),
         "offered_rps": pattern.requests / max(wall_submit_s, 1e-9),
         "achieved_rps": ok / max(wall_s, 1e-9),
         "wall_s": float(wall_s),
-        "budget_ok": (budget is None
-                      or stats["resident_bytes_max"] <= budget),
+        "budget_ok": bool(budget_ok),
         "stats": stats,
     }

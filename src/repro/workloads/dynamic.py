@@ -17,7 +17,8 @@ Identity is `structure_key` (rowptr+cols sha1, core/spmv/plan.py) for
 structure and `values_key` for values — content, not object identity, so
 a drifted-then-returned structure still reuses. Every decision bumps a
 `workload.{plans,replans,reuses,rebuilds}` counter and runs under a
-`workload.*` span; reuse_rate = (reuses + rebuilds) / requests and
+`workload.*` span; reuse_rate = (reuses + rebuilds + deltas) / requests
+and
 plan_cost_share = plan_ms / (plan_ms + exec_ms) are the two headline
 numbers the "workload" cell kind reports.
 """
@@ -86,15 +87,22 @@ class WorkloadSession:
 
     def __init__(self, problem: DynamicSparseProblem, *,
                  reorder: str = "baseline", engine: str = "auto",
-                 probe=False):
+                 probe=False, use_deltas: bool = False):
         self.problem = problem
         self.reorder = reorder
         self.engine = engine
         self.probe = probe
+        # opt-in: when a role's structure drifts, try to express the move
+        # as a StructureDelta against the role's previous plan and
+        # Plan.apply_delta it (frozen decision + perm kept, no reorder,
+        # no tuner search) instead of a full replan. Off by default so
+        # replan counts stay the amortization ground truth.
+        self.use_deltas = bool(use_deltas)
         self._cache: dict = {}        # skey -> {plan, vkey, op}
         self._planned_roles: set = set()
+        self._role_skey: dict = {}    # role -> last structure key seen
         self.counts = {"plans": 0, "replans": 0, "reuses": 0,
-                       "rebuilds": 0}
+                       "rebuilds": 0, "deltas": 0}
         self.plan_ms = 0.0            # wall time spent planning/rebuilding
         self.events: list = []        # per-request event log
 
@@ -107,7 +115,8 @@ class WorkloadSession:
         total = self.requests
         if not total:
             return 0.0
-        return (self.counts["reuses"] + self.counts["rebuilds"]) / total
+        return (self.counts["reuses"] + self.counts["rebuilds"]
+                + self.counts["deltas"]) / total
 
     def operator(self, mat, role: str = ""):
         """Resolve a step operand to an Operator under the amortization
@@ -127,13 +136,23 @@ class WorkloadSession:
                 ent["vkey"] = vkey
             op = ent["op"]
         else:
-            event = "plans" if role not in self._planned_roles else "replans"
-            self._planned_roles.add(role)
-            with obs.span("workload.plan", role=role, event=event):
-                pl = plan_fn(self.problem.lower(mat), reorder=self.reorder,
-                             engine=self.engine, probe=self.probe)
-                op = pl.build()
-            self._cache[skey] = {"plan": pl, "vkey": vkey, "op": op}
+            op = None
+            if self.use_deltas and role in self._planned_roles:
+                op, pl = self._try_delta(mat, role, vkey)
+            if op is not None:
+                event = "deltas"
+                self._cache[skey] = {"plan": pl, "vkey": vkey, "op": op}
+            else:
+                event = ("plans" if role not in self._planned_roles
+                         else "replans")
+                self._planned_roles.add(role)
+                with obs.span("workload.plan", role=role, event=event):
+                    pl = plan_fn(self.problem.lower(mat),
+                                 reorder=self.reorder,
+                                 engine=self.engine, probe=self.probe)
+                    op = pl.build()
+                self._cache[skey] = {"plan": pl, "vkey": vkey, "op": op}
+        self._role_skey[role] = skey
         dt_ms = (time.perf_counter() - t0) * 1e3
         if event != "reuses":
             self.plan_ms += dt_ms
@@ -141,6 +160,31 @@ class WorkloadSession:
         obs.counter(f"workload.{event}").inc()
         self.events.append({"role": role, "event": event, "ms": dt_ms})
         return op, event
+
+    def _try_delta(self, mat, role: str, vkey: str):
+        """Express the role's structure drift as a StructureDelta against
+        its previous plan and apply it (frozen decision kept). Returns
+        (op, plan) or (None, None) when no delta expresses the move or it
+        exceeds the churn/bandwidth thresholds (DeltaTooLarge — the
+        caller replans). Surviving entries may carry drifted values, so a
+        values mismatch after the apply is settled with a rebuild."""
+        from ..core.spmv import delta as delta_mod
+
+        prev = self._cache.get(self._role_skey.get(role))
+        if prev is None or prev["plan"]._mat is None:
+            return None, None
+        d = delta_mod.delta_between(prev["plan"]._mat, mat)
+        if d is None or d.is_empty:
+            return None, None
+        try:
+            pl = prev["plan"].apply_delta(d)
+        except delta_mod.DeltaTooLarge:
+            return None, None
+        with obs.span("workload.delta", role=role,
+                      edited=d.churn_nnz):
+            op = (pl.build() if values_key(pl._mat) == vkey
+                  else pl.rebuild(mat))
+        return op, pl
 
 
 def run_stream(problem: DynamicSparseProblem,
@@ -232,6 +276,7 @@ def run_stream(problem: DynamicSparseProblem,
         "replans": session.counts["replans"],
         "reuses": session.counts["reuses"],
         "rebuilds": session.counts["rebuilds"],
+        "deltas": session.counts["deltas"],
         "reuse_rate": round(session.reuse_rate, 4),
         "plan_ms_total": round(plan_ms, 3),
         "exec_ms_total": round(exec_ms_total, 3),

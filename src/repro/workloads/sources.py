@@ -62,7 +62,11 @@ WORKLOAD_PRESETS = (
 _DEFAULTS = {
     "moe": {"e": 8, "k": 2, "t": 512, "d": 32, "n": 6, "cf": 1.25},
     "attn": {"s": 256, "b": 32, "w": 2, "g": 1, "d": 16, "n": 6},
-    "gnn": {"m": 512, "deg": 4, "f": 16, "n": 6},
+    # rw — drift rewire fraction: 0 resamples the WHOLE adjacency each
+    # drift step (legacy full-churn drift); rw>0 rewires only that edge
+    # fraction per step (delete rw*nnz edges, add as many new ones) —
+    # the incremental drift a StructureDelta amortizes (core/spmv/delta)
+    "gnn": {"m": 512, "deg": 4, "f": 16, "n": 6, "rw": 0},
 }
 _TOKEN_RE = re.compile(r"^([a-z]+)(\d+(?:\.\d+)?)$")
 
@@ -306,16 +310,54 @@ def _attn_steps(p: dict, scenario: str, seed: int) -> Iterator[WorkloadStep]:
 # --------------------------------------------------------------------------
 # graph-NN aggregation (SpMM over a synthetic adjacency)
 # --------------------------------------------------------------------------
+def _rewire_graph(mat: CSRMatrix, frac: float, seed: int) -> CSRMatrix:
+    """Rewire `frac` of the edges: delete that many uniformly chosen
+    entries and add as many fresh (row, col) pairs that don't collide
+    with the survivors. Shape and nnz are preserved — the incremental
+    counterpart of a full adjacency resample."""
+    rng = np.random.default_rng(seed)
+    m, n = mat.shape
+    rows = np.repeat(np.arange(m, dtype=np.int64),
+                     np.diff(mat.rowptr.astype(np.int64)))
+    cols = mat.cols.astype(np.int64)
+    vals = mat.vals
+    k = max(1, int(round(frac * mat.nnz)))
+    drop = rng.choice(mat.nnz, size=k, replace=False)
+    keep = np.ones(mat.nnz, dtype=bool)
+    keep[drop] = False
+    rows, cols, vals = rows[keep], cols[keep], vals[keep]
+    taken = set((rows * n + cols).tolist())
+    new = []
+    while len(new) < k:
+        r = int(rng.integers(m)) * n + int(rng.integers(n))
+        if r not in taken:
+            taken.add(r)
+            new.append(r)
+    new = np.asarray(new, dtype=np.int64)
+    rows = np.concatenate([rows, new // n])
+    cols = np.concatenate([cols, new % n])
+    vals = np.concatenate(
+        [vals, rng.standard_normal(k).astype(vals.dtype)])
+    return CSRMatrix.from_coo(rows, cols, vals, (m, n))
+
+
 def _gnn_steps(p: dict, scenario: str, seed: int) -> Iterator[WorkloadStep]:
     m, deg, f, nsteps = (int(p["m"]), int(p["deg"]), int(p["f"]),
                          int(p["n"]))
+    rw = float(p.get("rw", 0))
     rng = np.random.default_rng(seed)
     base = G.random_uniform(m, deg, seed=seed)
+    cur = base
     shifted = None
     x = rng.standard_normal((m, f)).astype(np.float32)
     for t in range(nsteps):
         srng = np.random.default_rng(seed + 3000 + t)
-        if scenario == "drift":
+        if scenario == "drift" and rw > 0 and t > 0:
+            cur = _rewire_graph(cur, rw, seed=seed + 100 + t)
+            adj = cur
+        elif scenario == "drift" and rw > 0:
+            adj = cur
+        elif scenario == "drift":
             adj = G.random_uniform(m, deg, seed=seed + 100 + t)
         elif scenario == "shift1" and t >= nsteps // 2:
             if shifted is None:

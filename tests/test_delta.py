@@ -1,0 +1,185 @@
+"""Incremental structure deltas (ISSUE 10 satellite): StructureDelta /
+delta_between / Plan.apply_delta edge cases, plus the amortization
+acceptance — a gnn drift stream expressed as small rewires replans ZERO
+times under use_deltas while delta.applies does the work.
+"""
+import numpy as np
+import pytest
+
+from repro import obs
+from repro.core.spmv.delta import (BadDelta, DeltaTooLarge, MAX_CHURN,
+                                   StructureDelta, delta_between)
+from repro.core.spmv.plan import (SpmvProblem, plan, structure_key,
+                                  values_key)
+from repro.matrices import generators as G
+
+
+@pytest.fixture
+def stores(tmp_path, monkeypatch):
+    monkeypatch.setenv("REPRO_PLAN_CACHE", str(tmp_path / "plans"))
+    monkeypatch.setenv("REPRO_REORDER_CACHE", str(tmp_path / "reorder"))
+    monkeypatch.setenv("REPRO_OPERATOR_CACHE", str(tmp_path / "ops"))
+    monkeypatch.setenv("REPRO_RESULT_STORE", str(tmp_path / "results"))
+
+
+def _entries(mat):
+    rows = np.repeat(np.arange(mat.shape[0], dtype=np.int64),
+                     np.diff(mat.rowptr.astype(np.int64)))
+    return rows, mat.cols.astype(np.int64)
+
+
+def _counters():
+    return (obs.counter("delta.applies").value,
+            obs.counter("delta.fallbacks").value)
+
+
+# -- StructureDelta mechanics ---------------------------------------------
+
+def test_apply_to_delete_and_add_roundtrip():
+    mat = G.banded(64, 3, seed=0)
+    rows, cols = _entries(mat)
+    d = StructureDelta(del_rows=rows[:4], del_cols=cols[:4])
+    out = d.apply_to(mat)
+    assert out.nnz == mat.nnz - 4 and out.shape == mat.shape
+    # add them back: structurally identical to the original
+    vals = mat.vals[:4]
+    d2 = StructureDelta(add_rows=rows[:4], add_cols=cols[:4], add_vals=vals)
+    back = d2.apply_to(out)
+    assert structure_key(back) == structure_key(mat)
+
+
+def test_apply_to_validates_edits():
+    mat = G.banded(32, 2, seed=1)
+    rows, cols = _entries(mat)
+    with pytest.raises(BadDelta):      # delete a hole
+        StructureDelta(del_rows=[0], del_cols=[31]).apply_to(mat)
+    with pytest.raises(BadDelta):      # add onto an existing entry
+        StructureDelta(add_rows=rows[:1], add_cols=cols[:1],
+                       add_vals=[1.0]).apply_to(mat)
+    with pytest.raises(BadDelta):      # out of range
+        StructureDelta(del_rows=[99], del_cols=[0]).apply_to(mat)
+    with pytest.raises(BadDelta):      # ragged arrays
+        StructureDelta(add_rows=[0, 1], add_cols=[5], add_vals=[1.0])
+
+
+def test_delta_between_recovers_edit():
+    old = G.banded(64, 3, seed=2)
+    rows, cols = _entries(old)
+    edit = StructureDelta(del_rows=rows[10:13], del_cols=cols[10:13])
+    new = edit.apply_to(old)
+    d = delta_between(old, new)
+    assert d is not None and d.churn_nnz == 3
+    assert structure_key(d.apply_to(old)) == structure_key(new)
+    # shrunk shape is inexpressible
+    assert delta_between(new, G.banded(32, 3, seed=2)) is None
+    # identical structures produce an empty delta
+    same = delta_between(old, old)
+    assert same is not None and same.is_empty
+
+
+# -- Plan.apply_delta edge cases ------------------------------------------
+
+def test_empty_delta_is_noop_and_moves_no_counters(stores):
+    mat = G.banded(128, 4, seed=3)
+    pl = plan(SpmvProblem(mat), reorder="rcm", cache=False)
+    before = _counters()
+    out = pl.apply_delta(StructureDelta())
+    assert out is pl                       # the SAME plan object
+    assert _counters() == before           # neither applies nor fallbacks
+
+
+def test_over_churn_delta_falls_back_exactly_once(stores):
+    mat = G.banded(128, 4, seed=4)
+    rows, cols = _entries(mat)
+    k = int(mat.nnz * MAX_CHURN) + 1       # one entry past the threshold
+    d = StructureDelta(del_rows=rows[:k], del_cols=cols[:k])
+    pl = plan(SpmvProblem(mat), reorder="rcm", cache=False)
+    applies0, fallbacks0 = _counters()
+    with pytest.raises(DeltaTooLarge):
+        pl.apply_delta(d)
+    applies1, fallbacks1 = _counters()
+    assert fallbacks1 == fallbacks0 + 1    # exactly one fallback
+    assert applies1 == applies0            # and no apply
+
+
+def test_keys_consistent_after_apply_delta(stores):
+    mat = G.banded(128, 4, seed=5)
+    rows, cols = _entries(mat)
+    d = StructureDelta(del_rows=rows[5:9], del_cols=cols[5:9])
+    pl = plan(SpmvProblem(mat), reorder="rcm", cache=False)
+    applies0, _ = _counters()
+    pl2 = pl.apply_delta(d)
+    assert obs.counter("delta.applies").value == applies0 + 1
+    new_mat = d.apply_to(mat)
+    # the delta'd plan carries exactly the edited structure and values
+    assert structure_key(pl2._mat) == structure_key(new_mat)
+    assert values_key(pl2._mat) == values_key(new_mat)
+    assert pl2.key != pl.key               # delta-chained plan key
+    assert tuple(pl2.mat_shape) == tuple(new_mat.shape)
+    assert pl2.mat_nnz == new_mat.nnz
+    # frozen decision survives; the operator built from it is correct
+    assert pl2.scheme == pl.scheme and pl2.tune.engine == pl.tune.engine
+    op = pl2.build(cache=False)
+    x = np.random.default_rng(0).standard_normal(new_mat.shape[1])
+    want = new_mat.to_dense() @ x
+    got = np.asarray(op(x), dtype=np.float64)
+    assert np.abs(got - want).max() <= 1e-3 * max(np.abs(want).max(), 1.0)
+
+
+def test_append_rows_extends_perm_with_identity_tail(stores):
+    mat = G.banded(64, 3, seed=6)
+    # appended entries hug the diagonal so bandwidth stays legal
+    d = StructureDelta(append_rows=2,
+                       add_rows=[64, 65], add_cols=[63, 65],
+                       add_vals=[1.0, 2.0])
+    pl = plan(SpmvProblem(mat), reorder="rcm", cache=False)
+    pl2 = pl.apply_delta(d)
+    assert pl2.mat_shape == (66, 66)       # square grows both dims
+    assert pl2.perm is not None and pl2.perm.size == 66
+    assert list(pl2.perm[-2:]) == [64, 65]
+
+
+def test_sharded_plan_refuses_append(stores):
+    from repro.core.spmv.topology import Topology
+
+    mat = G.banded(128, 4, seed=7)
+    pl = plan(SpmvProblem(mat), reorder="baseline", cache=False,
+              topology=Topology(devices=2), partition="static")
+    d = StructureDelta(append_rows=1, add_rows=[128], add_cols=[0],
+                       add_vals=[1.0])
+    _, fallbacks0 = _counters()
+    with pytest.raises(DeltaTooLarge):
+        pl.apply_delta(d)
+    assert obs.counter("delta.fallbacks").value == fallbacks0 + 1
+    # same-shape deltas ARE accepted on sharded plans
+    rows, cols = _entries(mat)
+    pl2 = pl.apply_delta(StructureDelta(del_rows=rows[:2],
+                                        del_cols=cols[:2]))
+    assert pl2.topology is not None and pl2.mat_nnz == mat.nnz - 2
+
+
+# -- the amortization acceptance ------------------------------------------
+
+def test_gnn_drift_with_deltas_pins_zero_replans(stores):
+    """A drifting gnn stream whose steps are small rewires: with
+    use_deltas the session expresses every structure move as a
+    StructureDelta (replans == 0, deltas == steps - 1) — the cost that
+    had to amortize is GONE, not merely amortized."""
+    from repro.workloads import DynamicSparseProblem, WorkloadSession
+    from repro.workloads.dynamic import run_stream
+
+    prob = DynamicSparseProblem("workload://gnn-m128-deg6-n5-rw0.02",
+                                scenario="drift", seed=0)
+    session = WorkloadSession(prob, use_deltas=True)
+    applies0 = obs.counter("delta.applies").value
+    out = run_stream(prob, session, iters=1, compare_dense=True)
+    assert out["replans"] == 0
+    assert out["plans"] == 1
+    assert out["deltas"] == out["steps"] - 1 > 0
+    assert obs.counter("delta.applies").value >= applies0 + out["deltas"]
+    assert out["verify_ok"]                # delta'd operators stay correct
+    # the un-delta'd session on the SAME stream replans every drift step
+    # (the baseline the router/session amortization is measured against)
+    base = run_stream(prob, WorkloadSession(prob), iters=1,
+                      compare_dense=False)
+    assert base["replans"] == out["steps"] - 1 and base["deltas"] == 0

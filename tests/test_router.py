@@ -1,0 +1,287 @@
+"""Multi-shard serving router (ISSUE 10): placement policies, the
+routing-table ledger, per-device operator accounting + budget
+enforcement, RoutedElsewhere on the plain service, non-stalling
+background shard replans (siblings keep serving), routed delta applies,
+and the 'route' cell-kind variant grammar.
+"""
+import numpy as np
+import pytest
+
+from repro import obs
+from repro.core.spmv import opcache
+from repro.core.spmv.plan import SpmvProblem, plan
+from repro.core.spmv.topology import Topology
+from repro.matrices import generators as G
+from repro.router import (MeshSpec, PLACEMENT_REGISTRY, RoutedSpmvService,
+                          RoutingTable, estimate_nbytes, get_placement,
+                          register_placement)
+from repro.serving.errors import BadRequest, RoutedElsewhere
+from repro.serving.spmv_service import SpmvService
+
+
+@pytest.fixture
+def stores(tmp_path, monkeypatch):
+    monkeypatch.setenv("REPRO_PLAN_CACHE", str(tmp_path / "plans"))
+    monkeypatch.setenv("REPRO_REORDER_CACHE", str(tmp_path / "reorder"))
+    monkeypatch.setenv("REPRO_OPERATOR_CACHE", str(tmp_path / "ops"))
+
+
+def _x(n, seed=0):
+    return np.random.default_rng(seed).standard_normal(n)
+
+
+def _close(got, mat, x):
+    want = mat.to_dense() @ x
+    return np.abs(np.asarray(got, np.float64) - want).max() \
+        <= 1e-3 * max(np.abs(want).max(), 1.0)
+
+
+# -- satellite 1: per-device operator accounting ---------------------------
+
+def test_operator_nbytes_per_device(stores):
+    mat = G.banded(256, 4, seed=0)
+    op1 = plan(SpmvProblem(mat), cache=False).build(cache=False)
+    # non-sharded: the whole operator lives on one device
+    assert opcache.operator_nbytes_per_device(op1) \
+        == [opcache.operator_nbytes(op1)]
+    pl = plan(SpmvProblem(mat), cache=False,
+              topology=Topology(devices=2), partition="static")
+    op = pl.build(cache=False)
+    per = opcache.operator_nbytes_per_device(op)
+    assert len(per) == 2 and all(b > 0 for b in per)
+    # the replicated gather/scatter index maps are charged to EVERY
+    # device, so no device's share can be smaller than they are alone
+    idx_bytes = sum(
+        np.asarray(getattr(op, a)).nbytes
+        for a in ("_in_idx", "_in_idx_r", "_out_idx", "_out_idx_r")
+        if getattr(op, a, None) is not None)
+    assert idx_bytes > 0 and min(per) >= idx_bytes
+
+
+# -- satellite 2: the plain service refuses sharded updates ----------------
+
+def test_routed_elsewhere_hierarchy():
+    assert issubclass(RoutedElsewhere, BadRequest)
+    assert issubclass(RoutedElsewhere, ValueError)   # legacy catch intact
+
+
+def test_plain_service_update_on_sharded_key_raises(stores):
+    mat = G.banded(128, 4, seed=1)
+    with SpmvService(use_kernel="interpret", window_ms=1.0,
+                     topology=Topology(devices=2)) as svc:
+        svc.register("s", mat)
+        assert _close(svc.submit("s", _x(mat.n)).result(timeout=60),
+                      mat, _x(mat.n))                # serving itself works
+        with pytest.raises(RoutedElsewhere):
+            svc.update_values("s", mat.vals * 2.0)
+        with pytest.raises(RoutedElsewhere):
+            svc.update_structure("s", mat=G.banded(128, 5, seed=2))
+
+
+# -- placement policies ----------------------------------------------------
+
+def _loads(meshes):
+    return {m.name: {"keys": 0, "nnz": 0, "est_bytes": 0} for m in meshes}
+
+
+def test_bin_pack_best_fit_prefers_tightest_budget():
+    mat = G.banded(256, 4, seed=3)
+    est = estimate_nbytes(mat)
+    meshes = [MeshSpec("big", Topology(devices=2),
+                       budget_per_device=16 << 20),
+              MeshSpec("tight", Topology(devices=1),
+                       budget_per_device=est + 1024)]
+    table = RoutingTable(meshes, policy="bin_pack")
+    assert table.assign("k0", mat).name == "tight"   # best (smallest) fit
+    assert table.assign("k1", mat).name == "big"     # tight is now full
+
+
+def test_bin_pack_falls_back_to_unbounded_mesh():
+    mat = G.banded(256, 4, seed=3)
+    meshes = [MeshSpec("full", Topology(devices=1), budget_per_device=1),
+              MeshSpec("open", Topology(devices=1))]
+    spec = get_placement("bin_pack")
+    assert spec.fn("k", mat, meshes, _loads(meshes)) == "open"
+
+
+def test_nnz_balance_spreads_equal_meshes():
+    mat = G.banded(256, 4, seed=4)
+    meshes = [MeshSpec("m0", Topology(devices=2)),
+              MeshSpec("m1", Topology(devices=2))]
+    table = RoutingTable(meshes, policy="nnz_balance")
+    got = {table.assign(f"k{i}", mat).name for i in range(2)}
+    assert got == {"m0", "m1"}
+
+
+def test_comm_aware_scores_every_mesh():
+    mat = G.power_law(256, alpha=1.8, seed=5)
+    meshes = [MeshSpec("wide", Topology(devices=4)),
+              MeshSpec("solo", Topology(devices=1))]
+    spec = get_placement("comm_aware")
+    loads = _loads(meshes)
+    first = spec.fn("k", mat, meshes, loads)
+    assert first in {"wide", "solo"}
+    assert spec.fn("k", mat, meshes, loads) == first   # pure in the ledger
+
+
+def test_register_placement_and_registry_errors():
+    name = "always_first_TEST"
+    try:
+        @register_placement(name, "test-only")
+        def always_first(key, mat, meshes, loads):
+            return meshes[0].name
+
+        mat = G.banded(64, 2, seed=6)
+        table = RoutingTable([MeshSpec("a", Topology(devices=1)),
+                              MeshSpec("b", Topology(devices=1))],
+                             policy=name)
+        assert table.assign("k", mat).name == "a"
+        with pytest.raises(ValueError):          # duplicate registration
+            register_placement(name)(always_first)
+    finally:
+        PLACEMENT_REGISTRY.pop(name, None)
+    with pytest.raises(KeyError):
+        get_placement("no_such_policy")
+
+
+def test_routing_table_ledger():
+    mat = G.banded(64, 2, seed=7)
+    meshes = [MeshSpec("a", Topology(devices=1)),
+              MeshSpec("b", Topology(devices=1))]
+    table = RoutingTable(meshes, policy="nnz_balance")
+    spec = table.assign("k", mat, mesh="b")          # explicit pin
+    assert spec.name == "b" and table.mesh_of("k").name == "b"
+    with pytest.raises(ValueError):                  # no silent re-place
+        table.assign("k", mat)
+    with pytest.raises(KeyError):
+        table.assign("k2", mat, mesh="nope")
+    snap = table.snapshot()
+    assert snap["assignments"] == {"k": "b"}
+    assert snap["loads"]["b"]["nnz"] == mat.nnz
+    table.remove("k", mat)
+    assert snap["loads"]["b"]["keys"] == 1           # snapshot is a copy
+    assert table.snapshot()["loads"]["b"] \
+        == {"keys": 0, "nnz": 0, "est_bytes": 0}
+    with pytest.raises(KeyError):
+        table.mesh_of("k")
+    with pytest.raises(ValueError):
+        RoutingTable([], policy="bin_pack")
+    with pytest.raises(ValueError):
+        RoutingTable([meshes[0], meshes[0]])         # duplicate names
+
+
+# -- per-device budgets (tentpole pillar 1) --------------------------------
+
+def test_per_device_budget_bounds_every_device(stores):
+    mats = {"a": G.banded(256, 4, seed=8), "b": G.banded(256, 4, seed=9)}
+    kw = dict(use_kernel="interpret", window_ms=1.0, max_batch=4)
+    with RoutedSpmvService([MeshSpec("m", Topology(devices=2))],
+                           **kw) as rt:
+        rt.register("a", mats["a"])
+        rt.operator("a")
+        need = max(rt.stats()["per_mesh"]["m"]["per_device_bytes"])
+    budget = int(need * 1.5)                 # one operator fits, two don't
+    mesh = MeshSpec("m", Topology(devices=2), budget_per_device=budget)
+    with RoutedSpmvService([mesh], **kw) as rt:
+        for k, m in mats.items():
+            rt.register(k, m)
+        for k in mats:
+            assert _close(rt.submit(k, _x(256)).result(timeout=60),
+                          mats[k], _x(256))
+        st = rt.stats()
+        assert st["evictions"] >= 1          # the LRU had to make room
+        assert st["per_device_ok"]
+        assert all(b <= budget for b
+                   in st["per_mesh"]["m"]["per_device_bytes"])
+        # the evicted key still serves (zero-re-tune reload)
+        for k in mats:
+            assert _close(rt.submit(k, _x(256, 1)).result(timeout=60),
+                          mats[k], _x(256, 1))
+
+
+# -- non-stalling shard replans (pillar 2) + routed deltas (pillar 3) ------
+
+def test_background_replan_keeps_siblings_serving(stores):
+    a, b = G.banded(128, 4, seed=10), G.banded(128, 4, seed=11)
+    b2 = G.banded(128, 6, seed=12)           # new structure for b
+    mesh = MeshSpec("m", Topology(devices=2))
+    with RoutedSpmvService([mesh], use_kernel="interpret",
+                           window_ms=1.0, max_batch=4) as rt:
+        rt.register("a", a, mesh="m")
+        rt.register("b", b, mesh="m")
+        rt.operator("a")
+        rt.operator("b")
+        fut = rt.update_structure("b", mat=b2)
+        # the sibling keeps serving while b replans in the background
+        assert _close(rt.submit("a", _x(128)).result(timeout=60),
+                      a, _x(128))
+        gen = fut.result(timeout=120)
+        assert isinstance(gen, int)
+        st = rt.stats()
+        assert st["replans"] == 1 and st["replan_errors"] == 0
+        # b now serves the NEW structure
+        assert _close(rt.submit("b", _x(128, 2)).result(timeout=60),
+                      b2, _x(128, 2))
+        # and a was never touched
+        assert _close(rt.submit("a", _x(128, 3)).result(timeout=60),
+                      a, _x(128, 3))
+
+
+def test_routed_delta_applies_without_full_replan(stores):
+    from repro.core.spmv.delta import StructureDelta
+
+    mat = G.banded(128, 4, seed=13)
+    rows = np.repeat(np.arange(128, dtype=np.int64),
+                     np.diff(mat.rowptr.astype(np.int64)))
+    d = StructureDelta(del_rows=rows[:3],
+                       del_cols=mat.cols.astype(np.int64)[:3])
+    new_mat = d.apply_to(mat)
+    mesh = MeshSpec("m", Topology(devices=2))
+    with RoutedSpmvService([mesh], use_kernel="interpret",
+                           window_ms=1.0, max_batch=4) as rt:
+        rt.register("k", mat)
+        rt.operator("k")
+        applies0 = obs.counter("delta.applies").value
+        rt.update_structure("k", delta=d).result(timeout=120)
+        assert obs.counter("delta.applies").value == applies0 + 1
+        assert rt.stats()["replans"] == 1
+        assert _close(rt.submit("k", _x(128, 4)).result(timeout=60),
+                      new_mat, _x(128, 4))
+    with pytest.raises(BadRequest):          # exactly one of mat=/delta=
+        rt2 = RoutedSpmvService([MeshSpec("m", Topology(devices=1))],
+                                use_kernel="interpret")
+        try:
+            rt2.register("k", mat)
+            rt2.update_structure("k")
+        finally:
+            rt2.close()
+
+
+def test_unrouted_key_raises(stores):
+    from repro.serving.errors import UnregisteredKey
+
+    with RoutedSpmvService([MeshSpec("m", Topology(devices=1))],
+                           use_kernel="interpret") as rt:
+        with pytest.raises(UnregisteredKey):
+            rt.operator("ghost")
+        with pytest.raises(KeyError):
+            rt.submit("ghost", _x(8))
+
+
+# -- the 'route' cell-kind variant grammar ---------------------------------
+
+def test_route_variant_roundtrips_and_elides_defaults():
+    from repro.experiments.cells import _parse_route_variant, route_variant
+
+    assert route_variant() == "poisson"      # all defaults elided
+    v = route_variant(rate_rps=600, requests=120, n_keys=4,
+                      structure_frac=0.08, devices=4, policy="comm_aware",
+                      budget_mb=2.0, window_ms=1.0)
+    cfg = _parse_route_variant(v)
+    assert cfg["rate_rps"] == 600 and cfg["requests"] == 120
+    assert cfg["n_keys"] == 4 and cfg["structure_frac"] == 0.08
+    assert cfg["devices"] == 4 and cfg["policy"] == "comm_aware"
+    assert cfg["budget_mb"] == 2.0 and cfg["window_ms"] == 1.0
+    assert cfg["meshes"] == 2 and cfg["layout"] == "1d_rows"  # defaults
+    with pytest.raises(ValueError):
+        _parse_route_variant("poisson,q17")
